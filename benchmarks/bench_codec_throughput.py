@@ -1,0 +1,61 @@
+"""Codec throughput: encode/decode µs per model size.
+
+Compares the paths that exist in the system:
+  * python_ref    — the pure-Python CBOR item encoder (oracle)
+  * numpy_ta      — vectorized typed-array payload (np.astype + tobytes)
+  * pallas_f16    — the quantize_f16 kernel path (interpret mode on CPU;
+                    on TPU this is the compiled VMEM-tiled kernel)
+  * q8_kernel     — blockwise int8 compression kernel
+"""
+from __future__ import annotations
+
+import time
+import uuid
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cbor
+from repro.core.messages import FLGlobalModelUpdate, ParamsEncoding
+from repro.kernels.q8_block.ops import compress_update
+from repro.kernels.quantize_f16.ops import params_to_f16_payload
+
+UUID = uuid.UUID(bytes=bytes(range(16)))
+SIZES = [1000, 10_000, 44_426, 1_000_000]
+
+
+def _time(fn, repeats=5) -> float:
+    fn()  # warmup / jit
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def run() -> list[str]:
+    rows = ["path,model_size,us_per_call,derived_MBps"]
+    rng = np.random.default_rng(0)
+    for n in SIZES:
+        flat = rng.standard_normal(n).astype(np.float32)
+        jflat = jnp.asarray(flat)
+        msg = FLGlobalModelUpdate(UUID, 1, flat, True)
+
+        paths = {
+            "python_ref_dynamic": (lambda: cbor.encode(
+                [float(v) for v in flat[: min(n, 10_000)]]),
+                min(n, 10_000) * 4),
+            "numpy_ta_f16": (lambda: msg.to_cbor(ParamsEncoding.TA_F16),
+                             n * 4),
+            "numpy_ta_f32": (lambda: msg.to_cbor(ParamsEncoding.TA_F32),
+                             n * 4),
+            "pallas_f16": (lambda: params_to_f16_payload(jflat), n * 4),
+            "q8_kernel": (lambda: compress_update(jflat), n * 4),
+        }
+        for name, (fn, nbytes) in paths.items():
+            us = _time(fn)
+            rows.append(f"{name},{n},{us:.1f},{nbytes / us:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,65 @@
+"""Paper Table I: message sizes (CBOR best/worst, Protobuf, JSON) for model
+sizes 4 / 1000 / 10000, plus FL_Local_DataSet_Update.
+
+Methodology per §VI-A1: float value 1.0, dataset_size=1, round=1.  Golden
+expectations asserted in tests/test_golden_tables.py; this benchmark prints
+the table and flags the one documented paper typo (20,025 -> 20,027)."""
+from __future__ import annotations
+
+import uuid
+
+import numpy as np
+
+from repro.core.messages import (
+    FLGlobalModelUpdate,
+    FLLocalDataSetUpdate,
+    FLLocalModelUpdate,
+    ModelMetadata,
+    ParamsEncoding,
+)
+
+UUID = uuid.UUID(bytes=bytes(range(16)))
+META = ModelMetadata(1.0, 1.0)
+
+PAPER_TABLE1 = {  # (message, n): (cbor_best, cbor_worst, protobuf, json)
+    ("FL_Local_DataSet_Update", 0): (8, 28, 22, 11),
+    ("FL_Global_Model_Update", 4): (33, 67, 40, 65),
+    ("FL_Global_Model_Update", 1000): (2027, 9033, 4025, 4049),
+    ("FL_Global_Model_Update", 10000): (20025, 90033, 40026, 40049),
+    ("FL_Local_Model_Update", 4): (38, 84, 58, 68),
+    ("FL_Local_Model_Update", 1000): (2032, 9050, 4043, 4052),
+    ("FL_Local_Model_Update", 10000): (20032, 90050, 40044, 40052),
+}
+
+
+def measure(n: int, message: str) -> tuple[int, int, int, int]:
+    params = np.full((n,), 1.0)
+    if message == "FL_Local_DataSet_Update":
+        m = FLLocalDataSetUpdate(1, META)
+        return (len(m.to_cbor()), len(m.to_cbor(worst=True)),
+                len(m.to_protobuf()), len(m.to_json()))
+    cls = (FLGlobalModelUpdate if message == "FL_Global_Model_Update"
+           else FLLocalModelUpdate)
+    if cls is FLGlobalModelUpdate:
+        m = cls(UUID, 1, params, True)
+    else:
+        m = cls(UUID, 1, params, META)
+    return (len(m.to_cbor(ParamsEncoding.TA_F16)),
+            len(m.to_cbor(ParamsEncoding.ARRAY_F64, worst=True)),
+            len(m.to_protobuf()), len(m.to_json()))
+
+
+def run() -> list[str]:
+    rows = ["message,model_size,cbor_best,cbor_worst,protobuf,json,"
+            "paper_match"]
+    for (message, n), paper in PAPER_TABLE1.items():
+        ours = measure(n, message)
+        match = "exact" if ours == paper else \
+            f"paper_typo(paper={paper},ours={ours})"
+        rows.append(f"{message},{n},{ours[0]},{ours[1]},{ours[2]},{ours[3]},"
+                    f"{match}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,34 @@
+# One function per paper table. Prints CSV sections.
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_codec_throughput,
+        bench_fl_round,
+        bench_lenet,
+        bench_message_sizes,
+    )
+
+    sections = [
+        ("table1_message_sizes", bench_message_sizes.run),
+        ("table2_lenet5", bench_lenet.run),
+        ("codec_throughput", bench_codec_throughput.run),
+        ("fl_round_accounting", bench_fl_round.run),
+    ]
+    for name, fn in sections:
+        t0 = time.time()
+        rows = fn()
+        dt = time.time() - t0
+        print(f"## {name} ({dt:.1f}s)")
+        print("\n".join(rows))
+        print()
+    print("## roofline")
+    print("see reports/roofline.json + EXPERIMENTS.md §Roofline "
+          "(derived from the dry-run artifacts, not wall-clock)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.base import ARCH_NAMES, SHAPES, ModelConfig, ShapeConfig, all_configs, get_config
+
+__all__ = ["ARCH_NAMES", "SHAPES", "ModelConfig", "ShapeConfig", "all_configs", "get_config"]

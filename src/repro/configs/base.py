@@ -1,0 +1,158 @@
+"""Config system: model configs, input-shape sets, and the arch registry.
+
+Every assigned architecture is a ``ModelConfig`` in its own module
+(``src/repro/configs/<id>.py``); ``get_config(name)`` resolves them.  Each
+config also provides a ``reduced()`` variant (same family, tiny dims) used by
+the CPU smoke tests — full configs are only ever lowered via the dry-run
+(ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                    # 0 → d_model // num_heads
+    mlp_variant: str = "swiglu"          # swiglu | geglu | gelu
+    norm_type: str = "rmsnorm"           # rmsnorm | layernorm
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    embed_scale: bool = False            # gemma: scale embeddings by sqrt(d)
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_ngroups: int = 1
+    # hybrid (RG-LRU)
+    lru_width: int = 0
+    window_size: int = 0                 # local-attention window
+    block_pattern: tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+    # modality frontends (stubs per assignment)
+    num_codebooks: int = 0               # audio: EnCodec codebooks
+    num_patches: int = 0                 # vlm: precomputed patch embeddings
+    # numerics / compilation
+    param_dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: bool = True
+    fsdp_params: bool = False            # shard params over "data" at rest
+    attn_chunk: int = 1024               # flash kv-chunk size
+    inner_unroll: bool = False           # unroll inner seq scans (roofline unit lowering)
+    train_microbatches: int = 1          # gradient-accumulation microbatches
+    # §Perf: zero-pad attention-head groups up to the TP axis size when the
+    # head count does not divide it (e.g. qwen2's 14 heads on a 16-way axis
+    # replicate the whole attention computation; padding shards it 16-way at
+    # +2 heads of dead compute).  Numerically exact: padded q heads hit
+    # zero rows of the (equally padded) output projection.
+    pad_attn_heads_to_tp: bool = False
+    # which shapes are supported (long_500k only for sub-quadratic archs)
+    sub_quadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def supports(self, shape: "ShapeConfig") -> bool:
+        if shape.name == "long_500k":
+            return self.sub_quadratic
+        return True
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        kw: dict = dict(
+            name=self.name + "-smoke",
+            num_layers=2 if not self.block_pattern else 3,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) or 1,
+            head_dim=16 if self.head_dim else 0,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            scan_layers=self.scan_layers,
+            remat=False,
+            fsdp_params=False,
+            attn_chunk=32,
+        )
+        if self.num_experts:
+            # high capacity factor -> no token drops at smoke scale, so the
+            # decode-vs-forward equivalence check stays exact
+            kw.update(num_experts=4, experts_per_token=2, d_ff=32,
+                      moe_capacity_factor=8.0)
+        if self.family == "ssm":
+            kw.update(ssm_state=16, ssm_head_dim=8, ssm_chunk=16,
+                      num_heads=1, num_kv_heads=1)
+        if self.lru_width:
+            kw.update(lru_width=64, window_size=32,
+                      block_pattern=("rec", "rec", "attn"))
+        if self.num_codebooks:
+            kw.update(num_codebooks=self.num_codebooks)
+        if self.num_patches:
+            kw.update(num_patches=4)
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape: lowers train_step / prefill_step / serve_step."""
+
+    name: str
+    kind: Literal["train", "prefill", "decode"]
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+ARCH_NAMES = [
+    "stablelm_3b",
+    "qwen2_0_5b",
+    "gemma_7b",
+    "qwen3_1_7b",
+    "recurrentgemma_9b",
+    "internvl2_76b",
+    "musicgen_large",
+    "qwen3_moe_30b_a3b",
+    "dbrx_132b",
+    "mamba2_130m",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    """Resolve ``--arch <id>`` (dashes or underscores) to its ModelConfig."""
+    mod_name = name.replace("-", "_").replace(".", "_")
+    module = importlib.import_module(f"repro.configs.{mod_name}")
+    return module.CONFIG
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}

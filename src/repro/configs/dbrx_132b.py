@@ -1,0 +1,14 @@
+"""DBRX-132B [moe] — 40L d_model=6144 48H (GQA kv=8) d_ff(expert)=10752
+vocab=100352, 16 experts top-4, fine-grained. [hf:databricks/dbrx-base;
+unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=10752, vocab_size=100352,
+    mlp_variant="swiglu", norm_type="layernorm", tie_embeddings=False,
+    num_experts=16, experts_per_token=4, fsdp_params=True,
+    rope_theta=500_000.0,
+    train_microbatches=8,
+)

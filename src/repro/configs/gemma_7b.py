@@ -1,0 +1,11 @@
+"""Gemma-7B [dense] — 28L d_model=3072 16H (GQA kv=16) d_ff=24576 vocab=256000.
+GeGLU, head_dim=256, scaled embeddings. [arXiv:2403.08295; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b", family="dense",
+    num_layers=28, d_model=3072, num_heads=16, num_kv_heads=16,
+    d_ff=24576, vocab_size=256000, head_dim=256,
+    mlp_variant="geglu", tie_embeddings=True, embed_scale=True,
+    train_microbatches=4,
+)

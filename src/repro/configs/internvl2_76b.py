@@ -1,0 +1,13 @@
+"""InternVL2-76B [vlm] — 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256. InternViT frontend is a STUB: input_specs() provides
+precomputed patch embeddings. [arXiv:2404.16821; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=28672, vocab_size=128256,
+    mlp_variant="swiglu", tie_embeddings=False,
+    num_patches=256, fsdp_params=True, rope_theta=500_000.0,
+    train_microbatches=16,
+)

@@ -1,0 +1,9 @@
+"""LeNet-5 — the paper's real-world model (Table II): 28x28 valid convs ->
+4x4x16 flatten; 156 + 2416 + 30840 + 10164 + 850 = 44,426 parameters."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="lenet5", family="dense",
+    num_layers=0, d_model=0, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=10,
+)

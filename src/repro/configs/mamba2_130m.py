@@ -1,0 +1,13 @@
+"""Mamba2-130M [ssm] — 24L d_model=768 (attention-free) vocab=50280,
+ssm_state=128, SSD (state-space duality). Sub-quadratic -> runs long_500k.
+[arXiv:2405.21060; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m", family="ssm",
+    num_layers=24, d_model=768, num_heads=1, num_kv_heads=1,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_conv=4, ssm_expand=2, ssm_head_dim=64, ssm_chunk=256,
+    tie_embeddings=True, sub_quadratic=True,
+    train_microbatches=4,
+)

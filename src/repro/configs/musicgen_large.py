@@ -1,0 +1,14 @@
+"""MusicGen-large [audio] — 48L d_model=2048 32H (kv=32) d_ff=8192 vocab=2048.
+Decoder-only over EnCodec tokens, 4 codebooks (delay pattern applied upstream);
+the EnCodec frontend is a STUB: input_specs() provides token frames.
+[arXiv:2306.05284; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=2048,
+    mlp_variant="gelu", norm_type="layernorm", tie_embeddings=False,
+    num_codebooks=4,
+    train_microbatches=2,
+)

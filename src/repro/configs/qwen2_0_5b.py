@@ -1,0 +1,13 @@
+"""Qwen2-0.5B [dense] — 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151936.
+GQA + QKV bias. [arXiv:2407.10671; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", family="dense",
+    num_layers=24, d_model=896, num_heads=14, num_kv_heads=2,
+    d_ff=4864, vocab_size=151936,
+    mlp_variant="swiglu", qkv_bias=True, tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    train_microbatches=2,
+    pad_attn_heads_to_tp=True,  # §Perf H1: 14 heads on a 16-way TP axis
+)

@@ -1,0 +1,12 @@
+"""Qwen3-1.7B [dense] — 28L d_model=2048 16H (GQA kv=8) d_ff=6144 vocab=151936.
+qk-norm, GQA. [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b", family="dense",
+    num_layers=28, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=6144, vocab_size=151936, head_dim=128,
+    mlp_variant="swiglu", qk_norm=True, tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    train_microbatches=2,
+)

@@ -1,0 +1,13 @@
+"""Qwen3-MoE-30B-A3B [moe] — 48L d_model=2048 32H (GQA kv=4) d_ff(expert)=768
+vocab=151936, 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4,
+    d_ff=768, vocab_size=151936, head_dim=128,
+    mlp_variant="swiglu", qk_norm=True, tie_embeddings=False,
+    num_experts=128, experts_per_token=8, rope_theta=1_000_000.0,
+    fsdp_params=True,
+    train_microbatches=8,
+)

@@ -1,0 +1,14 @@
+"""RecurrentGemma-9B [hybrid] — 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000. RG-LRU + local attention, 2 recurrent : 1 attn (Griffin).
+Sub-quadratic -> runs long_500k. [arXiv:2402.19427; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    num_layers=38, d_model=4096, num_heads=16, num_kv_heads=1,
+    d_ff=12288, vocab_size=256000, head_dim=256,
+    mlp_variant="geglu", tie_embeddings=True, embed_scale=True,
+    lru_width=4096, window_size=2048, block_pattern=("rec", "rec", "attn"),
+    sub_quadratic=True,
+    train_microbatches=4,
+)

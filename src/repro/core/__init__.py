@@ -1,0 +1,21 @@
+# The paper's primary contribution: TinyFL CBOR message serialization for
+# federated learning.  RFC 8949 codec, RFC 8746 typed arrays, CDDL schema
+# validation, the three TinyFL message types, and the JSON/Protobuf baselines
+# the paper evaluates against.
+from repro.core import cbor, cddl, messages, typed_arrays
+from repro.core.cbor import Tag, decode, encode
+from repro.core.messages import (
+    FLGlobalModelUpdate,
+    FLLocalDataSetUpdate,
+    FLLocalModelUpdate,
+    FLModelChunk,
+    ModelMetadata,
+    ParamsEncoding,
+)
+
+__all__ = [
+    "cbor", "cddl", "messages", "typed_arrays",
+    "Tag", "decode", "encode",
+    "FLGlobalModelUpdate", "FLLocalDataSetUpdate", "FLLocalModelUpdate",
+    "FLModelChunk", "ModelMetadata", "ParamsEncoding",
+]

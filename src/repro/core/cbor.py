@@ -1,0 +1,382 @@
+"""RFC 8949 CBOR codec, from scratch.
+
+This is the reference ("oracle") implementation of the paper's serialization
+substrate.  It favours clarity and exactness over speed: every encoder makes
+the *shortest* valid encoding (preferred serialization, RFC 8949 §4.1), which
+is what the paper's "CBOR best" numbers assume.  The "CBOR worst" numbers use
+the forced-width helpers (``encode_uint64``/``encode_float64``).
+
+Supported: unsigned/negative integers, byte/text strings, arrays, maps, tags,
+simple values (false/true/null/undefined), half/single/double floats with
+automatic minimal-width selection.  Indefinite-length items are deliberately
+not produced (the paper's messages are all definite-length) but are accepted
+by the decoder for robustness.
+"""
+from __future__ import annotations
+
+import math
+import struct
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator
+
+# ---------------------------------------------------------------------------
+# Major types (RFC 8949 §3.1)
+MT_UINT = 0
+MT_NINT = 1
+MT_BSTR = 2
+MT_TSTR = 3
+MT_ARRAY = 4
+MT_MAP = 5
+MT_TAG = 6
+MT_SIMPLE = 7
+
+# Additional-info codes
+AI_1BYTE = 24
+AI_2BYTE = 25
+AI_4BYTE = 26
+AI_8BYTE = 27
+AI_INDEF = 31
+
+SIMPLE_FALSE = 20
+SIMPLE_TRUE = 21
+SIMPLE_NULL = 22
+SIMPLE_UNDEFINED = 23
+
+BREAK = object()  # sentinel for the indefinite-length terminator
+UNDEFINED = object()  # CBOR 'undefined' simple value
+
+
+@dataclass(frozen=True)
+class Tag:
+    """A CBOR tagged value (major type 6)."""
+
+    tag: int
+    value: Any
+
+
+# ---------------------------------------------------------------------------
+# Encoding
+
+
+def _encode_head(major: int, arg: int) -> bytes:
+    """Encode the initial byte + argument with the shortest form."""
+    if arg < 0:
+        raise ValueError("head argument must be non-negative")
+    mt = major << 5
+    if arg < 24:
+        return bytes([mt | arg])
+    if arg <= 0xFF:
+        return bytes([mt | AI_1BYTE, arg])
+    if arg <= 0xFFFF:
+        return bytes([mt | AI_2BYTE]) + arg.to_bytes(2, "big")
+    if arg <= 0xFFFFFFFF:
+        return bytes([mt | AI_4BYTE]) + arg.to_bytes(4, "big")
+    if arg <= 0xFFFFFFFFFFFFFFFF:
+        return bytes([mt | AI_8BYTE]) + arg.to_bytes(8, "big")
+    raise OverflowError("argument exceeds 64 bits")
+
+
+def head_size(arg: int) -> int:
+    """Number of bytes the head (initial byte + argument) occupies."""
+    if arg < 24:
+        return 1
+    if arg <= 0xFF:
+        return 2
+    if arg <= 0xFFFF:
+        return 3
+    if arg <= 0xFFFFFFFF:
+        return 5
+    return 9
+
+
+def encode_int(value: int) -> bytes:
+    if value >= 0:
+        return _encode_head(MT_UINT, value)
+    return _encode_head(MT_NINT, -1 - value)
+
+
+def encode_uint64(value: int) -> bytes:
+    """Forced 8-byte-argument unsigned int (the paper's CBOR-worst round)."""
+    if value < 0:
+        raise ValueError("uint64 must be non-negative")
+    return bytes([(MT_UINT << 5) | AI_8BYTE]) + value.to_bytes(8, "big")
+
+
+def float_fits_half(value: float) -> bool:
+    if math.isnan(value):
+        return True
+    try:
+        return struct.unpack("<e", struct.pack("<e", value))[0] == value
+    except (OverflowError, struct.error):
+        return False
+
+
+def float_fits_single(value: float) -> bool:
+    if math.isnan(value):
+        return True
+    try:
+        return struct.unpack("<f", struct.pack("<f", value))[0] == value
+    except (OverflowError, struct.error):
+        return False
+
+
+def encode_float16(value: float) -> bytes:
+    return bytes([(MT_SIMPLE << 5) | AI_2BYTE]) + struct.pack(">e", value)
+
+
+def encode_float32(value: float) -> bytes:
+    return bytes([(MT_SIMPLE << 5) | AI_4BYTE]) + struct.pack(">f", value)
+
+
+def encode_float64(value: float) -> bytes:
+    return bytes([(MT_SIMPLE << 5) | AI_8BYTE]) + struct.pack(">d", value)
+
+
+def encode_float(value: float) -> bytes:
+    """Minimal-width float encoding (preferred serialization)."""
+    if math.isnan(value):
+        return b"\xf9\x7e\x00"
+    if float_fits_half(value):
+        return encode_float16(value)
+    if float_fits_single(value):
+        return encode_float32(value)
+    return encode_float64(value)
+
+
+def encode_bool(value: bool) -> bytes:
+    return bytes([(MT_SIMPLE << 5) | (SIMPLE_TRUE if value else SIMPLE_FALSE)])
+
+
+def encode_null() -> bytes:
+    return bytes([(MT_SIMPLE << 5) | SIMPLE_NULL])
+
+
+def encode_bytes(value: bytes) -> bytes:
+    return _encode_head(MT_BSTR, len(value)) + value
+
+
+def encode_text(value: str) -> bytes:
+    raw = value.encode("utf-8")
+    return _encode_head(MT_TSTR, len(raw)) + raw
+
+
+def encode_array_header(length: int) -> bytes:
+    return _encode_head(MT_ARRAY, length)
+
+
+def encode_map_header(length: int) -> bytes:
+    return _encode_head(MT_MAP, length)
+
+
+def encode_tag_header(tag: int) -> bytes:
+    return _encode_head(MT_TAG, tag)
+
+
+def encode(obj: Any, *, float_encoder: Callable[[float], bytes] | None = None) -> bytes:
+    """Encode a Python object into canonical (shortest-form) CBOR.
+
+    ``float_encoder`` overrides the float item encoding (used for the paper's
+    worst-case measurement, where every float is a 9-byte double item).
+    """
+    fenc = float_encoder or encode_float
+    out = bytearray()
+    _encode_into(obj, out, fenc)
+    return bytes(out)
+
+
+def _encode_into(obj: Any, out: bytearray, fenc: Callable[[float], bytes]) -> None:
+    if obj is UNDEFINED:
+        out.append((MT_SIMPLE << 5) | SIMPLE_UNDEFINED)
+    elif obj is None:
+        out += encode_null()
+    elif isinstance(obj, bool):
+        out += encode_bool(obj)
+    elif isinstance(obj, int):
+        out += encode_int(obj)
+    elif isinstance(obj, float):
+        out += fenc(obj)
+    elif isinstance(obj, bytes):
+        out += encode_bytes(obj)
+    elif isinstance(obj, bytearray):
+        out += encode_bytes(bytes(obj))
+    elif isinstance(obj, str):
+        out += encode_text(obj)
+    elif isinstance(obj, Tag):
+        out += encode_tag_header(obj.tag)
+        _encode_into(obj.value, out, fenc)
+    elif isinstance(obj, (list, tuple)):
+        out += encode_array_header(len(obj))
+        for item in obj:
+            _encode_into(item, out, fenc)
+    elif isinstance(obj, dict):
+        out += encode_map_header(len(obj))
+        for k, v in obj.items():
+            _encode_into(k, out, fenc)
+            _encode_into(v, out, fenc)
+    else:
+        raise TypeError(f"cannot CBOR-encode {type(obj)!r}")
+
+
+# ---------------------------------------------------------------------------
+# Decoding
+
+
+class CBORDecodeError(ValueError):
+    pass
+
+
+class _Reader:
+    __slots__ = ("data", "pos")
+
+    def __init__(self, data: bytes) -> None:
+        self.data = data
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > len(self.data):
+            raise CBORDecodeError("truncated CBOR input")
+        chunk = self.data[self.pos : self.pos + n]
+        self.pos += n
+        return chunk
+
+    def byte(self) -> int:
+        return self.take(1)[0]
+
+
+def _read_arg(reader: _Reader, ai: int) -> int | None:
+    if ai < 24:
+        return ai
+    if ai == AI_1BYTE:
+        return reader.byte()
+    if ai == AI_2BYTE:
+        return int.from_bytes(reader.take(2), "big")
+    if ai == AI_4BYTE:
+        return int.from_bytes(reader.take(4), "big")
+    if ai == AI_8BYTE:
+        return int.from_bytes(reader.take(8), "big")
+    if ai == AI_INDEF:
+        return None
+    raise CBORDecodeError(f"reserved additional-info value {ai}")
+
+
+def _decode_item(reader: _Reader) -> Any:
+    ib = reader.byte()
+    major, ai = ib >> 5, ib & 0x1F
+    if major == MT_UINT:
+        arg = _read_arg(reader, ai)
+        if arg is None:
+            raise CBORDecodeError("indefinite-length integer")
+        return arg
+    if major == MT_NINT:
+        arg = _read_arg(reader, ai)
+        if arg is None:
+            raise CBORDecodeError("indefinite-length integer")
+        return -1 - arg
+    if major == MT_BSTR or major == MT_TSTR:
+        arg = _read_arg(reader, ai)
+        if arg is None:  # indefinite-length string: concatenate chunks
+            chunks = []
+            while True:
+                item = _decode_item(reader)
+                if item is BREAK:
+                    break
+                chunks.append(item)
+            joined = b"".join(chunks) if major == MT_BSTR else "".join(chunks)
+            return joined
+        raw = reader.take(arg)
+        return raw if major == MT_BSTR else raw.decode("utf-8")
+    if major == MT_ARRAY:
+        arg = _read_arg(reader, ai)
+        items = []
+        if arg is None:
+            while True:
+                item = _decode_item(reader)
+                if item is BREAK:
+                    break
+                items.append(item)
+        else:
+            for _ in range(arg):
+                items.append(_decode_item(reader))
+        return items
+    if major == MT_MAP:
+        arg = _read_arg(reader, ai)
+        result: dict[Any, Any] = {}
+
+        def insert(key: Any) -> None:
+            value = _decode_item(reader)
+            try:
+                result[key] = value
+            except TypeError as exc:  # array/map keys: valid CBOR, no
+                raise CBORDecodeError(   # Python representation
+                    f"unhashable map key of type {type(key).__name__}"
+                ) from exc
+
+        if arg is None:
+            while True:
+                key = _decode_item(reader)
+                if key is BREAK:
+                    break
+                insert(key)
+        else:
+            for _ in range(arg):
+                insert(_decode_item(reader))
+        return result
+    if major == MT_TAG:
+        arg = _read_arg(reader, ai)
+        if arg is None:
+            raise CBORDecodeError("indefinite-length tag")
+        return Tag(arg, _decode_item(reader))
+    # major == MT_SIMPLE
+    if ai == SIMPLE_FALSE:
+        return False
+    if ai == SIMPLE_TRUE:
+        return True
+    if ai == SIMPLE_NULL:
+        return None
+    if ai == SIMPLE_UNDEFINED:
+        return UNDEFINED
+    if ai == AI_1BYTE:
+        val = reader.byte()
+        if val < 32:
+            raise CBORDecodeError("invalid two-byte simple value")
+        return val
+    if ai == AI_2BYTE:
+        return struct.unpack(">e", reader.take(2))[0]
+    if ai == AI_4BYTE:
+        return struct.unpack(">f", reader.take(4))[0]
+    if ai == AI_8BYTE:
+        return struct.unpack(">d", reader.take(8))[0]
+    if ai == AI_INDEF:
+        return BREAK
+    if ai < 24:
+        return ai  # unassigned simple value
+    raise CBORDecodeError(f"invalid simple/float additional info {ai}")
+
+
+def decode(data: bytes) -> Any:
+    """Decode a single CBOR data item; raises if trailing bytes remain."""
+    reader = _Reader(data)
+    item = _decode_item(reader)
+    if item is BREAK:
+        raise CBORDecodeError("unexpected break code")
+    if reader.pos != len(data):
+        raise CBORDecodeError(f"{len(data) - reader.pos} trailing bytes")
+    return item
+
+
+def decode_prefix(data: bytes) -> tuple[Any, int]:
+    """Decode one item, returning (item, bytes_consumed) — for CBOR sequences."""
+    reader = _Reader(data)
+    item = _decode_item(reader)
+    if item is BREAK:
+        raise CBORDecodeError("unexpected break code")
+    return item, reader.pos
+
+
+def iter_sequence(data: bytes) -> Iterator[Any]:
+    """Iterate items of an RFC 8742 CBOR sequence."""
+    pos = 0
+    while pos < len(data):
+        item, used = decode_prefix(data[pos:])
+        pos += used
+        yield item

@@ -1,0 +1,228 @@
+"""A small CDDL (RFC 8610) validation core for the TinyFL message schemas.
+
+Rather than a full CDDL text parser, schemas are composed from validator
+combinators mirroring CDDL semantics: type choices (``/``), groups spliced
+into arrays, optional members (``?``), one-or-more (``+``) and tagged types
+(``#6.N``).  The three paper schemas (Listings 1-3) are defined at the bottom
+and are used by tests and the FL runtime to validate every message on the
+wire — the machine-checkable contract the paper specifies in CDDL.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+from repro.core.cbor import Tag
+from repro.core.typed_arrays import (
+    TAG_BF16LE,
+    TAG_F16LE,
+    TAG_F32LE,
+    TAG_F64LE,
+    TAG_UUID,
+)
+
+
+class CDDLValidationError(ValueError):
+    pass
+
+
+class Node:
+    """Base validator node: ``consume(items, i) -> new_i`` for group matching,
+    ``check(value)`` for single-value matching."""
+
+    def check(self, value: Any) -> None:
+        raise NotImplementedError
+
+    def consume(self, items: Sequence[Any], i: int) -> int:
+        if i >= len(items):
+            raise CDDLValidationError(f"expected {self!r}, array exhausted")
+        self.check(items[i])
+        return i + 1
+
+
+@dataclass
+class Uint(Node):
+    def check(self, value: Any) -> None:
+        if not isinstance(value, int) or isinstance(value, bool) or value < 0:
+            raise CDDLValidationError(f"expected uint, got {value!r}")
+
+
+@dataclass
+class Float(Node):
+    def check(self, value: Any) -> None:
+        if not isinstance(value, float):
+            raise CDDLValidationError(f"expected float, got {value!r}")
+
+
+@dataclass
+class Bool(Node):
+    def check(self, value: Any) -> None:
+        if not isinstance(value, bool):
+            raise CDDLValidationError(f"expected bool, got {value!r}")
+
+
+@dataclass
+class Bstr(Node):
+    length: int | None = None
+
+    def check(self, value: Any) -> None:
+        if not isinstance(value, (bytes, bytearray)):
+            raise CDDLValidationError(f"expected bstr, got {type(value)!r}")
+        if self.length is not None and len(value) != self.length:
+            raise CDDLValidationError(
+                f"expected {self.length}-byte bstr, got {len(value)}")
+
+
+@dataclass
+class Tagged(Node):
+    """#6.<tag>(<inner>)"""
+
+    tag: int
+    inner: Node
+
+    def check(self, value: Any) -> None:
+        if not isinstance(value, Tag) or value.tag != self.tag:
+            raise CDDLValidationError(f"expected tag {self.tag}, got {value!r}")
+        self.inner.check(value.value)
+
+
+@dataclass
+class Choice(Node):
+    """Type choice: a / b / c"""
+
+    options: Sequence[Node]
+
+    def check(self, value: Any) -> None:
+        errors = []
+        for opt in self.options:
+            try:
+                opt.check(value)
+                return
+            except CDDLValidationError as exc:
+                errors.append(str(exc))
+        raise CDDLValidationError("no choice matched: " + "; ".join(errors))
+
+
+@dataclass
+class OneOrMore(Node):
+    """[+ inner] element repetition inside an array."""
+
+    inner: Node
+
+    def consume(self, items: Sequence[Any], i: int) -> int:
+        if i >= len(items):
+            raise CDDLValidationError("expected at least one element")
+        count = 0
+        while i < len(items):
+            try:
+                i = self.inner.consume(items, i)
+                count += 1
+            except CDDLValidationError:
+                break
+        if count == 0:
+            raise CDDLValidationError("expected at least one matching element")
+        return i
+
+
+@dataclass
+class Group(Node):
+    """A parenthesized group — spliced into the enclosing array."""
+
+    members: Sequence[Node]
+
+    def consume(self, items: Sequence[Any], i: int) -> int:
+        for member in self.members:
+            i = member.consume(items, i)
+        return i
+
+    def check(self, value: Any) -> None:
+        raise CDDLValidationError("a group cannot match a single value")
+
+
+@dataclass
+class Optional_(Node):
+    """? member — optionally consumes."""
+
+    inner: Node
+
+    def consume(self, items: Sequence[Any], i: int) -> int:
+        if i >= len(items):
+            return i
+        try:
+            return self.inner.consume(items, i)
+        except CDDLValidationError:
+            return i
+
+
+@dataclass
+class ArrayOf(Node):
+    """[...] with an ordered member list (members may be groups/optionals)."""
+
+    members: Sequence[Node]
+
+    def check(self, value: Any) -> None:
+        if not isinstance(value, list):
+            raise CDDLValidationError(f"expected array, got {type(value)!r}")
+        i = 0
+        for member in self.members:
+            i = member.consume(value, i)
+        if i != len(value):
+            raise CDDLValidationError(f"{len(value) - i} unmatched array elements")
+
+
+def validate(value: Any, schema: Node) -> None:
+    """Raise CDDLValidationError if ``value`` does not match ``schema``."""
+    schema.check(value)
+
+
+# ---------------------------------------------------------------------------
+# TinyFL schemas (paper Listings 1-3).  TA_BF16LE added as a beyond-paper
+# extension choice; remove it from the choice list for strict paper mode.
+
+fl_model_identifier = Tagged(TAG_UUID, Bstr(16))
+fl_model_round = Uint()
+
+_typed_array_choices = [Tagged(t, Bstr()) for t in
+                        (TAG_F16LE, TAG_F32LE, TAG_F64LE, TAG_BF16LE)]
+# beyond-paper: #6.0x10002([block-size, count, ta-sint8, ta-float32le])
+_q8_choice = Tagged(0x10002, ArrayOf([Uint(), Uint(), Tagged(72, Bstr()),
+                                      Tagged(85, Bstr())]))
+fl_model_params = Choice([ArrayOf([OneOrMore(Float())]),
+                          *_typed_array_choices, _q8_choice])
+
+fl_model_metadata = Group([Float(), Float()])  # (train-loss, val-loss)
+
+FL_GLOBAL_MODEL_UPDATE = ArrayOf([
+    fl_model_identifier,
+    fl_model_round,
+    fl_model_params,
+    Bool(),
+])
+
+FL_LOCAL_DATASET_UPDATE = ArrayOf([
+    Uint(),                      # fl-local-dataset-size
+    Optional_(fl_model_metadata),
+])
+
+FL_LOCAL_MODEL_UPDATE = ArrayOf([
+    fl_model_identifier,
+    fl_model_round,
+    fl_model_params,
+    fl_model_metadata,
+])
+
+FL_MODEL_CHUNK = ArrayOf([       # beyond-paper extension (DESIGN.md §9.1)
+    fl_model_identifier,
+    fl_model_round,
+    Uint(),                      # chunk-index
+    Uint(),                      # num-chunks
+    Uint(),                      # crc32
+    fl_model_params,
+])
+
+SCHEMAS: dict[str, Node] = {
+    "FL_Global_Model_Update": FL_GLOBAL_MODEL_UPDATE,
+    "FL_Local_DataSet_Update": FL_LOCAL_DATASET_UPDATE,
+    "FL_Local_Model_Update": FL_LOCAL_MODEL_UPDATE,
+    "FL_Model_Chunk": FL_MODEL_CHUNK,
+}

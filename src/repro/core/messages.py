@@ -1,0 +1,401 @@
+"""TinyFL message types (paper §V-A, Listings 1-3) with all evaluated encodings.
+
+Three messages, reproduced exactly as the paper's CDDL defines them:
+
+    FL_Global_Model_Update  = [fl-model-identifier, fl-model-round,
+                               fl-model-params, fl-continue-training: bool]
+    FL_Local_DataSet_Update = [fl-local-dataset-size: uint, ?fl-model-metadata]
+    FL_Local_Model_Update   = [fl-model-identifier, fl-model-round,
+                               fl-model-params, fl-model-metadata]
+
+    fl-model-identifier = #6.37(bstr)          ; UUID tagged byte string
+    fl-model-metadata   = (train-loss: float, val-loss: float)   ; group, spliced
+    fl-model-params     = [+ float] / ta-float16le / ta-float32le / ta-float64le
+
+Each message encodes as:
+  * CBOR (the paper's proposal) — "best" (minimal-width ints/floats, typed-array
+    payloads) and "worst" (8-byte int arguments, per-item double floats, plain
+    float array) per the paper's Table I methodology;
+  * minified JSON (UUID as the canonical 36-char string) — the vanilla baseline;
+  * Protocol Buffers wire format (hand-rolled; uuid = bytes field, round =
+    varint, params = packed float32, metadata = nested message of doubles) —
+    reproduces the paper's Protobuf column byte-for-byte.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import uuid as uuid_module
+from dataclasses import dataclass
+from enum import Enum
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import cbor
+from repro.core.cbor import Tag
+from repro.core.typed_arrays import (
+    TAG_BF16LE,
+    TAG_F16LE,
+    TAG_F32LE,
+    TAG_F64LE,
+    TAG_UUID,
+    decode_typed_array,
+    encode_typed_array,
+    encode_typed_array_from_payload,
+    is_typed_array,
+)
+
+
+class ParamsEncoding(Enum):
+    """How ``fl-model-params`` is serialized (paper §V-A1)."""
+
+    TA_F16 = "ta-float16le"      # typed array, half floats  (paper's best case)
+    TA_F32 = "ta-float32le"      # typed array, single floats
+    TA_F64 = "ta-float64le"      # typed array, double floats
+    TA_BF16 = "ta-bfloat16le"    # beyond-paper TPU-native payload
+    Q8 = "q8-block"              # beyond-paper blockwise int8 (paper §VII)
+    DYNAMIC = "dynamic"          # [+ float] with per-value minimal width
+    ARRAY_F64 = "array-float64"  # [+ float] forced doubles (paper's worst case)
+
+
+_TA_TAGS = {
+    ParamsEncoding.TA_F16: TAG_F16LE,
+    ParamsEncoding.TA_F32: TAG_F32LE,
+    ParamsEncoding.TA_F64: TAG_F64LE,
+    ParamsEncoding.TA_BF16: TAG_BF16LE,
+}
+_TA_DTYPES = {
+    ParamsEncoding.TA_F16: np.float16,
+    ParamsEncoding.TA_F32: np.float32,
+    ParamsEncoding.TA_F64: np.float64,
+}
+
+
+def _encode_params(params: np.ndarray, encoding: ParamsEncoding,
+                   payload: bytes | None = None) -> object:
+    """Build the CBOR object for fl-model-params."""
+    if encoding in _TA_TAGS:
+        if payload is not None:  # pre-quantized bytes (Pallas kernel output)
+            return _RawItem(encode_typed_array_from_payload(payload, _TA_TAGS[encoding]))
+        if encoding is ParamsEncoding.TA_BF16:
+            bits = _f32_to_bf16_bits(np.asarray(params, dtype=np.float32))
+            return _RawItem(encode_typed_array(bits, tag=TAG_BF16LE))
+        arr = np.asarray(params, dtype=_TA_DTYPES[encoding]).reshape(-1)
+        return _RawItem(encode_typed_array(arr))
+    if encoding is ParamsEncoding.Q8:
+        from repro.core.params_codec import encode_q8
+        item, _ = encode_q8(np.asarray(params, dtype=np.float32).reshape(-1))
+        return _RawItem(item)
+    if encoding is ParamsEncoding.DYNAMIC:
+        return [float(v) for v in np.asarray(params).reshape(-1)]
+    if encoding is ParamsEncoding.ARRAY_F64:
+        return [float(v) for v in np.asarray(params).reshape(-1)]
+    raise ValueError(encoding)
+
+
+def _f32_to_bf16_bits(arr: np.ndarray) -> np.ndarray:
+    """Round-to-nearest-even truncation of f32 to bf16 bit patterns."""
+    bits = arr.astype("<f4").view("<u4")
+    rounding = 0x7FFF + ((bits >> 16) & 1)
+    return ((bits + rounding) >> 16).astype("<u2")
+
+
+def bf16_bits_to_f32(bits: np.ndarray) -> np.ndarray:
+    return (bits.astype("<u4") << 16).view("<f4")
+
+
+@dataclass(frozen=True)
+class _RawItem:
+    """Pre-encoded CBOR bytes spliced verbatim into a parent container."""
+
+    raw: bytes
+
+
+def _encode_obj(obj: object, *, worst: bool = False) -> bytes:
+    """cbor.encode with _RawItem splicing and optional worst-case widths."""
+    if isinstance(obj, _RawItem):
+        return obj.raw
+    if isinstance(obj, (list, tuple)):
+        body = b"".join(_encode_obj(v, worst=worst) for v in obj)
+        return cbor.encode_array_header(len(obj)) + body
+    if isinstance(obj, Tag):
+        return cbor.encode_tag_header(obj.tag) + _encode_obj(obj.value, worst=worst)
+    if worst:
+        if isinstance(obj, bool):
+            return cbor.encode_bool(obj)
+        if isinstance(obj, int):
+            return cbor.encode_uint64(obj)
+        if isinstance(obj, float):
+            return cbor.encode_float64(obj)
+    return cbor.encode(obj)
+
+
+def params_from_cbor(item: object) -> np.ndarray:
+    """Decode fl-model-params (typed array, q8, or float array) to f64."""
+    if is_typed_array(item):
+        arr = decode_typed_array(item)  # type: ignore[arg-type]
+        if item.tag == TAG_BF16LE:  # type: ignore[union-attr]
+            return bf16_bits_to_f32(arr).astype(np.float64)
+        return arr.astype(np.float64)
+    if isinstance(item, Tag):
+        from repro.core.params_codec import TAG_Q8_BLOCK, decode_q8
+        if item.tag == TAG_Q8_BLOCK:
+            return decode_q8(item).astype(np.float64)
+    if isinstance(item, list):
+        return np.asarray([float(v) for v in item], dtype=np.float64)
+    raise TypeError(f"not a valid fl-model-params item: {type(item)!r}")
+
+
+# ---------------------------------------------------------------------------
+# Protobuf wire-format helpers (hand-rolled; no dependency)
+
+def _varint(value: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = value & 0x7F
+        value >>= 7
+        if value:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def _pb_key(field: int, wire_type: int) -> bytes:
+    return _varint((field << 3) | wire_type)
+
+
+def _pb_bytes(field: int, data: bytes) -> bytes:
+    return _pb_key(field, 2) + _varint(len(data)) + data
+
+
+def _pb_varint(field: int, value: int) -> bytes:
+    return _pb_key(field, 0) + _varint(value)
+
+
+def _pb_double(field: int, value: float) -> bytes:
+    return _pb_key(field, 1) + struct.pack("<d", value)
+
+
+def _pb_packed_floats(field: int, params: np.ndarray) -> bytes:
+    payload = np.asarray(params, dtype="<f4").reshape(-1).tobytes()
+    return _pb_bytes(field, payload)
+
+
+def _pb_metadata(train_loss: float, val_loss: float) -> bytes:
+    return _pb_double(1, train_loss) + _pb_double(2, val_loss)
+
+
+# ---------------------------------------------------------------------------
+# Messages
+
+
+@dataclass(frozen=True)
+class ModelMetadata:
+    """fl-model-metadata group: (train-loss, val-loss)."""
+
+    train_loss: float
+    val_loss: float
+
+
+@dataclass
+class FLGlobalModelUpdate:
+    """Listing 1: server → clients, new global model for a round."""
+
+    model_id: uuid_module.UUID
+    round: int
+    params: np.ndarray
+    continue_training: bool
+
+    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16, *,
+                worst: bool = False, params_payload: bytes | None = None) -> bytes:
+        obj = [
+            Tag(TAG_UUID, self.model_id.bytes),
+            int(self.round),
+            _encode_params(self.params, encoding, params_payload),
+            bool(self.continue_training),
+        ]
+        return _encode_obj(obj, worst=worst)
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLGlobalModelUpdate":
+        item = cbor.decode(data)
+        _expect_array(item, 4, "FL_Global_Model_Update")
+        ident, rnd, params, cont = item
+        return cls(
+            model_id=_decode_uuid(ident),
+            round=_expect_uint(rnd, "fl-model-round"),
+            params=params_from_cbor(params),
+            continue_training=_expect_bool(cont, "fl-continue-training"),
+        )
+
+    def to_json(self) -> bytes:
+        obj = [str(self.model_id), int(self.round),
+               [float(v) for v in np.asarray(self.params).reshape(-1)],
+               bool(self.continue_training)]
+        return json.dumps(obj, separators=(",", ":")).encode()
+
+    def to_protobuf(self) -> bytes:
+        return (
+            _pb_bytes(1, self.model_id.bytes)
+            + _pb_varint(2, int(self.round))
+            + _pb_packed_floats(3, self.params)
+            + _pb_varint(4, 1 if self.continue_training else 0)
+        )
+
+
+@dataclass
+class FLLocalDataSetUpdate:
+    """Listing 2: client → server training-progress notification (observe)."""
+
+    dataset_size: int
+    metadata: ModelMetadata | None = None
+
+    def to_cbor(self, *, worst: bool = False) -> bytes:
+        obj: list = [int(self.dataset_size)]
+        if self.metadata is not None:  # group: spliced, not nested
+            obj += [float(self.metadata.train_loss), float(self.metadata.val_loss)]
+        return _encode_obj(obj, worst=worst)
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLLocalDataSetUpdate":
+        item = cbor.decode(data)
+        if not isinstance(item, list) or len(item) not in (1, 3):
+            raise ValueError("FL_Local_DataSet_Update must be [size] or [size, tl, vl]")
+        meta = None
+        if len(item) == 3:
+            meta = ModelMetadata(float(item[1]), float(item[2]))
+        return cls(dataset_size=_expect_uint(item[0], "fl-local-dataset-size"),
+                   metadata=meta)
+
+    def to_json(self) -> bytes:
+        obj: list = [int(self.dataset_size)]
+        if self.metadata is not None:
+            obj += [float(self.metadata.train_loss), float(self.metadata.val_loss)]
+        return json.dumps(obj, separators=(",", ":")).encode()
+
+    def to_protobuf(self) -> bytes:
+        out = _pb_varint(1, int(self.dataset_size))
+        if self.metadata is not None:
+            out += _pb_bytes(2, _pb_metadata(self.metadata.train_loss,
+                                             self.metadata.val_loss))
+        return out
+
+
+@dataclass
+class FLLocalModelUpdate:
+    """Listing 3: client → server locally-trained model."""
+
+    model_id: uuid_module.UUID
+    round: int
+    params: np.ndarray
+    metadata: ModelMetadata
+
+    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16, *,
+                worst: bool = False, params_payload: bytes | None = None) -> bytes:
+        obj = [
+            Tag(TAG_UUID, self.model_id.bytes),
+            int(self.round),
+            _encode_params(self.params, encoding, params_payload),
+            float(self.metadata.train_loss),
+            float(self.metadata.val_loss),
+        ]
+        return _encode_obj(obj, worst=worst)
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLLocalModelUpdate":
+        item = cbor.decode(data)
+        _expect_array(item, 5, "FL_Local_Model_Update")
+        ident, rnd, params, tl, vl = item
+        return cls(
+            model_id=_decode_uuid(ident),
+            round=_expect_uint(rnd, "fl-model-round"),
+            params=params_from_cbor(params),
+            metadata=ModelMetadata(float(tl), float(vl)),
+        )
+
+    def to_json(self) -> bytes:
+        obj = [str(self.model_id), int(self.round),
+               [float(v) for v in np.asarray(self.params).reshape(-1)],
+               float(self.metadata.train_loss), float(self.metadata.val_loss)]
+        return json.dumps(obj, separators=(",", ":")).encode()
+
+    def to_protobuf(self) -> bytes:
+        return (
+            _pb_bytes(1, self.model_id.bytes)
+            + _pb_varint(2, int(self.round))
+            + _pb_packed_floats(3, self.params)
+            + _pb_bytes(4, _pb_metadata(self.metadata.train_loss,
+                                        self.metadata.val_loss))
+        )
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper extension: chunked model transfer for datacenter-scale models.
+
+
+@dataclass
+class FLModelChunk:
+    """Extension message (DESIGN.md §9.1): one chunk of a huge model.
+
+    [model-uuid, round, chunk-index: uint, num-chunks: uint, crc32: uint,
+     chunk-params]
+    """
+
+    model_id: uuid_module.UUID
+    round: int
+    chunk_index: int
+    num_chunks: int
+    crc32: int
+    params: np.ndarray
+
+    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F32, *,
+                params_payload: bytes | None = None) -> bytes:
+        obj = [
+            Tag(TAG_UUID, self.model_id.bytes),
+            int(self.round),
+            int(self.chunk_index),
+            int(self.num_chunks),
+            int(self.crc32),
+            _encode_params(self.params, encoding, params_payload),
+        ]
+        return _encode_obj(obj)
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLModelChunk":
+        item = cbor.decode(data)
+        _expect_array(item, 6, "FL_Model_Chunk")
+        ident, rnd, idx, total, crc, params = item
+        return cls(_decode_uuid(ident), _expect_uint(rnd, "round"),
+                   _expect_uint(idx, "chunk-index"), _expect_uint(total, "num-chunks"),
+                   _expect_uint(crc, "crc32"), params_from_cbor(params))
+
+
+# ---------------------------------------------------------------------------
+# Decode helpers
+
+
+def _expect_array(item: object, length: int, name: str) -> None:
+    if not isinstance(item, list) or len(item) != length:
+        raise ValueError(f"{name} must be a {length}-element array")
+
+
+def _expect_uint(item: object, name: str) -> int:
+    if not isinstance(item, int) or isinstance(item, bool) or item < 0:
+        raise ValueError(f"{name} must be a uint")
+    return item
+
+
+def _expect_bool(item: object, name: str) -> bool:
+    if not isinstance(item, bool):
+        raise ValueError(f"{name} must be a bool")
+    return item
+
+
+def _decode_uuid(item: object) -> uuid_module.UUID:
+    if not isinstance(item, Tag) or item.tag != TAG_UUID:
+        raise ValueError("fl-model-identifier must be #6.37(bstr)")
+    if not isinstance(item.value, (bytes, bytearray)) or len(item.value) != 16:
+        raise ValueError("UUID must be a 16-byte string")
+    return uuid_module.UUID(bytes=bytes(item.value))

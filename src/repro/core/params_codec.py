@@ -1,0 +1,160 @@
+"""Model-pytree <-> TinyFL payload codec.
+
+The paper serializes "the model" as a flat list of floats (§V-A1).  This
+module provides the flattening contract plus the encodings evaluated in the
+paper (dynamic CBOR floats, f16/f32/f64 typed arrays) and two beyond-paper
+compressed update paths used by the datacenter FL/distribution layer:
+
+  * blockwise int8 quantization (per-block absmax scale) with error feedback;
+  * delta encoding against a base round (send param - base, which quantizes
+    much better than raw weights once training converges).
+
+All compressed payloads remain valid TinyFL `fl-model-params` items (typed
+arrays / CBOR structures validated by core/cddl.py), so a paper-faithful
+decoder interoperates with the uncompressed paths.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core import cbor
+from repro.core.cbor import Tag
+from repro.core.typed_arrays import (
+    TAG_SINT8,
+    decode_typed_array,
+    encode_typed_array,
+)
+
+Pytree = Any
+
+TAG_Q8_BLOCK = 0x10002  # FCFS ext: [block_size, count, ta-sint8, ta-f32 scales]
+
+
+@dataclass(frozen=True)
+class ParamsSpec:
+    """Structure needed to rebuild a pytree from a flat vector."""
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[str, ...]
+
+    @property
+    def total(self) -> int:
+        return sum(int(np.prod(s)) for s in self.shapes)
+
+
+def flatten_params(params: Pytree) -> tuple[np.ndarray, ParamsSpec]:
+    leaves, treedef = jax.tree.flatten(params)
+    arrs = [np.asarray(l) for l in leaves]
+    flat = np.concatenate([a.reshape(-1).astype(np.float32) for a in arrs])
+    spec = ParamsSpec(treedef, tuple(a.shape for a in arrs),
+                      tuple(str(a.dtype) for a in arrs))
+    return flat, spec
+
+
+def unflatten_params(flat: np.ndarray, spec: ParamsSpec) -> Pytree:
+    out, pos = [], 0
+    for shape, dtype in zip(spec.shapes, spec.dtypes):
+        n = int(np.prod(shape))
+        out.append(flat[pos:pos + n].reshape(shape).astype(dtype))
+        pos += n
+    if pos != flat.size:
+        raise ValueError(f"flat vector has {flat.size - pos} extra values")
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 quantization (+ error feedback)
+
+
+def quantize_q8(flat: np.ndarray, block: int = 256):
+    """-> (int8 values, f32 per-block scales, dequantized reconstruction)."""
+    n = flat.size
+    pad = (-n) % block
+    padded = np.pad(flat.astype(np.float32), (0, pad))
+    blocks = padded.reshape(-1, block)
+    scales = np.abs(blocks).max(axis=1) / 127.0
+    scales = np.where(scales == 0, 1.0, scales).astype(np.float32)
+    q = np.clip(np.round(blocks / scales[:, None]), -127, 127).astype(np.int8)
+    deq = (q.astype(np.float32) * scales[:, None]).reshape(-1)[:n]
+    return q.reshape(-1), scales, deq
+
+
+def encode_q8(flat: np.ndarray, block: int = 256) -> tuple[bytes, np.ndarray]:
+    """CBOR item: #6.TAG_Q8_BLOCK([block, count, ta-sint8, ta-f32]).
+    Returns (encoded bytes, quantization error for error feedback)."""
+    q, scales, deq = quantize_q8(flat, block)
+    item = (cbor.encode_tag_header(TAG_Q8_BLOCK)
+            + cbor.encode_array_header(4)
+            + cbor.encode(block)
+            + cbor.encode(int(flat.size))
+            + encode_typed_array(q)
+            + encode_typed_array(scales))
+    return item, flat - deq
+
+
+def decode_q8(item: Tag, total: int | None = None) -> np.ndarray:
+    if not isinstance(item, Tag) or item.tag != TAG_Q8_BLOCK:
+        raise TypeError("not a q8 payload")
+    block, count, q_ta, s_ta = item.value
+    q = decode_typed_array(q_ta).astype(np.float32).reshape(-1, block)
+    scales = decode_typed_array(s_ta).astype(np.float32)
+    return (q * scales[:, None]).reshape(-1)[:total if total is not None
+                                             else count]
+
+
+@dataclass
+class ErrorFeedback:
+    """Residual accumulator: the quantization error of round t is added back
+    before quantizing round t+1 (keeps compressed FL/SGD convergent)."""
+
+    residual: np.ndarray | None = None
+
+    def compensate(self, flat: np.ndarray) -> np.ndarray:
+        if self.residual is None:
+            return flat
+        return flat + self.residual
+
+    def update(self, error: np.ndarray) -> None:
+        self.residual = error
+
+
+# ---------------------------------------------------------------------------
+# Delta encoding
+
+
+def delta_encode(flat: np.ndarray, base: np.ndarray) -> np.ndarray:
+    return flat - base
+
+
+def delta_decode(delta: np.ndarray, base: np.ndarray) -> np.ndarray:
+    return base + delta
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification (beyond-paper; CBOR map {indices: ta-u32, values: ta-f16})
+
+
+def encode_topk(flat: np.ndarray, k: int) -> tuple[bytes, np.ndarray]:
+    idx = np.argpartition(np.abs(flat), -k)[-k:].astype(np.uint32)
+    idx.sort()
+    vals = flat[idx].astype(np.float16)
+    item = (cbor.encode_array_header(3)
+            + cbor.encode(int(flat.size))
+            + encode_typed_array(idx)
+            + encode_typed_array(vals))
+    dense = np.zeros_like(flat)
+    dense[idx] = vals.astype(np.float32)
+    return item, flat - dense
+
+
+def decode_topk(item: list) -> np.ndarray:
+    total, idx_ta, val_ta = item
+    out = np.zeros(int(total), np.float32)
+    idx = decode_typed_array(idx_ta)
+    out[idx] = decode_typed_array(val_ta).astype(np.float32)
+    return out

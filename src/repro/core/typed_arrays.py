@@ -1,0 +1,103 @@
+"""RFC 8746 CBOR typed arrays.
+
+The paper's "CBOR best" encoding serializes the model parameter list as a
+homogeneous typed array: a byte string of concatenated little-endian values,
+wrapped in a tag identifying element type/width/endianness.  Tags used here
+(RFC 8746 §2):
+
+    64  uint8            72  sint8
+    69  uint16 LE        77  sint16 LE
+    70  uint32 LE        78  sint32 LE
+    71  uint64 LE        79  sint64 LE
+    84  float16 LE       85  float32 LE       86  float64 LE
+
+bfloat16 has no IANA-registered typed-array tag; we allocate one from the
+first-come-first-served space (``TAG_BF16LE = 0x10001``) for the TPU-native
+beyond-paper payload path.  This is an extension and is excluded from the
+paper-faithful Table I/II reproduction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cbor import Tag, encode_bytes, encode_tag_header, head_size
+
+TAG_UUID = 37  # RFC 8949 §3.4.x: UUID as tagged byte string (used by the paper)
+
+TAG_UINT8 = 64
+TAG_UINT16LE = 69
+TAG_UINT32LE = 70
+TAG_UINT64LE = 71
+TAG_SINT8 = 72
+TAG_SINT16LE = 77
+TAG_SINT32LE = 78
+TAG_SINT64LE = 79
+TAG_F16LE = 84
+TAG_F32LE = 85
+TAG_F64LE = 86
+TAG_BF16LE = 0x10001  # FCFS-space extension tag (beyond-paper)
+
+_DTYPE_TO_TAG: dict[str, int] = {
+    "uint8": TAG_UINT8,
+    "uint16": TAG_UINT16LE,
+    "uint32": TAG_UINT32LE,
+    "uint64": TAG_UINT64LE,
+    "int8": TAG_SINT8,
+    "int16": TAG_SINT16LE,
+    "int32": TAG_SINT32LE,
+    "int64": TAG_SINT64LE,
+    "float16": TAG_F16LE,
+    "float32": TAG_F32LE,
+    "float64": TAG_F64LE,
+}
+
+_TAG_TO_DTYPE: dict[int, np.dtype] = {
+    tag: np.dtype(name).newbyteorder("<") for name, tag in _DTYPE_TO_TAG.items()
+}
+# bf16 payloads decode to their raw uint16 bit pattern; callers reinterpret.
+_TAG_TO_DTYPE[TAG_BF16LE] = np.dtype("<u2")
+
+
+def tag_for_dtype(dtype: np.dtype | str) -> int:
+    name = np.dtype(dtype).name
+    if name not in _DTYPE_TO_TAG:
+        raise TypeError(f"no typed-array tag for dtype {name}")
+    return _DTYPE_TO_TAG[name]
+
+
+def encode_typed_array(values: np.ndarray, *, tag: int | None = None) -> bytes:
+    """Encode a 1-D numpy array as an RFC 8746 little-endian typed array."""
+    arr = np.ascontiguousarray(values).reshape(-1)
+    if tag is None:
+        tag = tag_for_dtype(arr.dtype)
+    payload = arr.astype(arr.dtype.newbyteorder("<"), copy=False).tobytes()
+    return encode_tag_header(tag) + encode_bytes(payload)
+
+
+def encode_typed_array_from_payload(payload: bytes, tag: int) -> bytes:
+    """Wrap pre-built little-endian payload bytes (e.g. from a Pallas kernel)."""
+    return encode_tag_header(tag) + encode_bytes(payload)
+
+
+def typed_array_size(num_elements: int, itemsize: int, tag: int) -> int:
+    """Exact serialized size without materializing anything (for size analysis)."""
+    payload = num_elements * itemsize
+    return head_size(tag) + head_size(payload) + payload
+
+
+def decode_typed_array(item: Tag) -> np.ndarray:
+    """Decode a Tag(typed-array-tag, bstr) into a 1-D numpy array."""
+    if not isinstance(item, Tag):
+        raise TypeError("expected a CBOR Tag")
+    if item.tag not in _TAG_TO_DTYPE:
+        raise TypeError(f"tag {item.tag} is not a supported typed array")
+    dtype = _TAG_TO_DTYPE[item.tag]
+    if not isinstance(item.value, (bytes, bytearray)):
+        raise TypeError("typed array content must be a byte string")
+    if len(item.value) % dtype.itemsize:
+        raise ValueError("typed array byte length not a multiple of item size")
+    return np.frombuffer(bytes(item.value), dtype=dtype)
+
+
+def is_typed_array(item: object) -> bool:
+    return isinstance(item, Tag) and item.tag in _TAG_TO_DTYPE

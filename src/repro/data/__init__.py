@@ -1,0 +1,5 @@
+from repro.data.pipeline import TokenPipeline, synthetic_mnist
+from repro.data.federated import partition_dirichlet, partition_iid
+
+__all__ = ["TokenPipeline", "synthetic_mnist", "partition_dirichlet",
+           "partition_iid"]

@@ -1,0 +1,32 @@
+"""Federated data partitioners: IID and Dirichlet non-IID."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def partition_iid(data: dict, num_clients: int, seed: int = 0) -> list[dict]:
+    n = len(data["labels"])
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    shards = np.array_split(perm, num_clients)
+    return [{k: v[idx] for k, v in data.items()} for idx in shards]
+
+
+def partition_dirichlet(data: dict, num_clients: int, alpha: float = 0.5,
+                        seed: int = 0) -> list[dict]:
+    """Label-skewed non-IID split (Dirichlet over class proportions)."""
+    labels = data["labels"]
+    rng = np.random.default_rng(seed)
+    client_idx: list[list[int]] = [[] for _ in range(num_clients)]
+    for c in np.unique(labels):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * num_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for client, part in enumerate(np.split(idx, cuts)):
+            client_idx[client].extend(part.tolist())
+    out = []
+    for idx in client_idx:
+        idx_arr = np.asarray(idx, dtype=int)
+        out.append({k: v[idx_arr] for k, v in data.items()})
+    return out

@@ -1,0 +1,7 @@
+from repro.fl.aggregation import fedavg
+from repro.fl.client import FLClient
+from repro.fl.server import FLServer, OrchestrationConfig
+from repro.fl.simulation import FLSimulation, SimulationReport
+
+__all__ = ["fedavg", "FLClient", "FLServer", "OrchestrationConfig",
+           "FLSimulation", "SimulationReport"]

@@ -1,0 +1,31 @@
+"""Model aggregation: weighted FedAvg (paper §V / FedAvg [15]) on flat
+parameter vectors, plus compressed-update aggregation with error feedback."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def fedavg(updates: Sequence[np.ndarray],
+           dataset_sizes: Sequence[int]) -> np.ndarray:
+    """Weighted average of flat parameter vectors, weights = |D_k| (FedAvg)."""
+    if not updates:
+        raise ValueError("no updates to aggregate")
+    w = np.asarray(dataset_sizes, np.float64)
+    if (w <= 0).any():
+        raise ValueError("dataset sizes must be positive")
+    w = w / w.sum()
+    out = np.zeros_like(updates[0], dtype=np.float64)
+    for u, wi in zip(updates, w):
+        out += wi * u.astype(np.float64)
+    return out.astype(np.float32)
+
+
+def fedavg_delta(base: np.ndarray, deltas: Sequence[np.ndarray],
+                 dataset_sizes: Sequence[int],
+                 server_lr: float = 1.0) -> np.ndarray:
+    """FedAvg in delta space: new_global = base + lr * avg(client deltas)."""
+    avg = fedavg(deltas, dataset_sizes)
+    return (base.astype(np.float64)
+            + server_lr * avg.astype(np.float64)).astype(np.float32)

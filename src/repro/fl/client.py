@@ -1,0 +1,119 @@
+"""FL client: local SGD training + TinyFL message handling (paper §V).
+
+The client holds a local train/validation split, trains the received global
+model for E local epochs, reports `FL_Local_DataSet_Update` notifications via
+the observe mechanism, and answers the final GET with `FL_Local_Model_Update`.
+"""
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.messages import (
+    FLGlobalModelUpdate,
+    FLLocalDataSetUpdate,
+    FLLocalModelUpdate,
+    ModelMetadata,
+    ParamsEncoding,
+)
+from repro.core.params_codec import (
+    ErrorFeedback,
+    ParamsSpec,
+    flatten_params,
+    unflatten_params,
+)
+from repro.train.optim import SGDConfig, sgd_update
+
+
+@dataclass
+class FLClient:
+    client_id: int
+    data: dict                       # {"images"/..., "labels"}
+    loss_fn: Callable                # (params, batch) -> (loss, metrics)
+    spec: ParamsSpec
+    local_epochs: int = 1
+    batch_size: int = 32
+    val_fraction: float = 0.2
+    sgd: SGDConfig = field(default_factory=SGDConfig)
+    seed: int = 0
+    dropout_prob: float = 0.0        # node-failure simulation
+    straggler_factor: float = 1.0    # >1 -> reports late
+    encoding: ParamsEncoding = ParamsEncoding.TA_F32
+    error_feedback: ErrorFeedback = field(default_factory=ErrorFeedback)
+
+    params: dict | None = None
+    round: int = 0
+    model_id: uuid.UUID | None = None
+    samples_seen: int = 0
+    _train_idx: np.ndarray = field(init=False, repr=False, default=None)
+    _val_idx: np.ndarray = field(init=False, repr=False, default=None)
+
+    def __post_init__(self) -> None:
+        n = len(self.data["labels"])
+        rng = np.random.default_rng((self.seed, self.client_id))
+        perm = rng.permutation(n)
+        n_val = max(1, int(n * self.val_fraction))
+        self._val_idx, self._train_idx = perm[:n_val], perm[n_val:]
+        self._grad_fn = jax.jit(jax.value_and_grad(
+            lambda p, b: self.loss_fn(p, b)[0]))
+        self._eval_fn = jax.jit(lambda p, b: self.loss_fn(p, b)[0])
+
+    # -- message handlers (server-driven CoAP semantics) ---------------------
+
+    def handle_global_model(self, msg: FLGlobalModelUpdate) -> None:
+        """POST /fl/model — install the new global model."""
+        self.params = unflatten_params(msg.params.astype(np.float32),
+                                       self.spec)
+        self.round = msg.round
+        self.model_id = msg.model_id
+        self.samples_seen = 0
+        self.training_enabled = msg.continue_training
+
+    def dataset_size(self) -> int:
+        return len(self._train_idx)
+
+    def train_locally(self) -> FLLocalDataSetUpdate:
+        """Run E local epochs; returns the observe notification payload."""
+        if self.params is None:
+            raise RuntimeError("no global model installed")
+        rng = np.random.default_rng((self.seed, self.client_id, self.round))
+        opt_state: dict = {}
+        n = len(self._train_idx)
+        for _ in range(self.local_epochs):
+            order = rng.permutation(n)
+            for start in range(0, n - self.batch_size + 1, self.batch_size):
+                idx = self._train_idx[order[start:start + self.batch_size]]
+                batch = {k: jnp.asarray(v[idx]) for k, v in self.data.items()}
+                _, grads = self._grad_fn(self.params, batch)
+                self.params, opt_state = sgd_update(self.params, grads,
+                                                    opt_state, self.sgd)
+                self.samples_seen += self.batch_size
+        return self.progress_update()
+
+    def progress_update(self) -> FLLocalDataSetUpdate:
+        return FLLocalDataSetUpdate(
+            dataset_size=self.samples_seen,
+            metadata=ModelMetadata(*self._losses()))
+
+    def _losses(self) -> tuple[float, float]:
+        tl = self._eval(self._train_idx[:256])
+        vl = self._eval(self._val_idx[:256])
+        return float(tl), float(vl)
+
+    def _eval(self, idx: np.ndarray) -> float:
+        batch = {k: jnp.asarray(v[idx]) for k, v in self.data.items()}
+        return float(self._eval_fn(self.params, batch))
+
+    def local_model_update(self) -> FLLocalModelUpdate:
+        """GET /fl/model — reply with the locally-trained model."""
+        flat, _ = flatten_params(self.params)
+        tl, vl = self._losses()
+        return FLLocalModelUpdate(
+            model_id=self.model_id, round=self.round, params=flat,
+            metadata=ModelMetadata(tl, vl))

@@ -1,0 +1,144 @@
+"""FL server/orchestrator (paper §V).
+
+Implements the paper's multi-step workflow: orchestration setup (number of
+participants, minimum aggregation fraction, rounds, stop condition, minimum
+local samples), per-round global-model dissemination (CoAP POST, multicast),
+observe-based readiness notifications, client selection, weighted FedAvg,
+and the per-client stop condition "halt when validation loss < training
+loss" (§V).  Fault tolerance beyond the paper: straggler deadline + quorum
+aggregation, client dropout handling, CBOR round checkpointing with restart.
+"""
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.messages import (
+    FLGlobalModelUpdate,
+    FLLocalDataSetUpdate,
+    FLLocalModelUpdate,
+    ParamsEncoding,
+)
+from repro.fl.aggregation import fedavg
+
+
+@dataclass(frozen=True)
+class OrchestrationConfig:
+    num_clients: int
+    clients_per_round: int
+    min_fraction: float = 0.5          # quorum for aggregation (stragglers)
+    num_rounds: int = 10
+    min_local_samples: int = 64        # required before a client counts
+    params_encoding: ParamsEncoding = ParamsEncoding.TA_F32
+    seed: int = 0
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 1
+
+
+@dataclass
+class RoundResult:
+    round: int
+    participants: list[int]
+    reporters: list[int]
+    dropped: list[int]
+    stopped: list[int]
+    mean_train_loss: float
+    mean_val_loss: float
+
+
+class FLServer:
+    def __init__(self, cfg: OrchestrationConfig, global_params: np.ndarray):
+        self.cfg = cfg
+        self.global_params = global_params.astype(np.float32)
+        self.model_id = uuid.uuid4()
+        self.round = 0
+        self.stopped_clients: set[int] = set()
+        self.history: list[RoundResult] = []
+        self._rng = np.random.default_rng(cfg.seed)
+        self.ckpt = (CheckpointManager(cfg.checkpoint_dir)
+                     if cfg.checkpoint_dir else None)
+
+    # -- restart ------------------------------------------------------------
+
+    def try_restore(self) -> bool:
+        if not self.ckpt:
+            return False
+        restored = self.ckpt.restore_latest(
+            {"params": self.global_params,
+             "stopped": np.zeros(self.cfg.num_clients, np.int32)})
+        if restored is None:
+            return False
+        tree, header = restored
+        self.global_params = tree["params"].astype(np.float32)
+        self.stopped_clients = set(np.flatnonzero(tree["stopped"]).tolist())
+        self.round = int(header["round"])
+        self.model_id = uuid.UUID(header["meta"]["model_id"])
+        return True
+
+    def _checkpoint(self) -> None:
+        if self.ckpt and self.round % self.cfg.checkpoint_every == 0:
+            stopped = np.zeros(self.cfg.num_clients, np.int32)
+            stopped[list(self.stopped_clients)] = 1
+            self.ckpt.save({"params": self.global_params, "stopped": stopped},
+                           step=self.round, round_=self.round,
+                           meta={"model_id": str(self.model_id)})
+
+    # -- the paper's message flow --------------------------------------------
+
+    def select_clients(self) -> list[int]:
+        pool = [c for c in range(self.cfg.num_clients)
+                if c not in self.stopped_clients]
+        k = min(self.cfg.clients_per_round, len(pool))
+        return sorted(self._rng.choice(pool, size=k, replace=False).tolist())
+
+    def global_update_message(self, for_client: int | None = None
+                              ) -> FLGlobalModelUpdate:
+        """POST payload; multicast per §VI-B2 (one message for all clients).
+        continue_training=False for clients whose stop condition fired."""
+        cont = for_client not in self.stopped_clients
+        return FLGlobalModelUpdate(
+            model_id=self.model_id, round=self.round,
+            params=self.global_params, continue_training=cont)
+
+    def observe_ready(self, update: FLLocalDataSetUpdate) -> bool:
+        """Observe notification filter: has the client trained enough?"""
+        return update.dataset_size >= self.cfg.min_local_samples
+
+    def check_stop_condition(self, update: FLLocalDataSetUpdate,
+                             client: int) -> bool:
+        """Paper §V: halt a client when validation loss < training loss."""
+        md = update.metadata
+        if md is not None and md.val_loss < md.train_loss:
+            self.stopped_clients.add(client)
+            return True
+        return False
+
+    def aggregate(self, updates: dict[int, FLLocalModelUpdate],
+                  dataset_sizes: dict[int, int]) -> np.ndarray:
+        for cid, upd in updates.items():
+            if upd.round != self.round:
+                raise ValueError(f"client {cid}: stale round {upd.round}")
+            if upd.model_id != self.model_id:
+                raise ValueError(f"client {cid}: wrong model id")
+        clients = sorted(updates)
+        self.global_params = fedavg(
+            [updates[c].params.astype(np.float32) for c in clients],
+            [dataset_sizes[c] for c in clients])
+        return self.global_params
+
+    def quorum_met(self, n_reporters: int, n_selected: int) -> bool:
+        return n_reporters >= max(1, int(np.ceil(
+            self.cfg.min_fraction * n_selected)))
+
+    def finish_round(self, result: RoundResult) -> None:
+        self.history.append(result)
+        self.round += 1
+        self._checkpoint()
+
+    @property
+    def done(self) -> bool:
+        active = self.cfg.num_clients - len(self.stopped_clients)
+        return self.round >= self.cfg.num_rounds or active == 0

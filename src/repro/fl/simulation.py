@@ -1,0 +1,158 @@
+"""End-to-end FL simulation: server + clients over the simulated CoAP link.
+
+Drives the paper's full communication diagram (Fig. 2) with exact
+byte/frame accounting per message type, CDDL validation of every message on
+the wire, straggler/dropout fault injection, and round checkpointing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import cbor, cddl
+from repro.core.messages import (
+    FLGlobalModelUpdate,
+    FLLocalDataSetUpdate,
+    FLLocalModelUpdate,
+)
+from repro.fl.client import FLClient
+from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
+from repro.transport.coap import Code, TransferStats
+from repro.transport.network import LossyLink
+
+
+@dataclass
+class MessageAccounting:
+    by_type: dict[str, TransferStats] = field(default_factory=dict)
+
+    def record(self, mtype: str, stats: TransferStats) -> None:
+        agg = self.by_type.setdefault(mtype, TransferStats())
+        agg.add(stats)
+
+    def summary(self) -> dict:
+        return {k: vars(v) for k, v in self.by_type.items()}
+
+
+@dataclass
+class SimulationReport:
+    rounds: list[RoundResult]
+    accounting: MessageAccounting
+    final_val_loss: float
+    final_train_loss: float
+
+
+class FLSimulation:
+    def __init__(self, server: FLServer, clients: list[FLClient],
+                 drop_prob: float = 0.0, seed: int = 0,
+                 multicast_global: bool = True) -> None:
+        self.server = server
+        self.clients = {c.client_id: c for c in clients}
+        self.link = LossyLink(drop_prob=drop_prob, seed=seed)
+        self.accounting = MessageAccounting()
+        self.multicast_global = multicast_global
+        self._rng = np.random.default_rng(seed)
+
+    # -- wire helpers (validate every message against its CDDL schema) -------
+
+    def _send(self, payload: bytes, mtype: str, uri: str,
+              code: Code) -> bytes | None:
+        """Validate against CDDL, push over the lossy link.  Returns None if
+        the transfer failed after max retransmissions (treated upstream as a
+        dropout — the FL round continues without this message)."""
+        cddl.validate(cbor.decode(payload), cddl.SCHEMAS[mtype])
+        stats = self.link.send_payload(payload, uri=uri, code=code)
+        self.accounting.record(mtype, stats)
+        return None if stats.failed_messages else payload
+
+    # -- one FL round (paper Fig. 2) ------------------------------------------
+
+    def run_round(self) -> RoundResult:
+        server, cfg = self.server, self.server.cfg
+        selected = server.select_clients()
+        enc = cfg.params_encoding
+
+        # (1) global model dissemination: multicast = one wire transfer
+        #     reaching all clients (§VI-B2); unicast = one per client.
+        msg = server.global_update_message()
+        payload = msg.to_cbor(enc)
+        sends = 1 if self.multicast_global else len(selected)
+        delivered_global = True
+        for _ in range(sends):
+            if self._send(payload, "FL_Global_Model_Update", "fl/model",
+                          Code.POST) is None:
+                delivered_global = False
+        receivers = selected if delivered_global else []
+        for cid in receivers:
+            self.clients[cid].handle_global_model(
+                FLGlobalModelUpdate.from_cbor(payload))
+
+        # (2) local training + observe notifications
+        reporters, dropped, stopped = [], [], []
+        progress: dict[int, FLLocalDataSetUpdate] = {}
+        for cid in receivers:
+            client = self.clients[cid]
+            if self._rng.random() < client.dropout_prob:
+                dropped.append(cid)       # node failure this round
+                continue
+            upd = client.train_locally()
+            wire = self._send(upd.to_cbor(), "FL_Local_DataSet_Update",
+                              "fl/progress", Code.CONTENT)
+            if wire is None:
+                dropped.append(cid)       # report lost on the link
+                continue
+            upd = FLLocalDataSetUpdate.from_cbor(wire)
+            progress[cid] = upd
+            if not server.observe_ready(upd):
+                continue
+            if server.check_stop_condition(upd, cid):
+                stopped.append(cid)
+            reporters.append(cid)
+
+        # (3) straggler mitigation: drop the slowest reporters beyond quorum
+        reporters.sort(key=lambda c: self.clients[c].straggler_factor)
+        quorum = max(1, int(np.ceil(cfg.min_fraction * len(selected))))
+        if len(reporters) > quorum:
+            slowest = [c for c in reporters
+                       if self.clients[c].straggler_factor > 1.0]
+            while len(reporters) > quorum and slowest:
+                drop = slowest.pop()
+                reporters.remove(drop)
+
+        # (4) collect local models (GET) + aggregate
+        result = RoundResult(
+            round=server.round, participants=selected, reporters=reporters,
+            dropped=dropped, stopped=stopped,
+            mean_train_loss=float(np.mean(
+                [p.metadata.train_loss for p in progress.values()]
+            )) if progress else float("nan"),
+            mean_val_loss=float(np.mean(
+                [p.metadata.val_loss for p in progress.values()]
+            )) if progress else float("nan"),
+        )
+        if server.quorum_met(len(reporters), len(selected)):
+            updates, sizes = {}, {}
+            for cid in reporters:
+                raw = self.clients[cid].local_model_update().to_cbor(enc)
+                raw = self._send(raw, "FL_Local_Model_Update", "fl/model",
+                                 Code.CONTENT)
+                if raw is None:
+                    dropped.append(cid)   # model transfer lost
+                    continue
+                updates[cid] = FLLocalModelUpdate.from_cbor(raw)
+                sizes[cid] = self.clients[cid].dataset_size()
+            if updates:
+                server.aggregate(updates, sizes)
+        server.finish_round(result)
+        return result
+
+    def run(self) -> SimulationReport:
+        while not self.server.done:
+            self.run_round()
+        last = self.server.history[-1] if self.server.history else None
+        return SimulationReport(
+            rounds=self.server.history,
+            accounting=self.accounting,
+            final_val_loss=last.mean_val_loss if last else float("nan"),
+            final_train_loss=last.mean_train_loss if last else float("nan"),
+        )

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: weighted FedAvg reduction over K client updates.
+
+The aggregation hot-spot: server receives K decoded update vectors (K can be
+hundreds) and reduces them to one weighted average.  Grid walks parameter
+tiles; each step streams the (K, TILE) column block through VMEM once and
+accumulates sum_k w_k * u_k on the VPU — a single HBM pass over the K x N
+matrix (the naive tree_map average reads it twice and materializes
+intermediates).  Weights are pre-normalized on the host (length K, tiny) and
+broadcast into VMEM once per step.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048  # parameters per grid step (x K clients in VMEM)
+
+
+def _fedavg_kernel(u_ref, w_ref, out_ref):
+    u = u_ref[...]                       # (K, TILE) f32
+    w = w_ref[...]                       # (K,) f32, pre-normalized
+    out_ref[...] = jnp.einsum("k,kn->n", w, u,
+                              preferred_element_type=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fedavg_reduce(updates: jax.Array, weights: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    """updates (K, n) f32, weights (K,) f32 -> (n,) weighted average."""
+    k, n = updates.shape
+    w = (weights / weights.sum()).astype(jnp.float32)
+    pad = (-n) % TILE
+    up = jnp.pad(updates, ((0, 0), (0, pad)))
+    grid = (up.shape[1] // TILE,)
+    out = pl.pallas_call(
+        _fedavg_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, TILE), lambda i: (0, i)),
+                  pl.BlockSpec((k,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((up.shape[1],), jnp.float32),
+        interpret=interpret,
+    )(up.astype(jnp.float32), w)
+    return out[:n]

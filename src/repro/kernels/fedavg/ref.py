@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the weighted FedAvg reduction."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """updates (K, n) f32, weights (K,) -> (n,) weighted average."""
+    w = weights / weights.sum()
+    return jnp.einsum("k,kn->n", w.astype(jnp.float32),
+                      updates.astype(jnp.float32))

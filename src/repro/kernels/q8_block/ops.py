@@ -1,0 +1,27 @@
+"""Public ops for blockwise int8 compression of model updates."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.q8_block.q8_block import BLOCK, dequantize_q8, quantize_q8
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def compress_update(flat: jax.Array):
+    """f32 vector -> (int8 values, f32 scales, reconstruction error)."""
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    q, scales = quantize_q8(blocks, interpret=not _ON_TPU)
+    deq = dequantize_q8(q, scales, interpret=not _ON_TPU).reshape(-1)[:n]
+    return q.reshape(-1)[:n], scales, flat - deq
+
+
+def decompress_update(q: np.ndarray, scales: np.ndarray, n: int) -> np.ndarray:
+    pad = (-n) % BLOCK
+    qb = jnp.pad(jnp.asarray(q), (0, pad)).reshape(-1, BLOCK)
+    out = dequantize_q8(qb, jnp.asarray(scales), interpret=not _ON_TPU)
+    return np.asarray(out.reshape(-1)[:n])

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused blockwise-int8 quantize with per-block scales.
+
+Each grid step loads a (ROWS_PER_STEP, 256) tile of quantization blocks into
+VMEM, computes per-row absmax (VPU cross-lane reduce), derives scales, and
+writes both the int8 tile and the scale column — one HBM pass for what the
+unfused reference does in three (absmax read, scale bcast read, write).
+256-wide blocks = 2 x 128 lanes; int8 output tiling (32, 128) is satisfied
+by ROWS_PER_STEP = 32k/256 = 128 rows.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256          # quantization block (matches core/params_codec)
+ROWS_PER_STEP = 128  # rows of blocks per grid step
+
+
+def _q8_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]                                   # (R, BLOCK) f32
+    absmax = jnp.abs(x).max(axis=1)
+    scales = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(x / scales[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scales.astype(jnp.float32)
+
+
+def _dq8_kernel(q_ref, s_ref, out_ref):
+    out_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...][:, None]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize_q8(x: jax.Array, *, interpret: bool = True):
+    """x (nblocks, BLOCK) f32 -> (q int8 (nblocks, BLOCK), scales (nblocks,))."""
+    rows = x.shape[0]
+    block = min(ROWS_PER_STEP, rows)
+    grid = (rows + block - 1) // block
+    return pl.pallas_call(
+        _q8_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block, BLOCK), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((block, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((block,), lambda i: (i,))),
+        out_shape=(jax.ShapeDtypeStruct((rows, BLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((rows,), jnp.float32)),
+        interpret=interpret,
+    )(x)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dequantize_q8(q: jax.Array, scales: jax.Array, *,
+                  interpret: bool = True) -> jax.Array:
+    rows = q.shape[0]
+    block = min(ROWS_PER_STEP, rows)
+    grid = (rows + block - 1) // block
+    return pl.pallas_call(
+        _dq8_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(q, scales)

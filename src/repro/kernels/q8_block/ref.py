@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for blockwise int8 quantization (per-block absmax scale).
+
+Matches core/params_codec.quantize_q8 semantics: blocks of 256, scale =
+absmax/127, symmetric round-to-nearest, clip to [-127, 127].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_q8_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (nblocks, BLOCK) f32 -> (int8 (nblocks, BLOCK), f32 scales (nblocks,))."""
+    absmax = jnp.abs(x).max(axis=1)
+    scales = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(x / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales.astype(jnp.float32)
+
+
+def dequantize_q8_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scales[:, None]

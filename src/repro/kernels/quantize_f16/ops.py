@@ -1,0 +1,22 @@
+"""Public ops for the f16 payload quantizer: picks Pallas (interpret on CPU,
+compiled on TPU) and returns CBOR-ready little-endian payload bytes."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.kernels.quantize_f16.quantize_f16 import dequantize_f16, quantize_f16
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def params_to_f16_payload(flat: jax.Array) -> bytes:
+    """f32 vector -> little-endian half-float payload for CBOR tag 84."""
+    bits = quantize_f16(flat, interpret=not _ON_TPU)
+    return np.asarray(bits).astype("<u2").tobytes()
+
+
+def f16_payload_to_params(payload: bytes) -> np.ndarray:
+    bits = np.frombuffer(payload, dtype="<u2")
+    out = dequantize_f16(jax.numpy.asarray(bits), interpret=not _ON_TPU)
+    return np.asarray(out)

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: blocked f32 -> f16-bits quantizer (and back).
+
+TPU mapping: 1-D parameter stream reshaped to (rows, 1024) lane-aligned
+tiles; each grid step moves one (BLOCK_ROWS, 1024) tile HBM->VMEM, converts
+on the VPU, writes the u16 payload tile back.  1024 = 8 sublanes x 128 lanes
+keeps both dtypes' native tiling happy (f32: (8,128), 16-bit: (16,128)).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 1024        # last-dim tile: multiple of 128 lanes
+BLOCK_ROWS = 256    # rows per grid step -> 1 MiB f32 in VMEM per block
+
+
+def _quantize_kernel(x_ref, out_ref):
+    out_ref[...] = jax.lax.bitcast_convert_type(
+        x_ref[...].astype(jnp.float16), jnp.uint16)
+
+
+def _dequantize_kernel(bits_ref, out_ref):
+    out_ref[...] = jax.lax.bitcast_convert_type(
+        bits_ref[...], jnp.float16).astype(jnp.float32)
+
+
+def _blocked_call(kernel, x: jax.Array, out_dtype, *, interpret: bool):
+    rows = x.shape[0]
+    block = min(BLOCK_ROWS, rows)
+    grid = (rows + block - 1) // block
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), out_dtype),
+        interpret=interpret,
+    )(x)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def quantize_f16(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """x (n,) f32 -> (n,) u16 half bit patterns via VMEM-tiled blocks."""
+    n = x.shape[0]
+    pad = (-n) % LANES
+    xp = jnp.pad(x, (0, pad)).reshape(-1, LANES)
+    out = _blocked_call(_quantize_kernel, xp, jnp.uint16, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dequantize_f16(bits: jax.Array, *, interpret: bool = True) -> jax.Array:
+    n = bits.shape[0]
+    pad = (-n) % LANES
+    bp = jnp.pad(bits, (0, pad)).reshape(-1, LANES)
+    out = _blocked_call(_dequantize_kernel, bp, jnp.float32,
+                        interpret=interpret)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the f32 -> f16-payload quantizer.
+
+The CBOR typed-array best-case path (tag 84, float16le) needs the model's
+f32/bf16 parameters as a contiguous little-endian half-float byte payload.
+The reference is a plain cast + bitcast; the Pallas kernel tiles it through
+VMEM so payload preparation for 100M+ parameter models streams at HBM
+bandwidth instead of bouncing through host loops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_f16_ref(x: jax.Array) -> jax.Array:
+    """x (n,) f32 -> (n,) u16 half-float bit patterns (LE on bitcast)."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float16), jnp.uint16)
+
+
+def dequantize_f16_ref(bits: jax.Array) -> jax.Array:
+    """(n,) u16 half-float bits -> (n,) f32."""
+    return jax.lax.bitcast_convert_type(bits, jnp.float16).astype(jnp.float32)

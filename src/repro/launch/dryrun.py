@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init).  This proves the distribution config is coherent on the
+production meshes without hardware:
+
+    single pod  : (16, 16)    ("data", "model")          = 256 chips
+    multi-pod   : (2, 16, 16) ("pod", "data", "model")   = 512 chips
+
+For each cell we record memory_analysis / cost_analysis / collective bytes,
+plus two standalone lowerings of the scanned layer body (while-loop form and
+inner-unrolled form) that launch/roofline.py uses to correct XLA's
+count-scan-bodies-once cost accounting.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out reports/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import ARCH_NAMES, SHAPES, get_config
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.parallel.sharding import make_policy
+from repro.train.steps import step_and_specs
+
+
+def _mem_dict(ma) -> dict:
+    return {
+        "argument_bytes": ma.argument_size_in_bytes,
+        "output_bytes": ma.output_size_in_bytes,
+        "temp_bytes": ma.temp_size_in_bytes,
+        "alias_bytes": ma.alias_size_in_bytes,
+        "peak_estimate_bytes": ma.argument_size_in_bytes
+        + ma.temp_size_in_bytes + ma.output_size_in_bytes
+        - ma.alias_size_in_bytes,
+    }
+
+
+def _cost_dict(ca) -> dict:
+    ca = ca[0] if isinstance(ca, list) else ca
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0))}
+
+
+def _lower_compile(fn, args, donate=()):
+    t0 = time.time()
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return compiled, t1 - t0, t2 - t1
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             with_units: bool = True, pod_compress: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "multi" if multi_pod else "single",
+                 "kind": shape.kind, "chips": 512 if multi_pod else 256,
+                 "pod_compress": pod_compress}
+    if not cfg.supports(shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k needs sub-quadratic attention; "
+                         f"{arch} is pure full-attention (DESIGN.md §5)")
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        policy = make_policy(mesh, multi_pod=multi_pod,
+                             fsdp=cfg.fsdp_params, mode=shape.kind)
+        model = build_model(cfg)
+        fn, args, donate = step_and_specs(model, shape, policy,
+                                          pod_grad_compress=pod_compress)
+        with mesh:
+            compiled, lower_s, compile_s = _lower_compile(fn, args, donate)
+            rec.update({
+                "status": "ok",
+                "lower_s": round(lower_s, 2),
+                "compile_s": round(compile_s, 2),
+                "memory": _mem_dict(compiled.memory_analysis()),
+                "cost": _cost_dict(compiled.cost_analysis()),
+                "collectives": collective_stats(compiled.as_text()).as_dict(),
+                "model": {"params": model.param_count,
+                          "active_params": model.active_param_count},
+            })
+            if with_units:
+                # gradient accumulation: the layer body runs (layers x MB)
+                # times per step on a microbatch-sized activation slab
+                from repro.train.steps import effective_microbatches
+                mb = (effective_microbatches(cfg.train_microbatches, shape,
+                                             policy)
+                      if shape.kind == "train" else 1)
+                unit_shape = (dataclasses.replace(
+                    shape, global_batch=shape.global_batch // mb)
+                    if mb > 1 else shape)
+                unit_rec = {"multiplier": model.scan_multiplier,
+                            "microbatches": mb}
+                for mode, unroll in (("while", False), ("unroll", True)):
+                    ufn, uargs = model.layer_unit(
+                        unit_shape, policy, unroll=unroll, kind=shape.kind)
+                    ucomp, _, _ = _lower_compile(ufn, uargs)
+                    unit_rec[mode] = {
+                        "cost": _cost_dict(ucomp.cost_analysis()),
+                        "collectives": collective_stats(
+                            ucomp.as_text()).as_dict(),
+                    }
+                if mb > 1:
+                    # the grad-accumulation scan body: fwd+bwd of one
+                    # microbatch (embedding/readout included), layer scans
+                    # as while loops — matches how it appears in the step
+                    from repro.train.steps import (make_microbatch_unit,
+                                                   param_sds)
+                    mfn = make_microbatch_unit(model, policy)
+                    margs = (param_sds(model, policy),
+                             model.input_specs(unit_shape, policy))
+                    mcomp, _, _ = _lower_compile(mfn, margs)
+                    unit_rec["mbbody"] = {
+                        "cost": _cost_dict(mcomp.cost_analysis()),
+                        "collectives": collective_stats(
+                            mcomp.as_text()).as_dict(),
+                    }
+                rec["unit"] = unit_rec
+    except Exception as exc:  # noqa: BLE001 — a failing cell is a bug report
+        rec["status"] = "error"
+        rec["reason"] = f"{type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--no-units", action="store_true")
+    ap.add_argument("--pod-compress", action="store_true",
+                    help="q8-compressed once-per-step cross-pod grad sync")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mesh_name = "multi" if multi_pod else "single"
+                path = out / f"{arch}__{shape_name}__{mesh_name}.json"
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, multi_pod,
+                               with_units=not args.no_units and not multi_pod,
+                               pod_compress=args.pod_compress)
+                rec["wall_s"] = round(time.time() - t0, 1)
+                path.write_text(json.dumps(rec, indent=1))
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_err += status == "error"
+                extra = ""
+                if status == "ok":
+                    mem = rec["memory"]["peak_estimate_bytes"] / 1e9
+                    extra = (f"mem/dev={mem:.2f}GB "
+                             f"flops/dev={rec['cost']['flops']:.3g} "
+                             f"coll={rec['collectives']['total_bytes']:.3g}B")
+                elif status == "error":
+                    extra = rec["reason"][:160]
+                print(f"[{status:>7}] {arch:<18} {shape_name:<12} "
+                      f"{mesh_name:<6} {rec['wall_s']:6.1f}s {extra}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Parse collective-communication volume out of compiled SPMD HLO text.
+
+`compiled.cost_analysis()` does not report collective bytes, so we scan the
+post-optimization HLO for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops and sum operand/result sizes.
+
+Per-device bytes-on-wire conventions (ring algorithms, group size n):
+    all-reduce       2 * (n-1)/n * data   ~= 2 * data
+    all-gather       (n-1)/n * output     ~= output
+    reduce-scatter   (n-1)/n * input      ~= input
+    all-to-all       (n-1)/n * data       ~= data
+    collective-permute  data (point-to-point)
+We approximate (n-1)/n ~= 1 (n >= 16 here).  Scan (while-loop) bodies appear
+once in the HLO; launch/roofline.py re-multiplies by trip counts.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-~!]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*\),\s*condition=%?([\w.\-~!]+),\s*body=%?([\w.\-~!]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|branch_computations)="
+                      r"[{]?%?([\w.\-~!]+(?:,\s*%?[\w.\-~!]+)*)[}]?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def as_dict(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind)}
+
+
+def _line_collective(line: str):
+    """(kind, bytes_moved) for a collective-op line, else None."""
+    if "-done(" in line:
+        return None
+    m = _OP_RE.match(line)
+    if not m:
+        return None
+    result_txt, kind = m.group(1), m.group(2)
+    result_b = _shape_bytes(result_txt)
+    rest = line[m.end():]
+    operand_b = _shape_bytes(rest.split("),", 1)[0] if ")," in rest else rest)
+    if kind == "all-reduce":
+        moved = 2 * result_b
+    elif kind == "all-gather":
+        moved = result_b
+    else:  # reduce-scatter, all-to-all, collective-permute
+        moved = max(operand_b, result_b)
+    return kind, moved
+
+
+def _parse_module(hlo_text: str):
+    """-> (per-computation collectives, call edges, while edges, entry name).
+
+    call edges: comp -> [callee] (multiplier 1: fusions, reducers, conds).
+    while edges: comp -> [(body, trip_count)] with the trip count recovered
+    from the loop-condition computation's compare constant.
+    """
+    comps: dict[str, list[tuple[str, int]]] = {}
+    calls: dict[str, list[str]] = {}
+    whiles: dict[str, list[tuple[str, str]]] = {}  # comp -> [(cond, body)]
+    consts: dict[str, list[int]] = {}
+    current = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if not line.startswith(" ") and (m := _COMP_RE.match(line)):
+            current = m.group(1)
+            comps.setdefault(current, [])
+            calls.setdefault(current, [])
+            whiles.setdefault(current, [])
+            consts.setdefault(current, [])
+            if line.startswith("ENTRY"):
+                entry = current
+            continue
+        if current is None:
+            continue
+        if (c := _line_collective(line)) is not None:
+            comps[current].append(c)
+        if (w := _WHILE_RE.search(line)):
+            whiles[current].append((w.group(1), w.group(2)))
+        else:
+            for m2 in _CALL_RE.finditer(line):
+                for name in m2.group(1).split(","):
+                    calls[current].append(name.strip().lstrip("%"))
+        for m3 in _CONST_RE.finditer(line):
+            v = int(m3.group(1))
+            if 1 < v < 10**7:
+                consts[current].append(v)
+    return comps, calls, whiles, consts, entry
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Collective byte volume with while-loop trip counts applied.
+
+    A collective inside a scanned layer body executes L times; the trip
+    count is recovered from each while's condition computation (the loop
+    bound constant) and multiplied through the (possibly nested) call graph.
+    Falls back to multiplier 1 when no bound constant is found.
+    """
+    comps, calls, whiles, consts, entry = _parse_module(hlo_text)
+    stats = CollectiveStats()
+    if entry is None:  # not a full module: flat line scan
+        for line in hlo_text.splitlines():
+            if (c := _line_collective(line)) is not None:
+                stats.bytes_by_kind[c[0]] += c[1]
+                stats.count_by_kind[c[0]] += 1
+        return stats
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def visit(comp: str) -> tuple[tuple[str, int], ...]:
+        """Total collectives for one execution of ``comp`` (kind, bytes)."""
+        out: list[tuple[str, int]] = list(comps.get(comp, ()))
+        for callee in calls.get(comp, ()):  # non-loop calls: once
+            if callee in comps and callee != comp:
+                out.extend(visit(callee))
+        for cond, body in whiles.get(comp, ()):
+            trip = max(consts.get(cond, [1]) or [1])
+            for kind, b in visit(body):
+                out.append((kind, b * trip))
+        return tuple(out)
+
+    for kind, b in visit(entry):
+        stats.bytes_by_kind[kind] += b
+        stats.count_by_kind[kind] += 1
+    return stats

@@ -1,0 +1,192 @@
+"""Roofline analysis over the dry-run artifacts (launch/dryrun.py JSONs).
+
+Hardware model (TPU v5e):
+    peak bf16 compute   197 TFLOP/s per chip
+    HBM bandwidth       819 GB/s per chip
+    ICI link bandwidth  ~50 GB/s per link per chip
+
+Terms (seconds, per training/serving step):
+    compute    = HLO_FLOPs_per_chip / peak
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+Scan correction: XLA cost_analysis counts a while-loop body ONCE.  Every
+model scans its layer stack, so the dry-run also lowers the layer body
+standalone in two forms: "while" (inner seq scans as while loops — matching
+how the body appears inside the step) and "unroll" (inner scans unrolled —
+exact).  True cost ≈ step − while_unit + multiplier × unroll_unit.
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) with D = tokens per step;
+the ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is
+"useful" (remat recompute, attention, dispatch overheads all lower it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+LINK_BW = 50e9           # B/s per ICI link
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    kind: str
+    chips: int
+    flops: float            # per-chip, scan-corrected
+    bytes_hbm: float        # per-chip, scan-corrected
+    coll_bytes: float       # per-chip, scan-corrected
+    mem_gb: float           # peak per-chip bytes from memory_analysis
+    model_flops: float      # analytic 6·N·D (global)
+    status: str = "ok"
+    reason: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Perfect-overlap model: step = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU under the perfect-overlap step model."""
+        if self.step_time <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.step_time) / PEAK_FLOPS
+
+
+def corrected_costs(rec: dict) -> tuple[float, float, float]:
+    """(flops, hbm_bytes, collective_bytes) per chip, scan-corrected.
+
+    Single-level (no grad accumulation):
+        true = step - layer_while + L*layer_unroll
+    Two-level (grad-accumulation scan of MB microbatch bodies, each
+    containing the layer scan):
+        mb_true = mb_body - layer_while + L*layer_unroll
+        true    = step - mb_body + MB*mb_true
+    """
+    c_step = rec["cost"]
+    coll_step = float(rec["collectives"]["total_bytes"])
+    unit = rec.get("unit")
+    if not unit or "while" not in unit:
+        return c_step["flops"], c_step["bytes"], coll_step
+    mult = unit["multiplier"]
+    mb = unit.get("microbatches", 1)
+
+    def fix(step_val, lw, lu, mbb=None):
+        if mb > 1 and mbb is not None:
+            mb_true = mbb - lw + mult * lu
+            return step_val - mbb + mb * mb_true
+        return step_val - lw + mult * lu
+
+    def get(node, field):
+        if field == "coll":
+            return float(node["collectives"]["total_bytes"])
+        return float(node["cost"][field])
+
+    mbb = unit.get("mbbody")
+    f = fix(c_step["flops"], get(unit["while"], "flops"),
+            get(unit["unroll"], "flops"), mbb and get(mbb, "flops"))
+    b = fix(c_step["bytes"], get(unit["while"], "bytes"),
+            get(unit["unroll"], "bytes"), mbb and get(mbb, "bytes"))
+    # collective bytes come from the nesting-aware HLO parser, which already
+    # multiplies loop bodies by their trip counts — no unit correction
+    return max(f, c_step["flops"]), max(b, 0.0), coll_step
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D with D = tokens processed per step (1 token/seq for decode)."""
+    shape_tokens = {
+        "train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+        "decode_32k": 128, "long_500k": 1,
+    }
+    tokens = shape_tokens[rec["shape"]]
+    n = rec["model"]["active_params"]
+    mult = 6 if rec["kind"] == "train" else 2
+    return float(mult) * n * tokens
+
+
+def load_rows(report_dir: Path, mesh: str = "single") -> list[RooflineRow]:
+    rows = []
+    for path in sorted(report_dir.glob(f"*__{mesh}.json")):
+        rec = json.loads(path.read_text())
+        if rec["status"] != "ok":
+            rows.append(RooflineRow(
+                rec["arch"], rec["shape"], rec.get("kind", "?"),
+                rec.get("chips", 0), 0, 0, 0, 0, 0,
+                status=rec["status"], reason=rec.get("reason", "")))
+            continue
+        f, b, cb = corrected_costs(rec)
+        rows.append(RooflineRow(
+            arch=rec["arch"], shape=rec["shape"], kind=rec["kind"],
+            chips=rec["chips"], flops=f, bytes_hbm=b, coll_bytes=cb,
+            mem_gb=rec["memory"]["peak_estimate_bytes"] / 1e9,
+            model_flops=model_flops(rec)))
+    return rows
+
+
+def format_table(rows: list[RooflineRow]) -> str:
+    hdr = (f"| {'arch':<18} | {'shape':<11} | {'compute(s)':>10} | "
+           f"{'memory(s)':>10} | {'collective(s)':>13} | {'bottleneck':>10} | "
+           f"{'MF/HLO':>6} | {'roofline%':>9} | {'mem/chip GB':>11} |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        if r.status != "ok":
+            lines.append(f"| {r.arch:<18} | {r.shape:<11} | "
+                         f"{'—':>10} | {'—':>10} | {'—':>13} | "
+                         f"{r.status:>10} | {'—':>6} | {'—':>9} | {'—':>11} |")
+            continue
+        lines.append(
+            f"| {r.arch:<18} | {r.shape:<11} | {r.t_compute:10.4f} | "
+            f"{r.t_memory:10.4f} | {r.t_collective:13.4f} | "
+            f"{r.bottleneck:>10} | {r.useful_ratio:6.2f} | "
+            f"{100*r.roofline_fraction:8.1f}% | {r.mem_gb:11.2f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reports", default="reports/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default="reports/roofline.json")
+    args = ap.parse_args()
+    rows = load_rows(Path(args.reports), args.mesh)
+    print(format_table(rows))
+    out = [{**r.__dict__,
+            "t_compute": r.t_compute, "t_memory": r.t_memory,
+            "t_collective": r.t_collective, "bottleneck": r.bottleneck,
+            "useful_ratio": r.useful_ratio,
+            "roofline_fraction": r.roofline_fraction}
+           for r in rows]
+    Path(args.json_out).write_text(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Uniform model API: ``build_model(cfg) -> ModelBundle``.
+
+The bundle is what the launcher, dry-run and FL runtime consume; it hides
+which family implements the architecture.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import griffin, mamba2, transformer
+from repro.parallel.sharding import ShardingPolicy
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    forward: Callable[[Params, dict, ShardingPolicy], Any]
+    loss: Callable[[Params, dict, ShardingPolicy], Any]
+    prefill: Callable[[Params, dict, ShardingPolicy], Any]
+    decode: Callable[[Params, dict, dict, ShardingPolicy], Any]
+    param_specs: Callable[[ShardingPolicy], Any]
+    input_specs: Callable[[ShapeConfig, ShardingPolicy], dict]
+    cache_specs: Callable[[ShapeConfig, ShardingPolicy], dict]
+    layer_unit: Callable[..., Any]
+    scan_multiplier: int          # scanned bodies per step (roofline corr.)
+    param_count: int              # analytic N (total)
+    active_param_count: int       # analytic N (active; == total when dense)
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family == "ssm":
+        mod = mamba2
+        mult = cfg.num_layers
+    elif cfg.family == "hybrid":
+        mod = griffin
+        mult = griffin._counts(cfg)[0]
+    else:
+        mod = transformer
+        mult = cfg.num_layers
+    total, active = (mod.param_count(cfg) if mod is not transformer
+                     else transformer.param_count(cfg))
+
+    def loss(params, batch, policy):
+        if mod is transformer:
+            return transformer.loss_fn(params, batch, cfg, policy)
+        logits, aux = mod.forward(params, batch, cfg, policy)
+        loss_sum, denom = transformer._ce(logits, batch["labels"])
+        l = loss_sum / jax.numpy.maximum(denom, 1.0)
+        return l, {"loss": l, "moe_aux": aux}
+
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: mod.init_params(key, cfg),
+        forward=lambda p, b, pol: mod.forward(p, b, cfg, pol),
+        loss=loss,
+        prefill=lambda p, b, pol: mod.prefill(p, b, cfg, pol),
+        decode=lambda p, c, b, pol: mod.decode_step(p, c, b, cfg, pol),
+        param_specs=lambda pol: (mod.param_specs(cfg, pol)),
+        input_specs=lambda shape, pol: mod.input_specs(cfg, shape, pol),
+        cache_specs=lambda shape, pol: mod.cache_specs(cfg, shape, pol),
+        layer_unit=lambda shape, pol, **kw: mod.layer_unit(cfg, shape, pol, **kw),
+        scan_multiplier=mult,
+        param_count=total,
+        active_param_count=active,
+    )

@@ -1,0 +1,427 @@
+"""Griffin-style hybrid (RecurrentGemma): RG-LRU recurrent blocks + local
+sliding-window MQA attention, pattern (rec, rec, attn) repeated.
+
+38 layers = 12 scanned superblocks of (rec, rec, attn) + 2 tail rec layers.
+The RG-LRU recurrence h_t = a_t·h_{t-1} + sqrt(1-a_t²)·(i_t·x_t) runs as a
+`jax.lax.associative_scan` (log-depth, unrolled in HLO — FLOPs counted
+exactly, no while-loop correction needed for the recurrence itself).
+
+Decode state is O(1) in context length: per rec layer an (B, R) f32 hidden +
+(B, 3, R) conv ring; per attn layer a (B, window, 1, Dh) rolling KV buffer —
+this is why recurrentgemma runs the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.parallel.sharding import ShardingPolicy
+
+Params = dict[str, Any]
+LRU_C = 8.0  # RG-LRU exponent constant (Griffin §2.4)
+
+
+def _counts(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(num_superblocks, num_tail_rec, layers_per_super)."""
+    per = len(cfg.block_pattern)           # 3
+    n_super = cfg.num_layers // per        # 12
+    tail = cfg.num_layers - n_super * per  # 2 (both "rec" by construction)
+    return n_super, tail, per
+
+
+# ---------------------------------------------------------------------------
+# Init / specs
+
+
+def _init_rec_mix(key, cfg: ModelConfig, dtype) -> Params:
+    d, r = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    return {
+        "wy": L.dense_init(ks[0], (d, r), dtype, d),
+        "wx": L.dense_init(ks[1], (d, r), dtype, d),
+        "conv_w": L.trunc_normal(ks[2], (4, r), dtype, 0.1),
+        "conv_b": jnp.zeros((r,), dtype),
+        "w_a": L.dense_init(ks[3], (r, r), dtype, r),
+        "b_a": jnp.zeros((r,), jnp.float32),
+        "w_i": L.dense_init(ks[4], (r, r), dtype, r),
+        "b_i": jnp.zeros((r,), jnp.float32),
+        "lam": jnp.full((r,), 0.5, jnp.float32),
+        "w_out": L.dense_init(ks[5], (r, d), dtype, r),
+    }
+
+
+def _rec_mix_spec(policy: ShardingPolicy) -> Params:
+    S = policy.spec
+    return {"wy": S(None, "tp"), "wx": S(None, "tp"),
+            "conv_w": S(None, "tp"), "conv_b": S("tp"),
+            "w_a": S(None, "tp"), "b_a": S("tp"),
+            "w_i": S(None, "tp"), "b_i": S("tp"),
+            "lam": S("tp"), "w_out": S("tp", None)}
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"norm1": L.init_norm(cfg, dtype),
+                 "norm2": L.init_norm(cfg, dtype),
+                 "mlp": L.init_mlp(k2, cfg, dtype)}
+    if kind == "rec":
+        p["mix"] = _init_rec_mix(k1, cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    return p
+
+
+def _layer_spec(cfg: ModelConfig, kind: str, policy: ShardingPolicy) -> Params:
+    S = policy.spec
+    norm = {"scale": S(None)}
+    p: Params = {"norm1": dict(norm), "norm2": dict(norm),
+                 "mlp": L.mlp_spec(cfg, policy)}
+    if kind == "rec":
+        p["mix"] = _rec_mix_spec(policy)
+    else:
+        p["attn"] = L.attention_spec(cfg, policy)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_super, tail, per = _counts(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def init_super(k):
+        ks = jax.random.split(k, per)
+        return {f"l{i}": _init_layer(ks[i], cfg, cfg.block_pattern[i], dtype)
+                for i in range(per)}
+
+    p: Params = {
+        "embed": L.init_embed(k1, cfg, dtype),
+        "supers": jax.vmap(init_super)(jax.random.split(k2, n_super)),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+    tail_keys = jax.random.split(k3, max(tail, 1))
+    p["tail"] = [_init_layer(tail_keys[i], cfg, "rec", dtype)
+                 for i in range(tail)]
+    return p
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    n_super, tail, per = _counts(cfg)
+    S = policy.spec
+    super_spec = {f"l{i}": _layer_spec(cfg, cfg.block_pattern[i], policy)
+                  for i in range(per)}
+    super_spec = jax.tree.map(
+        lambda s: jax.sharding.PartitionSpec(None, *s), super_spec)
+    return {
+        "embed": {"table": S("tp", None)},
+        "supers": super_spec,
+        "final_norm": {"scale": S(None)},
+        "tail": [_layer_spec(cfg, "rec", policy) for _ in range(tail)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+
+
+def _rglru_gates(xc: jax.Array, mix: Params):
+    """xc (..., R) conv output -> (a, gated_input) in f32."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ mix["w_a"].astype(jnp.float32) + mix["b_a"])
+    i = jax.nn.sigmoid(xf @ mix["w_i"].astype(jnp.float32) + mix["b_i"])
+    log_a = -LRU_C * jax.nn.softplus(mix["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_seq(xc: jax.Array, mix: Params) -> jax.Array:
+    """Full-sequence RG-LRU via associative scan. xc (B,S,R)."""
+    a, b = _rglru_gates(xc, mix)
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h.astype(xc.dtype)
+
+
+def _rec_mix_apply(mix: Params, h: jax.Array, cfg: ModelConfig,
+                   policy: ShardingPolicy):
+    """h (B,S,D) normed input -> (out (B,S,D), conv_tail, last_state)."""
+    gate = jax.nn.gelu((h @ mix["wy"]).astype(jnp.float32)).astype(h.dtype)
+    xr = h @ mix["wx"]
+    xr = policy.act(xr, "dp", "sp", "tp")
+    from repro.models.mamba2 import _causal_conv
+    xc = _causal_conv(xr, mix["conv_w"], mix["conv_b"])
+    hseq = rglru_seq(xc, mix)
+    hseq = policy.act(hseq, "dp", "sp", "tp")
+    out = (gate * hseq) @ mix["w_out"]
+    conv_tail = xr[:, -3:, :]
+    return policy.act(out, "dp", "sp", None), conv_tail, hseq[:, -1, :]
+
+
+def _rec_mix_decode(mix: Params, h: jax.Array, state: jax.Array,
+                    conv_buf: jax.Array, cfg: ModelConfig,
+                    policy: ShardingPolicy):
+    """h (B,1,D); state (B,R) f32; conv_buf (B,3,R)."""
+    h2 = h[:, 0]
+    gate = jax.nn.gelu((h2 @ mix["wy"]).astype(jnp.float32)).astype(h.dtype)
+    xr = h2 @ mix["wx"]
+    window = jnp.concatenate([conv_buf, xr[:, None, :]], axis=1)
+    xc = (window * mix["conv_w"][None]).sum(1) + mix["conv_b"]
+    a, b = _rglru_gates(xc, mix)
+    new_state = a * state + b
+    out = ((gate * new_state.astype(h.dtype)) @ mix["w_out"])[:, None, :]
+    return out, new_state, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies
+
+
+def _layer_apply(lp: Params, x: jax.Array, kind: str, cfg: ModelConfig,
+                 policy: ShardingPolicy, collect: bool):
+    h = L.apply_norm(lp["norm1"], x, cfg)
+    if kind == "rec":
+        out, tail, state = _rec_mix_apply(lp["mix"], h, cfg, policy)
+        cache = (tail, state) if collect else None
+    else:
+        if collect:
+            out, (k, v) = L.attention_block(lp["attn"], h, cfg, policy,
+                                            window=cfg.window_size,
+                                            return_kv=True)
+            W = cfg.window_size
+            cache = (k[:, -W:], v[:, -W:])
+        else:
+            out = L.attention_block(lp["attn"], h, cfg, policy,
+                                    window=cfg.window_size)
+            cache = None
+    x = x + out
+    h = L.apply_norm(lp["norm2"], x, cfg)
+    return x + L.mlp_block(lp["mlp"], h, cfg, policy), cache
+
+
+def _layer_decode(lp: Params, x: jax.Array, kind: str, cache, cfg: ModelConfig,
+                  policy: ShardingPolicy, pos):
+    h = L.apply_norm(lp["norm1"], x, cfg)
+    if kind == "rec":
+        state, conv = cache
+        out, state, conv = _rec_mix_decode(lp["mix"], h, state, conv, cfg,
+                                           policy)
+        new_cache = (state, conv)
+    else:
+        out, (ck, cv) = L.attention_decode(lp["attn"], h, cfg, policy, cache,
+                                           pos, window=cfg.window_size)
+        new_cache = (ck, cv)
+    x = x + out
+    h = L.apply_norm(lp["norm2"], x, cfg)
+    return x + L.mlp_block(lp["mlp"], h, cfg, policy), new_cache
+
+
+def _super_apply(sp: Params, x: jax.Array, cfg: ModelConfig,
+                 policy: ShardingPolicy, collect: bool = False):
+    caches = []
+    for i, kind in enumerate(cfg.block_pattern):
+        x, c = _layer_apply(sp[f"l{i}"], x, kind, cfg, policy, collect)
+        caches.append(c)
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# Model-level API
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy):
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg, policy)
+
+    def body(carry, sp):
+        y, _ = _super_apply(sp, carry, cfg, policy)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["supers"])
+    else:
+        n_super, _, _ = _counts(cfg)
+        for i in range(n_super):
+            sp = jax.tree.map(lambda a: a[i], params["supers"])
+            x, _ = body(x, sp)
+    for lp in params["tail"]:
+        x, _ = _layer_apply(lp, x, "rec", cfg, policy, False)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], None, x, cfg, policy)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy):
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg, policy)
+
+    def body(carry, sp):
+        y, caches = _super_apply(sp, carry, cfg, policy, collect=True)
+        (t0, s0), (t1, s1), (k2, v2) = caches
+        return y, ((s0, s1), (t0, t1), (k2, v2))
+
+    x, (states, tails, kvs) = jax.lax.scan(body, x, params["supers"])
+    tail_caches = []
+    for lp in params["tail"]:
+        x, c = _layer_apply(lp, x, "rec", cfg, policy, True)
+        tail_caches.append((c[1], c[0]))  # (state, conv_tail)
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], None, x[:, -1:], cfg, policy)
+    B, R = x.shape[0], cfg.lru_width
+    if tail_caches:
+        tail_state = jnp.stack([c[0] for c in tail_caches])
+        tail_conv = jnp.stack([c[1] for c in tail_caches])
+    else:
+        tail_state = jnp.zeros((0, B, R), jnp.float32)
+        tail_conv = jnp.zeros((0, B, 3, R), x.dtype)
+    cache = {
+        "rec_state": jnp.stack([states[0], states[1]], 1),   # (ns,2,B,R) f32
+        "rec_conv": jnp.stack([tails[0], tails[1]], 1),      # (ns,2,B,3,R)
+        "attn_k": kvs[0], "attn_v": kvs[1],                  # (ns,B,W,1,Dh)
+        "tail_state": tail_state,
+        "tail_conv": tail_conv,
+        "pos": jnp.array(batch["tokens"].shape[1], jnp.int32),
+    }
+    return logits, cache
+
+
+def decode_step(params: Params, cache: dict, batch: dict, cfg: ModelConfig,
+                policy: ShardingPolicy):
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg, policy)
+    pos = cache["pos"]
+
+    def body(carry, xs):
+        sp, st, cv, ak, av = xs
+        y = carry
+        y, c0 = _layer_decode(sp["l0"], y, "rec", (st[0], cv[0]), cfg, policy, pos)
+        y, c1 = _layer_decode(sp["l1"], y, "rec", (st[1], cv[1]), cfg, policy, pos)
+        y, c2 = _layer_decode(sp["l2"], y, "attn", (ak, av), cfg, policy, pos)
+        new_st = jnp.stack([c0[0], c1[0]])
+        new_cv = jnp.stack([c0[1], c1[1]])
+        return y, (new_st, new_cv, c2[0], c2[1])
+
+    x, (st, cv, ak, av) = jax.lax.scan(
+        body, x, (params["supers"], cache["rec_state"], cache["rec_conv"],
+                  cache["attn_k"], cache["attn_v"]))
+    tail_states, tail_convs = [], []
+    for i, lp in enumerate(params["tail"]):
+        x, c = _layer_decode(lp, x, "rec",
+                             (cache["tail_state"][i], cache["tail_conv"][i]),
+                             cfg, policy, pos)
+        tail_states.append(c[0]); tail_convs.append(c[1])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], None, x, cfg, policy)
+    tail_state = (jnp.stack(tail_states) if tail_states
+                  else cache["tail_state"])
+    tail_conv = (jnp.stack(tail_convs) if tail_convs
+                 else cache["tail_conv"])
+    new_cache = {"rec_state": st, "rec_conv": cv, "attn_k": ak, "attn_v": av,
+                 "tail_state": tail_state,
+                 "tail_conv": tail_conv, "pos": pos + 1}
+    return logits, new_cache
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                policy: ShardingPolicy) -> dict:
+    from repro.models.mamba2 import input_specs as _is
+    return _is(cfg, shape, policy)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                policy: ShardingPolicy) -> dict:
+    n_super, tail, _ = _counts(cfg)
+    B = shape.global_batch
+    R, W, Dh = cfg.lru_width, cfg.window_size, cfg.resolved_head_dim
+    W = min(W, shape.seq_len)
+    sds = policy.sds
+    return {
+        "rec_state": sds((n_super, 2, B, R), jnp.float32, None, None, "dp", "tp"),
+        "rec_conv": sds((n_super, 2, B, 3, R), jnp.bfloat16, None, None, "dp", None, "tp"),
+        "attn_k": sds((n_super, B, W, 1, Dh), jnp.bfloat16, None, "dp", "kvseq", None, None),
+        "attn_v": sds((n_super, B, W, 1, Dh), jnp.bfloat16, None, "dp", "kvseq", None, None),
+        "tail_state": sds((tail, B, R), jnp.float32, None, "dp", "tp"),
+        "tail_conv": sds((tail, B, 3, R), jnp.bfloat16, None, "dp", None, "tp"),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def param_count(cfg: ModelConfig) -> tuple[int, int]:
+    d, r, f = cfg.d_model, cfg.lru_width, cfg.d_ff
+    h, k, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    rec = 2 * d * r + r * d + 2 * r * r + 4 * r + 5 * r
+    attn = d * h * dh + 2 * d * k * dh + h * dh * d
+    mlp = 3 * d * f
+    n_super, tail, _ = _counts(cfg)
+    n_rec = 2 * n_super + tail
+    n_attn = n_super
+    total = n_rec * (rec + mlp) + n_attn * (attn + mlp) + cfg.vocab_size * d
+    return total, total
+
+
+def layer_unit(cfg: ModelConfig, shape: ShapeConfig, policy: ShardingPolicy,
+               *, unroll: bool, kind: str):
+    """Unit = one (rec, rec, attn) superblock; multiplier = n_super."""
+    ucfg = dataclasses.replace(cfg, inner_unroll=unroll)
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.param_dtype)
+    per = len(cfg.block_pattern)
+
+    def init_super(k):
+        ks = jax.random.split(k, per)
+        return {f"l{i}": _init_layer(ks[i], ucfg, ucfg.block_pattern[i], dtype)
+                for i in range(per)}
+    shapes = jax.eval_shape(lambda: init_super(jax.random.PRNGKey(0)))
+    specs = {f"l{i}": _layer_spec(ucfg, ucfg.block_pattern[i], policy)
+             for i in range(per)}
+
+    def one(sds, spec):
+        sh = (jax.sharding.NamedSharding(policy.mesh,
+                                         policy.sanitize(sds.shape, spec))
+              if policy.mesh else None)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+    sp_sds = jax.tree.map(one, shapes, specs)
+
+    if kind == "decode":
+        R, Dh = ucfg.lru_width, ucfg.resolved_head_dim
+        W = min(ucfg.window_size, S)
+        x_sds = policy.sds((B, 1, cfg.d_model), jnp.bfloat16, "dp", None, None)
+        st_sds = policy.sds((2, B, R), jnp.float32, None, "dp", "tp")
+        cv_sds = policy.sds((2, B, 3, R), jnp.bfloat16, None, "dp", None, "tp")
+        kv_sds = policy.sds((B, W, 1, Dh), jnp.bfloat16,
+                            "dp", "kvseq", None, None)
+        pos = jnp.int32(S)
+
+        def unit(sp, st, cv, ak, av, x):
+            y, c0 = _layer_decode(sp["l0"], x, "rec", (st[0], cv[0]), ucfg,
+                                  policy, pos)
+            y, c1 = _layer_decode(sp["l1"], y, "rec", (st[1], cv[1]), ucfg,
+                                  policy, pos)
+            y, c2 = _layer_decode(sp["l2"], y, "attn", (ak, av), ucfg,
+                                  policy, pos)
+            return y, c0, c1, c2
+        return unit, (sp_sds, st_sds, cv_sds, kv_sds, kv_sds, x_sds)
+
+    x_sds = policy.sds((B, S, cfg.d_model), jnp.bfloat16, "dp", "sp", None)
+    if kind == "train":
+        def unit(sp, x):
+            def f(sp_, x_):
+                y, _ = _super_apply(sp_, x_, ucfg, policy)
+                return y.astype(jnp.float32).sum()
+            return jax.grad(f, argnums=(0, 1))(sp, x)
+        return unit, (sp_sds, x_sds)
+
+    def unit(sp, x):
+        return _super_apply(sp, x, ucfg, policy)[0]
+    return unit, (sp_sds, x_sds)

@@ -1,0 +1,480 @@
+"""Shared neural building blocks (pure JAX, init/apply style).
+
+Conventions:
+  * params are nested dicts of jnp arrays; ``param_dtype`` (bf16) storage.
+  * activations bf16; softmax/normalization statistics in f32.
+  * every function takes a ShardingPolicy and constrains the activations it
+    produces — this is what makes the dry-run shardings coherent.
+  * attention over long sequences is flash-style: a `lax.scan` over KV chunks
+    with an online-softmax carry, O(S) memory (TPU target: same blocking a
+    Pallas kernel would use; on the CPU dry-run it stays pure XLA).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import ShardingPolicy
+
+Params = dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+
+
+def trunc_normal(key, shape, dtype, scale: float):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, shape, dtype, fan_in: int):
+    return trunc_normal(key, shape, dtype, 1.0 / math.sqrt(fan_in))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    s = 1.0 + s if plus_one else s
+    return (normed * s).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    normed = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig, dtype) -> Params:
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), dtype)}
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"], plus_one=cfg.embed_scale)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float):
+    """positions (...,) -> cos/sin tables (..., dim/2) in f32."""
+    freqs = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32)
+                    / dim * math.log(theta))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, S, H, Dh); positions (S,) or (B, S)."""
+    dh = x.shape[-1]
+    cos, sin = rope_tables(positions, dh, theta)
+    if cos.ndim == 2:  # (S, dh/2) -> broadcast over batch and heads
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:              # (B, S, dh/2)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, k, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    keys = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(keys[0], (d, h, dh), dtype, d),
+        "wk": dense_init(keys[1], (d, k, dh), dtype, d),
+        "wv": dense_init(keys[2], (d, k, dh), dtype, d),
+        "wo": dense_init(keys[3], (h, dh, d), dtype, h * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((k, dh), dtype)
+        p["bv"] = jnp.zeros((k, dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def attention_spec(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    """PartitionSpecs matching init_attention's structure."""
+    S = policy.spec
+    p: Params = {
+        "wq": S("fsdp", "tp", None),
+        "wk": S("fsdp", "tp", None),
+        "wv": S("fsdp", "tp", None),
+        "wo": S("tp", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = S("tp", None)
+        p["bk"] = S("tp", None)
+        p["bv"] = S("tp", None)
+    if cfg.qk_norm:
+        p["q_norm"] = S(None)
+        p["k_norm"] = S(None)
+    return p
+
+
+def _head_pad(cfg: ModelConfig, policy: ShardingPolicy) -> int:
+    """Extra q-head groups (per KV head) to make heads divide the TP axis."""
+    if not cfg.pad_attn_heads_to_tp:
+        return 0
+    tp = policy.axis_size("tp")
+    k = cfg.num_kv_heads
+    g = cfg.num_heads // k
+    if tp <= 1 or (k * g) % tp == 0:
+        return 0
+    gp = g
+    while (k * gp) % tp:
+        gp += 1
+    return gp - g
+
+
+def _pad_q_weight(w: jax.Array, cfg: ModelConfig, gpad: int) -> jax.Array:
+    """(D, H, Dh) -> (D, K*(G+gpad), Dh), zero groups appended per KV head."""
+    d, h, dh = w.shape
+    k = cfg.num_kv_heads
+    wk = w.reshape(d, k, h // k, dh)
+    wk = jnp.pad(wk, ((0, 0), (0, 0), (0, gpad), (0, 0)))
+    return wk.reshape(d, -1, dh)
+
+
+def _pad_o_weight(w: jax.Array, cfg: ModelConfig, gpad: int) -> jax.Array:
+    """(H, Dh, D) -> (K*(G+gpad), Dh, D), zero rows for padded heads."""
+    h, dh, d = w.shape
+    k = cfg.num_kv_heads
+    wk = w.reshape(k, h // k, dh, d)
+    wk = jnp.pad(wk, ((0, 0), (0, gpad), (0, 0), (0, 0)))
+    return wk.reshape(-1, dh, d)
+
+
+def _qkv(p: Params, x: jax.Array, cfg: ModelConfig, policy: ShardingPolicy,
+         positions: jax.Array):
+    wq = p["wq"]
+    gpad = _head_pad(cfg, policy)
+    if gpad:
+        wq = _pad_q_weight(wq, cfg, gpad)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        bq = p["bq"]
+        if gpad:
+            dh = bq.shape[-1]
+            bq = jnp.pad(bq.reshape(cfg.num_kv_heads, -1, dh),
+                         ((0, 0), (0, gpad), (0, 0))).reshape(-1, dh)
+        q, k, v = q + bq, k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = policy.act(q, "dp", "sp", "tp", None)
+    k = policy.act(k, "dp", "sp", "tp", None)
+    v = policy.act(v, "dp", "sp", "tp", None)
+    return q, k, v
+
+
+def _chunk_mask(q_idx, j, chunk: int, S: int, causal: bool, window: int):
+    k_idx = j * chunk + jnp.arange(chunk)
+    mask = jnp.broadcast_to((k_idx < S)[None, :], (q_idx.shape[0], chunk))
+    if causal:
+        mask &= q_idx[:, None] >= k_idx[None, :]
+    if window:
+        mask &= q_idx[:, None] - k_idx[None, :] < window
+    return mask
+
+
+def _flash_fwd_scan(qg, ks, vs, *, chunk, S, causal, window, unroll):
+    """qg (B,S,K,G,Dh); ks/vs (nc,B,c,K,Dh) -> (out grouped f32, lse f32)."""
+    B, _, K, G, Dh = qg.shape
+    scale = 1.0 / math.sqrt(Dh)
+    q_idx = jnp.arange(S)
+
+    def body(carry, xs):
+        m, l, acc, j = carry
+        kj, vj = xs
+        s = jnp.einsum("bskgd,bckd->bkgsc", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(q_idx, j, chunk, S, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        # §Perf: probabilities in bf16 after the f32 max-subtraction — exact
+        # enough post-shift (p in [0,1]); the row-sum accumulates in f32.
+        # Halves the HBM traffic of the softmax chain (the memory-bound term
+        # of long-context prefill).
+        p = jnp.exp((s - m_new[..., None]).astype(kj.dtype))
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1, dtype=jnp.float32)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgsc,bckd->bkgsd", p, vj).astype(jnp.float32)
+        return (m_new, l_new, acc_new, j + 1), None
+
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, Dh), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, 0), (ks, vs),
+                                     unroll=unroll)
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, chunk: int, causal: bool, window: int, unroll: bool):
+    """Flash attention with an FA2-style custom VJP: the backward pass
+    recomputes per-chunk probabilities from the saved logsumexp instead of
+    letting scan-autodiff save the (B,K,G,S,chunk) tensors per chunk — this
+    is what keeps train-time attention memory O(S) instead of O(S^2)."""
+    out, _ = _flash_impl(q, k, v, chunk, causal, window, unroll)
+    return out
+
+
+def _split_chunks(x, n_chunks, chunk):
+    B, _, K, Dh = x.shape
+    return x.reshape(B, n_chunks, chunk, K, Dh).transpose(1, 0, 2, 3, 4)
+
+
+def _flash_impl(q, k, v, chunk, causal, window, unroll):
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    chunk = min(chunk, S)
+    S_kv = ((S + chunk - 1) // chunk) * chunk
+    if S_kv != S:  # pad KV to a chunk multiple; padded keys are masked out
+        pad = ((0, 0), (0, S_kv - S), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    qg = q.reshape(B, S, K, G, Dh)
+    ks = _split_chunks(k, S_kv // chunk, chunk)
+    vs = _split_chunks(v, S_kv // chunk, chunk)
+    outg, lse = _flash_fwd_scan(qg, ks, vs, chunk=chunk, S=S, causal=causal,
+                                window=window, unroll=unroll)
+    out = outg.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dh).astype(q.dtype)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, chunk, causal, window, unroll):
+    out, lse = _flash_impl(q, k, v, chunk, causal, window, unroll)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(chunk, causal, window, unroll, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    chunk = min(chunk, S)
+    S_kv = ((S + chunk - 1) // chunk) * chunk
+    if S_kv != S:
+        pad = ((0, 0), (0, S_kv - S), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    n_chunks = S_kv // chunk
+    scale = 1.0 / math.sqrt(Dh)
+
+    qg = q.reshape(B, S, K, G, Dh)
+    dog = dout.reshape(B, S, K, G, Dh).transpose(0, 2, 3, 1, 4)  # (B,K,G,S,Dh)
+    outg = out.reshape(B, S, K, G, Dh).transpose(0, 2, 3, 1, 4)
+    delta = jnp.sum(dog.astype(jnp.float32) * outg.astype(jnp.float32), -1)
+    ks = _split_chunks(k, n_chunks, chunk)
+    vs = _split_chunks(v, n_chunks, chunk)
+    q_idx = jnp.arange(S)
+
+    def body(carry, xs):
+        dq_acc, j = carry
+        kj, vj = xs
+        s = jnp.einsum("bskgd,bckd->bkgsc", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(q_idx, j, chunk, S, causal, window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                      # (B,K,G,S,c) f32
+        pb = p.astype(vj.dtype)
+        dv_j = jnp.einsum("bkgsc,bkgsd->bckd", pb, dog)
+        dp = jnp.einsum("bkgsd,bckd->bkgsc", dog, vj,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta[..., None]) * scale).astype(kj.dtype)
+        dq_acc = dq_acc + jnp.einsum("bkgsc,bckd->bskgd", ds, kj,
+                                     preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bkgsc,bskgd->bckd", ds, qg)
+        return (dq_acc, j + 1), (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, S, K, G, Dh), jnp.float32)
+    (dq, _), (dks, dvs) = jax.lax.scan(body, (dq0, 0), (ks, vs),
+                                       unroll=unroll)
+    dq = dq.reshape(B, S, H, Dh).astype(q.dtype)
+    merge = lambda c: c.transpose(1, 0, 2, 3, 4).reshape(B, S_kv, K, Dh)[:, :S]
+    return dq, merge(dks).astype(k.dtype), merge(dvs).astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    chunk: int, causal: bool = True, window: int = 0,
+                    policy: ShardingPolicy, unroll: bool = False) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks.
+
+    q (B,S,H,Dh), k/v (B,S,K,Dh) -> (B,S,H,Dh).  GQA via head grouping.
+    ``window`` > 0 applies a sliding-window causal mask (local attention).
+    """
+    out = _flash(q, k, v, chunk, causal, window, unroll)
+    return policy.act(out, "dp", "sp", "tp", None)
+
+
+def attention_block(p: Params, x: jax.Array, cfg: ModelConfig,
+                    policy: ShardingPolicy, *, window: int = 0,
+                    positions: jax.Array | None = None,
+                    return_kv: bool = False):
+    """Full-sequence causal attention (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _qkv(p, x, cfg, policy, positions)
+    out = flash_attention(q, k, v, chunk=cfg.attn_chunk, window=window,
+                          policy=policy, unroll=cfg.inner_unroll)
+    wo = p["wo"]
+    gpad = _head_pad(cfg, policy)
+    if gpad:
+        wo = _pad_o_weight(wo, cfg, gpad)
+    proj = jnp.einsum("bshk,hkd->bsd", out, wo)
+    proj = policy.act(proj, "dp", "sp", None)
+    if return_kv:
+        return proj, (k, v)
+    return proj
+
+
+def attention_decode(p: Params, x: jax.Array, cfg: ModelConfig,
+                     policy: ShardingPolicy, kv_cache: tuple[jax.Array, jax.Array],
+                     pos: jax.Array, *, window: int = 0):
+    """Single-token decode against a KV cache.
+
+    x (B,1,D); cache k/v (B,Smax,K,Dh); pos: scalar current position.
+    With ``policy.kvseq_shard`` the cache is sequence-sharded over the model
+    axis and the softmax reduces across it (GSPMD inserts the collectives).
+    For local attention (window>0) the cache is a rolling buffer of length
+    ``window`` written at ``pos % window``.
+    """
+    ck, cv = kv_cache
+    B, Smax, K, Dh = ck.shape
+    gpad = _head_pad(cfg, policy)
+    H = cfg.num_heads + K * gpad
+    G = H // K
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, policy, positions)
+
+    slot = pos % Smax if window else pos
+    ck = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype), (0, slot, 0, 0))
+    ck = policy.act(ck, "dp", "kvseq", None, None)
+    cv = policy.act(cv, "dp", "kvseq", None, None)
+
+    qg = q.reshape(B, K, G, Dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, ck).astype(jnp.float32)
+    s = s / math.sqrt(Dh)
+    idx = jnp.arange(Smax)
+    if window:
+        valid = (idx <= slot) | (pos >= Smax)  # rolling buffer: all valid once full
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, cv).reshape(B, 1, H, Dh)
+    wo = p["wo"]
+    if gpad:
+        wo = _pad_o_weight(wo, cfg, gpad)
+    proj = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return policy.act(proj, "dp", None, None), (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def init_mlp(key, cfg: ModelConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 3)
+    p: Params = {"wi": dense_init(keys[0], (d, f), dtype, d),
+                 "wo": dense_init(keys[1], (f, d), dtype, f)}
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        p["wg"] = dense_init(keys[2], (d, f), dtype, d)
+    return p
+
+
+def mlp_spec(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    S = policy.spec
+    p: Params = {"wi": S("fsdp", "tp"), "wo": S("tp", "fsdp")}
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        p["wg"] = S("fsdp", "tp")
+    return p
+
+
+def mlp_block(p: Params, x: jax.Array, cfg: ModelConfig,
+              policy: ShardingPolicy) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if cfg.mlp_variant == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g
+    elif cfg.mlp_variant == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype) * g
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = policy.act(h, "dp", "sp", "tp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return policy.act(out, "dp", "sp", None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+
+
+def init_embed(key, cfg: ModelConfig, dtype) -> Params:
+    p: Params = {"table": trunc_normal(key, (cfg.vocab_size, cfg.d_model),
+                                       dtype, 1.0)}
+    return p
+
+
+def embed_lookup(p: Params, tokens: jax.Array, cfg: ModelConfig,
+                 policy: ShardingPolicy) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(x.dtype)
+    return policy.act(x, "dp", "sp", None)
+
+
+def unembed(p_embed: Params, p_unembed: jax.Array | None, x: jax.Array,
+            cfg: ModelConfig, policy: ShardingPolicy) -> jax.Array:
+    table = p_embed["table"] if p_unembed is None else p_unembed
+    if p_unembed is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, table)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, table)
+    return policy.act(logits, "dp", "sp", "tp")

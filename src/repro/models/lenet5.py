@@ -1,0 +1,77 @@
+"""LeNet-5 — the paper's real-world model (Table II), exactly 44,426 params.
+
+28x28 input, valid 5x5 convs + 2x2 average pooling (classic MNIST variant):
+    conv1 5x5x1x6   +6   =    156
+    conv2 5x5x6x16  +16  =  2,416
+    fc1   256->120  +120 = 30,840
+    fc2   120->84   +84  = 10,164
+    fc3   84->10    +10  =    850
+                   total = 44,426
+(The paper's Protobuf sizes 177,730/177,748 B = 18+2+2+(4 bytes * 44,426 +
+ 4 header) [+metadata] pin this exact variant.)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+PARAM_COUNT = 44_426
+
+
+def init_params(key) -> Params:
+    ks = jax.random.split(key, 5)
+
+    def glorot(k, shape, fan_in):
+        return jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan_in)
+
+    return {
+        "conv1": {"w": glorot(ks[0], (5, 5, 1, 6), 25),
+                  "b": jnp.zeros((6,), jnp.float32)},
+        "conv2": {"w": glorot(ks[1], (5, 5, 6, 16), 150),
+                  "b": jnp.zeros((16,), jnp.float32)},
+        "fc1": {"w": glorot(ks[2], (256, 120), 256),
+                "b": jnp.zeros((120,), jnp.float32)},
+        "fc2": {"w": glorot(ks[3], (120, 84), 120),
+                "b": jnp.zeros((84,), jnp.float32)},
+        "fc3": {"w": glorot(ks[4], (84, 10), 84),
+                "b": jnp.zeros((10,), jnp.float32)},
+    }
+
+
+def _avg_pool(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID") / 4.0
+
+
+def forward(params: Params, images: jax.Array) -> jax.Array:
+    """images (B, 28, 28, 1) -> logits (B, 10)."""
+    x = jax.lax.conv_general_dilated(
+        images, params["conv1"]["w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv1"]["b"]
+    x = _avg_pool(jnp.tanh(x))
+    x = jax.lax.conv_general_dilated(
+        x, params["conv2"]["w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["conv2"]["b"]
+    x = _avg_pool(jnp.tanh(x))
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jnp.tanh(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def loss_fn(params: Params, batch: dict) -> tuple[jax.Array, dict]:
+    logits = forward(params, batch["images"])
+    labels = batch["labels"]
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(ll, labels[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "accuracy": acc}
+
+
+def num_params(params: Params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

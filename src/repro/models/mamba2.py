@@ -1,0 +1,385 @@
+"""Mamba2 (SSD — state-space duality), attention-free LM.
+
+Training/prefill uses the chunked SSD algorithm (quadratic intra-chunk,
+linear inter-chunk via a chunk-level decay matrix — no while loop, so HLO
+FLOPs are counted exactly).  Decode carries a constant-size recurrent state
+(B, H, P, N) + a depthwise-conv ring buffer, which is what makes the
+``long_500k`` shape (524k context, batch 1) run in O(1) memory per token.
+
+TPU adaptation (DESIGN.md §4): the SSD chunk structure maps onto MXU matmuls
+(chunk=256 aligns contraction dims to 128); the selective-scan recurrence of
+Mamba-1-style CUDA kernels is replaced by the matmul-dominant SSD form, which
+is the TPU-native formulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.parallel.sharding import ShardingPolicy
+
+Params = dict[str, Any]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_state, cfg.ssm_ngroups
+
+
+# ---------------------------------------------------------------------------
+# Init / specs
+
+
+def init_block(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    din, H, N, G = _dims(cfg)
+    conv_dim = din + 2 * G * N
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": {"scale": jnp.ones((d,), dtype)},
+        "w_z": L.dense_init(ks[0], (d, din), dtype, d),
+        "w_x": L.dense_init(ks[1], (d, din), dtype, d),
+        "w_B": L.dense_init(ks[2], (d, G * N), dtype, d),
+        "w_C": L.dense_init(ks[3], (d, G * N), dtype, d),
+        "w_dt": L.dense_init(ks[4], (d, H), dtype, d),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "conv_w": L.trunc_normal(ks[5], (cfg.ssm_conv, conv_dim), dtype, 0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "gate_norm": {"scale": jnp.ones((din,), dtype)},
+        "w_out": L.dense_init(ks[6], (din, d), dtype, din),
+    }
+
+
+def block_specs(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    """TP over d_inner for the projections; the 24-head SSD core stays
+    replicated (24 does not divide the 16-way axis).  A pure-DP variant
+    (everything replicated) was tried in §Perf and refuted: it removes the
+    proj->SSD reshard collectives (3.6->1.6 s) but triples the memory term
+    (replicated projection reads), net-worse for the step time."""
+    S = policy.spec
+    return {
+        "norm": {"scale": S(None)},
+        "w_z": S(None, "tp"), "w_x": S(None, "tp"),
+        "w_B": S(None, None), "w_C": S(None, None),
+        "w_dt": S(None, "tp"),
+        "dt_bias": S("tp"), "A_log": S("tp"), "D_skip": S("tp"),
+        "conv_w": S(None, None), "conv_b": S(None),
+        "gate_norm": {"scale": S("tp")},
+        "w_out": S("tp", None),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    block_keys = jax.random.split(k2, cfg.num_layers)
+    p: Params = {
+        "embed": L.init_embed(k1, cfg, dtype),
+        "blocks": jax.vmap(lambda k: init_block(k, cfg, dtype))(block_keys),
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), dtype)},
+    }
+    return p
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    S = policy.spec
+    blocks = jax.tree.map(lambda s: jax.sharding.PartitionSpec(None, *s),
+                          block_specs(cfg, policy))
+    return {"embed": {"table": S("tp", None)},
+            "blocks": blocks,
+            "final_norm": {"scale": S(None)}}
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., l) -> (..., l, l) lower-triangular segment sums."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    # segsum[t, s] = sum_{i=s+1..t} a_i = cs[t] - cs[s]  (s <= t, else -inf)
+    return jnp.where(mask, cs[..., :, None] - cs[..., None, :], -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, chunk: int):
+    """Chunked SSD.  x (b,s,h,p); a (b,s,h) [= A·dt, negative];
+    B, C (b,s,n) [ngroups=1] -> y (b,s,h,p)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    s_orig = s
+    if s % chunk:  # pad tail; a=0 (no decay), x/B=0 (no state change)
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    a_cum = jnp.cumsum(ac, axis=-1)                         # (b,h,c,l)
+    Ldec = jnp.exp(_segsum(ac))                             # (b,h,c,l,l)
+
+    # intra-chunk (quadratic, attention-like)
+    CB = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)
+    y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp", CB, Ldec.astype(CB.dtype),
+                        xc)
+
+    # chunk states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc,
+                        decay_states.astype(Bc.dtype), xc)
+
+    # inter-chunk recurrence via chunk-level decay matrix (no while loop)
+    chunk_decay = a_cum[..., -1]                             # (b,h,c)
+    pad = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    dec = jnp.exp(_segsum(pad))                              # (b,h,c+1,c+1)
+    dec = jnp.where(jnp.isfinite(dec), dec, 0.0)
+    init = jnp.zeros((b, 1, h, p, n), x.dtype)
+    all_states = jnp.concatenate([init, states], axis=1)     # (b,c+1,h,p,n)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", dec.astype(x.dtype),
+                            all_states)
+    prev = new_states[:, :-1]                                # (b,c,h,p,n)
+
+    out_decay = jnp.exp(a_cum)                               # (b,h,c,l)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev,
+                       out_decay.astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    final_state = new_states[:, -1]                          # (b,h,p,n)
+    return y, final_state
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv; x (B,S,C), w (W,C) -> (B,S,C). Shift-and-add
+    (W is 4): no conv primitive needed, counted exactly in HLO."""
+    W = w.shape[0]
+    S = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i:i + S, :] * w[i]
+    return out + b
+
+
+def block_apply(blk: Params, x: jax.Array, cfg: ModelConfig,
+                policy: ShardingPolicy):
+    """One Mamba2 block (full sequence) -> (y, final_state, conv_tail)."""
+    din, H, N, G = _dims(cfg)
+    P = cfg.ssm_head_dim
+    B_, S, D = x.shape
+    h = L.rms_norm(x, blk["norm"]["scale"])
+    z = jnp.einsum("bsd,di->bsi", h, blk["w_z"])
+    xs = jnp.einsum("bsd,di->bsi", h, blk["w_x"])
+    Bp = jnp.einsum("bsd,dn->bsn", h, blk["w_B"])
+    Cp = jnp.einsum("bsd,dn->bsn", h, blk["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", h, blk["w_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + blk["dt_bias"])
+
+    conv_in = jnp.concatenate([xs, Bp, Cp], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, blk["conv_w"], blk["conv_b"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    xs, Bp, Cp = (conv_out[..., :din], conv_out[..., din:din + G * N],
+                  conv_out[..., din + G * N:])
+    xs = policy.act(xs, "dp", "sp", "tp")
+
+    A = -jnp.exp(blk["A_log"])                       # (H,)
+    a = (A * dt)                                     # (b,s,h) f32
+    xh = xs.reshape(B_, S, H, P)
+    xh = xh * dt[..., None].astype(xh.dtype)         # dt-scaled input
+    y, final_state = ssd_chunked(xh, a, Bp, Cp, min(cfg.ssm_chunk, S))
+    y = y + xh * blk["D_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, din)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   blk["gate_norm"]["scale"])
+    y = policy.act(y, "dp", "sp", "tp")
+    out = jnp.einsum("bsi,id->bsd", y, blk["w_out"])
+    conv_tail = conv_in[:, -(cfg.ssm_conv - 1):, :]  # ring tail for decode
+    return policy.act(out, "dp", "sp", None), final_state, conv_tail
+
+
+def block_decode(blk: Params, x: jax.Array, state, conv_buf, cfg: ModelConfig,
+                 policy: ShardingPolicy):
+    """One-token recurrent update. x (B,1,D); state (B,H,P,N);
+    conv_buf (B, W-1, conv_dim)."""
+    din, H, N, G = _dims(cfg)
+    P = cfg.ssm_head_dim
+    B_ = x.shape[0]
+    h = L.rms_norm(x, blk["norm"]["scale"])[:, 0]     # (B,D)
+    z = h @ blk["w_z"]
+    xs = h @ blk["w_x"]
+    Bp = h @ blk["w_B"]
+    Cp = h @ blk["w_C"]
+    dt = jax.nn.softplus((h @ blk["w_dt"]).astype(jnp.float32)
+                         + blk["dt_bias"])            # (B,H)
+
+    conv_in = jnp.concatenate([xs, Bp, Cp], axis=-1)  # (B, conv_dim)
+    window = jnp.concatenate([conv_buf, conv_in[:, None, :]], axis=1)
+    conv_out = (window * blk["conv_w"][None]).sum(1) + blk["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs, Bp, Cp = (conv_out[:, :din], conv_out[:, din:din + G * N],
+                  conv_out[:, din + G * N:])
+
+    A = -jnp.exp(blk["A_log"])
+    decay = jnp.exp(A * dt)                           # (B,H)
+    xh = xs.reshape(B_, H, P) * dt[..., None].astype(xs.dtype)
+    upd = jnp.einsum("bhp,bn->bhpn", xh.astype(jnp.float32),
+                     Bp.astype(jnp.float32))
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state,
+                   Cp.astype(jnp.float32)).astype(x.dtype)
+    y = y + xh * blk["D_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(B_, din)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                   blk["gate_norm"]["scale"])
+    out = (y @ blk["w_out"])[:, None, :]
+    return out, new_state, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Model-level API (mirrors transformer.py)
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy):
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg, policy)
+
+    def body(carry, blk):
+        out, _, _ = block_apply(blk, carry, cfg, policy)
+        return carry + out, jnp.zeros((), jnp.float32)
+
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for i in range(cfg.num_layers):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, _ = body(x, blk)
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = L.unembed(params["embed"], None, x, cfg, policy)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy):
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg, policy)
+
+    def body(carry, blk):
+        out, state, tail = block_apply(blk, carry, cfg, policy)
+        return carry + out, (state, tail)
+
+    x, (states, tails) = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = L.unembed(params["embed"], None, x[:, -1:], cfg, policy)
+    cache = {"state": states, "conv": tails,
+             "pos": jnp.array(batch["tokens"].shape[1], jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: Params, cache: dict, batch: dict, cfg: ModelConfig,
+                policy: ShardingPolicy):
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg, policy)
+
+    def body(carry, xs):
+        blk, state, conv = xs
+        out, ns, nc = block_decode(blk, carry, state, conv, cfg, policy)
+        return carry + out, (ns, nc)
+
+    x, (states, convs) = jax.lax.scan(
+        body, x, (params["blocks"], cache["state"], cache["conv"]))
+    x = L.rms_norm(x, params["final_norm"]["scale"])
+    logits = L.unembed(params["embed"], None, x, cfg, policy)
+    return logits, {"state": states, "conv": convs, "pos": cache["pos"] + 1}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                policy: ShardingPolicy) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": policy.sds((B, 1), jnp.int32, "dp", None)}
+    batch = {"tokens": policy.sds((B, S), jnp.int32, "dp", None)}
+    if shape.kind == "train":
+        batch["labels"] = policy.sds((B, S), jnp.int32, "dp", None)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                policy: ShardingPolicy) -> dict:
+    din, H, N, G = _dims(cfg)
+    B = shape.global_batch
+    Lr = cfg.num_layers
+    conv_dim = din + 2 * G * N
+    return {
+        "state": policy.sds((Lr, B, H, cfg.ssm_head_dim, N), jnp.float32,
+                            None, "dp", None, None, None),
+        "conv": policy.sds((Lr, B, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16,
+                           None, "dp", None, None),
+        "pos": policy.sds((), jnp.int32),
+    }
+
+
+def param_count(cfg: ModelConfig) -> tuple[int, int]:
+    din, H, N, G = _dims(cfg)
+    d = cfg.d_model
+    conv_dim = din + 2 * G * N
+    per = (2 * d * din + 2 * d * G * N + d * H + 3 * H
+           + cfg.ssm_conv * conv_dim + conv_dim + din + d + din * d)
+    total = cfg.num_layers * per + cfg.vocab_size * d
+    return total, total
+
+
+def layer_unit(cfg: ModelConfig, shape: ShapeConfig, policy: ShardingPolicy,
+               *, unroll: bool, kind: str):
+    ucfg = dataclasses.replace(cfg, inner_unroll=unroll)
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.param_dtype)
+    shapes = jax.eval_shape(lambda: init_block(jax.random.PRNGKey(0), ucfg, dtype))
+    specs = block_specs(ucfg, policy)
+
+    def one(sds, spec):
+        sh = (jax.sharding.NamedSharding(policy.mesh,
+                                         policy.sanitize(sds.shape, spec))
+              if policy.mesh else None)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+    blk_sds = jax.tree.map(one, shapes, specs)
+
+    if kind == "decode":
+        din, H, N, G = _dims(ucfg)
+        conv_dim = din + 2 * G * N
+        x_sds = policy.sds((B, 1, cfg.d_model), jnp.bfloat16, "dp", None, None)
+        st_sds = policy.sds((B, H, cfg.ssm_head_dim, N), jnp.float32,
+                            "dp", None, None, None)
+        cv_sds = policy.sds((B, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16,
+                            "dp", None, None)
+
+        def unit(blk, x, state, conv):
+            return block_decode(blk, x, state, conv, ucfg, policy)
+        return unit, (blk_sds, x_sds, st_sds, cv_sds)
+
+    x_sds = policy.sds((B, S, cfg.d_model), jnp.bfloat16, "dp", "sp", None)
+    if kind == "train":
+        def unit(blk, x):
+            def f(blk_, x_):
+                y, _, _ = block_apply(blk_, x_, ucfg, policy)
+                return y.astype(jnp.float32).sum()
+            return jax.grad(f, argnums=(0, 1))(blk, x)
+        return unit, (blk_sds, x_sds)
+
+    def unit(blk, x):
+        return block_apply(blk, x, ucfg, policy)[0]
+    return unit, (blk_sds, x_sds)

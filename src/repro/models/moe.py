@@ -1,0 +1,219 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-based dispatch, EP.
+
+Design (TPU-native, pure GSPMD — no torch-style all_to_all emulation):
+
+  * tokens stay sharded over the data axis; routing, position-in-expert and
+    capacity dropping are computed *per data shard* by reshaping the token
+    dim to (data_shards, tokens_per_shard) so the cumsum is local;
+  * expert weights are sharded over the model axis (EP); the dispatch gather
+    is local (indices and operand aligned on the data axis), the expert FFN
+    is local (expert dim aligned on the model axis), and the only collective
+    is the combine all-reduce of (tokens, d_model) partial sums over "model"
+    — the same communication volume a hand-written a2a implementation needs
+    on the combine side, with zero dispatch traffic;
+  * static shapes throughout: per-(shard, expert) capacity buffers, overflow
+    tokens dropped (GShard/Switch semantics), dropped slots masked via an
+    out-of-range index + mode="fill"/"drop".
+
+FLOPs are proportional to *active* parameters (top-k), not total experts —
+this is what makes the MoE roofline honest.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.parallel.sharding import ShardingPolicy
+
+Params = dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(key, 4)
+    return {
+        "router": dense_init(keys[0], (d, e), jnp.float32, d),
+        "w_in": dense_init(keys[1], (e, d, f), dtype, d),
+        "w_gate": dense_init(keys[2], (e, d, f), dtype, d),
+        "w_out": dense_init(keys[3], (e, f, d), dtype, f),
+    }
+
+
+def moe_spec(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    S = policy.spec
+    return {
+        "router": S(None, None),
+        "w_in": S("tp", "fsdp", None),
+        "w_gate": S("tp", "fsdp", None),
+        "w_out": S("tp", None, "fsdp"),
+    }
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _dispatch(xt, safe_idx, valid, policy):
+    """Batched gather xt (g,Tl,D) by safe_idx (g,EC) -> (g,EC,D); OOB rows
+    zeroed by ``valid``.  Custom VJP (§Perf H2): GSPMD loses the dp-sharding
+    of the gather's cotangent (it materialized a replicated, global-shaped
+    f32 scatter feeding a 3.2 GB/chip all-reduce per layer); the explicit
+    backward scatter-add is constrained to the forward's dp sharding."""
+    g = jax.vmap(lambda xg, ig: jnp.take(xg, ig, axis=0, mode="clip"))(
+        xt, safe_idx)
+    return g * valid[..., None].astype(g.dtype)
+
+
+def _dispatch_fwd(xt, safe_idx, valid, policy):
+    return _dispatch(xt, safe_idx, valid, policy), (xt.shape, safe_idx, valid)
+
+
+def _dispatch_bwd(policy, res, ct):
+    (dsize, Tl, D), safe_idx, valid = res
+    scatter_idx = jnp.where(valid, safe_idx, Tl)
+    ct = policy.act(ct, "dp", "tp", None)
+
+    def scat(cts, idx):
+        return jnp.zeros((Tl + 1, D), cts.dtype).at[idx].add(
+            cts, mode="drop")[:Tl]
+
+    dxt = jax.vmap(scat)(ct, scatter_idx)
+    return policy.act(dxt, "dp", None, None), None, None
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _combine(out_flat, safe_idx, valid, Tl, policy):
+    """Batched scatter-add out_flat (g,EC,D) into (g,Tl,D).  Custom VJP with
+    dp-sharded cotangent gather (mirror of _dispatch)."""
+    D = out_flat.shape[-1]
+    scatter_idx = jnp.where(valid, safe_idx, Tl)
+
+    def scat(vals, idx):
+        return jnp.zeros((Tl + 1, D), vals.dtype).at[idx].add(
+            vals, mode="drop")[:Tl]
+
+    return jax.vmap(scat)(out_flat, scatter_idx)
+
+
+def _combine_fwd(out_flat, safe_idx, valid, Tl, policy):
+    return (_combine(out_flat, safe_idx, valid, Tl, policy),
+            (safe_idx, valid))
+
+
+def _combine_bwd(Tl, policy, res, ct):
+    safe_idx, valid = res
+    ct = policy.act(ct, "dp", None, None)
+    d_flat = jax.vmap(lambda cg, ig: jnp.take(cg, ig, axis=0, mode="clip"))(
+        ct, safe_idx)
+    d_flat = d_flat * valid[..., None].astype(d_flat.dtype)
+    return policy.act(d_flat, "dp", "tp", None), None, None
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _router_logits(xt, w, policy):
+    """Routing einsum with a dp-sharding-pinned backward (§Perf H2 iter3:
+    GSPMD materialized d(xt) replicated-global in f32 -> 1.6 GB/chip
+    all-reduce per layer per microbatch)."""
+    return jnp.einsum("gtd,de->gte", xt, w.astype(xt.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def _router_fwd(xt, w, policy):
+    return _router_logits(xt, w, policy), (xt, w)
+
+
+def _router_bwd(policy, res, ct):
+    xt, w = res
+    ct = policy.act(ct, "dp", None, None)
+    dxt = jnp.einsum("gte,de->gtd", ct, w.astype(jnp.float32)).astype(xt.dtype)
+    dxt = policy.act(dxt, "dp", None, None)
+    dw = jnp.einsum("gtd,gte->de", xt.astype(jnp.float32),
+                    ct).astype(w.dtype)
+    return dxt, dw
+
+
+_router_logits.defvjp(_router_fwd, _router_bwd)
+
+
+def moe_block(p: Params, x: jax.Array, cfg: ModelConfig,
+              policy: ShardingPolicy) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    dsize = policy.axis_size("dp")
+    if T % dsize:
+        dsize = 1
+    Tl = T // dsize  # tokens per data shard
+
+    xt = x.reshape(dsize, Tl, D)
+    xt = policy.act(xt, "dp", None, None)
+
+    # -- routing (f32 accumulation; bf16 x never materialized as f32) --------
+    logits = _router_logits(xt, p["router"], policy)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (g, Tl, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)              # (g, Tl, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                  # renormalize
+
+    # load-balance aux loss (Switch): E * sum_e fraction_e * prob_e
+    onehot_k = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)  # (g,Tl,k,E)
+    token_mask = onehot_k.sum(2)                                 # (g, Tl, E)
+    fraction = token_mask.mean(1)                                # (g, E)
+    prob_mean = probs.mean(1)                                    # (g, E)
+    aux = E * jnp.mean(jnp.sum(fraction * prob_mean, -1))
+
+    # -- position-in-expert, capacity drop (per data shard) ------------------
+    C = max(4, int(math.ceil(cfg.moe_capacity_factor * Tl * k / E)))
+    # process choices slot-major so slot-0 assignments win capacity first
+    flat = onehot_k.transpose(0, 2, 1, 3).reshape(dsize, k * Tl, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (g, kTl, E)
+    pos = (pos * flat).sum(-1).astype(jnp.int32)                 # (g, kTl)
+    eid = expert_ids.transpose(0, 2, 1).reshape(dsize, k * Tl)
+    gv = gate_vals.transpose(0, 2, 1).reshape(dsize, k * Tl)
+    tok = jnp.tile(jnp.arange(Tl, dtype=jnp.int32)[None], (dsize, 1))
+    tok = jnp.tile(tok, (1, k)).reshape(dsize, k * Tl)
+    keep = pos < C
+    slot = jnp.where(keep, eid * C + pos, E * C)                 # OOB -> drop
+
+    g_idx = jnp.arange(dsize)[:, None]
+    # token index feeding each (expert, capacity) slot; OOB slots -> Tl (fill)
+    dispatch_idx = jnp.full((dsize, E * C + 1), Tl, jnp.int32)
+    dispatch_idx = dispatch_idx.at[g_idx, slot].set(tok, mode="drop")
+    dispatch_idx = policy.act(dispatch_idx[:, : E * C], "dp", None)
+    combine_w = jnp.zeros((dsize, E * C + 1), jnp.float32)
+    combine_w = combine_w.at[g_idx, slot].set(gv, mode="drop")
+    combine_w = policy.act(combine_w[:, : E * C], "dp", None)
+
+    # -- dispatch (local batched gather; OOB slots zeroed by mask) ------------
+    safe_idx = jnp.minimum(dispatch_idx, Tl - 1)
+    valid = dispatch_idx < Tl
+    gathered = _dispatch(xt, safe_idx, valid, policy)
+    gathered = gathered.reshape(dsize, E, C, D)
+    gathered = policy.act(gathered, "dp", "tp", None, None)
+
+    # -- expert FFN (local: expert dim aligned on "model") --------------------
+    h = jnp.einsum("gecd,edf->gecf", gathered, p["w_in"])
+    g = jnp.einsum("gecd,edf->gecf", gathered, p["w_gate"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * g
+    h = policy.act(h, "dp", "tp", None, None)
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_out"])
+    out_e = out_e * combine_w.reshape(dsize, E, C)[..., None].astype(out_e.dtype)
+
+    # -- combine (batched scatter-add into a sentinel row for dropped slots;
+    #    partial sums over experts all-reduced over "model") ------------------
+    out_flat = out_e.reshape(dsize, E * C, D)
+    out = _combine(out_flat, safe_idx, valid, Tl, policy)
+    out = policy.act(out, "dp", None, None)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

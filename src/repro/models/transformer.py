@@ -1,0 +1,438 @@
+"""Decoder-only transformer family: dense, MoE, VLM-backbone, audio-backbone.
+
+One implementation covers stablelm / qwen2 / qwen3 / gemma (dense), qwen3-moe /
+dbrx (MoE FFN), internvl2 (dense backbone + stub patch-embedding frontend) and
+musicgen (multi-codebook token embedding/readout, stub EnCodec frontend).
+
+Layers are scanned (`jax.lax.scan` over stacked per-layer params) with
+optional `jax.checkpoint` remat — the dry-run compiles one layer body
+regardless of depth; the roofline layer (launch/roofline.py) corrects
+scan-body costs via the `layer_unit` hook.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.parallel.sharding import ShardingPolicy
+
+Params = dict[str, Any]
+VIT_DIM = 1024  # width of the stubbed vision frontend's patch embeddings
+DECODE_HEADROOM = 16  # extra KV slots so decode at pos=S stays in bounds
+# (16 = model-axis size, so the kvseq sharding of S+HEADROOM stays divisible)
+
+
+# ---------------------------------------------------------------------------
+# Init
+
+
+def init_block(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "norm1": L.init_norm(cfg, dtype),
+        "norm2": L.init_norm(cfg, dtype),
+        "attn": L.init_attention(k1, cfg, dtype),
+    }
+    if cfg.num_experts:
+        p["moe"] = MOE.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    p: Params = {}
+    if cfg.family == "audio":
+        p["codebook_embed"] = L.trunc_normal(
+            keys[0], (cfg.num_codebooks, cfg.vocab_size, cfg.d_model), dtype, 1.0)
+        p["codebook_out"] = L.dense_init(
+            keys[3], (cfg.num_codebooks, cfg.d_model, cfg.vocab_size),
+            dtype, cfg.d_model)
+    else:
+        p["embed"] = L.init_embed(keys[0], cfg, dtype)
+        if not cfg.tie_embeddings:
+            p["unembed"] = L.dense_init(
+                keys[3], (cfg.d_model, cfg.vocab_size), dtype, cfg.d_model)
+    if cfg.family == "vlm":
+        p["patch_proj"] = L.dense_init(keys[1], (VIT_DIM, cfg.d_model),
+                                       dtype, VIT_DIM)
+    block_keys = jax.random.split(keys[2], cfg.num_layers)
+    p["blocks"] = jax.vmap(lambda k: init_block(k, cfg, dtype))(block_keys)
+    p["final_norm"] = L.init_norm(cfg, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Param sharding specs (same structure as init_params)
+
+
+def block_specs(cfg: ModelConfig, policy: ShardingPolicy) -> Params:
+    S = policy.spec
+    norm = {"scale": S(None)} if cfg.norm_type == "rmsnorm" else \
+        {"scale": S(None), "bias": S(None)}
+    p: Params = {"norm1": dict(norm), "norm2": dict(norm),
+                 "attn": L.attention_spec(cfg, policy)}
+    if cfg.num_experts:
+        p["moe"] = MOE.moe_spec(cfg, policy)
+    else:
+        p["mlp"] = L.mlp_spec(cfg, policy)
+    return p
+
+
+def param_specs(cfg: ModelConfig, policy: ShardingPolicy,
+                stacked: bool = True) -> Params:
+    S = policy.spec
+    norm = {"scale": S(None)} if cfg.norm_type == "rmsnorm" else \
+        {"scale": S(None), "bias": S(None)}
+    p: Params = {}
+    if cfg.family == "audio":
+        p["codebook_embed"] = S(None, "tp", None)
+        p["codebook_out"] = S(None, None, "tp")
+    else:
+        p["embed"] = {"table": S("tp", None)}
+        if not cfg.tie_embeddings:
+            p["unembed"] = S(None, "tp")
+    if cfg.family == "vlm":
+        p["patch_proj"] = S(None, None)
+    blocks = block_specs(cfg, policy)
+    if stacked:
+        blocks = jax.tree.map(lambda s: jax.sharding.PartitionSpec(None, *s),
+                              blocks)
+    p["blocks"] = blocks
+    p["final_norm"] = dict(norm)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+
+
+def _block_apply(blk: Params, x: jax.Array, cfg: ModelConfig,
+                 policy: ShardingPolicy, *, collect_kv: bool = False):
+    # pin the residual stream at block entry: with_sharding_constraint
+    # transposes onto the cotangent, so the backward-scan d(x) stays
+    # dp-sharded instead of materializing replicated (§Perf H2 iter4)
+    x = policy.act(x, "dp", "sp", None)
+    h = L.apply_norm(blk["norm1"], x, cfg)
+    if collect_kv:
+        attn_out, kv = L.attention_block(blk["attn"], h, cfg, policy,
+                                         return_kv=True)
+    else:
+        attn_out = L.attention_block(blk["attn"], h, cfg, policy)
+        kv = None
+    x = x + attn_out
+    h = L.apply_norm(blk["norm2"], x, cfg)
+    if cfg.num_experts:
+        ffn_out, aux = MOE.moe_block(blk["moe"], h, cfg, policy)
+    else:
+        ffn_out, aux = L.mlp_block(blk["mlp"], h, cfg, policy), jnp.zeros((), jnp.float32)
+    return x + ffn_out, aux, kv
+
+
+def _embed_input(params: Params, batch: dict, cfg: ModelConfig,
+                 policy: ShardingPolicy) -> jax.Array:
+    if cfg.family == "audio":
+        toks = batch["tokens"]  # (B, S, C)
+        x = None
+        for c in range(cfg.num_codebooks):
+            e = jnp.take(params["codebook_embed"][c], toks[..., c], axis=0)
+            x = e if x is None else x + e
+        return policy.act(x, "dp", "sp", None)
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg, policy)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        xp = jnp.einsum("bpe,ed->bpd",
+                        batch["patch_embeds"].astype(x.dtype),
+                        params["patch_proj"])
+        x = jnp.concatenate([xp, x], axis=1)
+        x = policy.act(x, "dp", "sp", None)
+    return x
+
+
+def _readout(params: Params, x: jax.Array, cfg: ModelConfig,
+             policy: ShardingPolicy) -> jax.Array:
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if cfg.family == "audio":
+        logits = jnp.einsum("bsd,cdv->bscv", x, params["codebook_out"])
+        return policy.act(logits, "dp", "sp", None, "tp")
+    return L.unembed(params["embed"] if "embed" in params else {"table": None},
+                     params.get("unembed"), x, cfg, policy)
+
+
+def _layer_scan(params: Params, x: jax.Array, cfg: ModelConfig,
+                policy: ShardingPolicy, *, collect_kv: bool = False):
+    """Run the block stack; returns (x, aux_total, kv_stack|None)."""
+
+    def body(carry, blk):
+        y, aux, kv = _block_apply(blk, carry, cfg, policy,
+                                  collect_kv=collect_kv)
+        return y, (aux, kv) if collect_kv else (aux, None)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(body, x, params["blocks"])
+        aux = ys[0].sum()
+        kvs = ys[1] if collect_kv else None
+    else:
+        auxes, ks, vs = [], [], []
+        nl = cfg.num_layers
+        for i in range(nl):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, (aux_i, kv_i) = body(x, blk)
+            auxes.append(aux_i)
+            if collect_kv:
+                ks.append(kv_i[0]); vs.append(kv_i[1])
+        aux = jnp.stack(auxes).sum()
+        kvs = (jnp.stack(ks), jnp.stack(vs)) if collect_kv else None
+    return x, aux, kvs
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced full-sequence forward -> (logits, moe_aux)."""
+    x = _embed_input(params, batch, cfg, policy)
+    x, aux, _ = _layer_scan(params, x, cfg, policy)
+    return _readout(params, x, cfg, policy), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+
+
+def _ce(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Cross-entropy with ignore-index -1. logits (..., V), labels (...,).
+
+    Vocab-sharding-friendly: the label logit is picked with a one-hot einsum
+    (reduces over the sharded vocab axis -> psum) instead of take_along_axis
+    (which would all-gather the full logits to every device).  max/logsumexp
+    are plain reductions over the sharded axis.  f32 statistics; the bf16
+    logits are never materialized as f32.
+    """
+    m = jax.lax.stop_gradient(
+        logits.max(axis=-1, keepdims=True).astype(jnp.float32))
+    shifted = logits.astype(jnp.float32) - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=logits.dtype)
+    ll = jnp.einsum("...v,...v->...", logits, onehot,
+                    preferred_element_type=jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = ((lse - ll) * mask).sum()
+    return loss, mask.sum()
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, batch, cfg, policy)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        npatch = cfg.num_patches
+        logits = logits[:, npatch:, :]
+    loss_sum, denom = _ce(logits, labels)
+    loss = loss_sum / jnp.maximum(denom, 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+
+
+def prefill(params: Params, batch: dict, cfg: ModelConfig,
+            policy: ShardingPolicy):
+    """Full-sequence forward that also returns the KV cache."""
+    x = _embed_input(params, batch, cfg, policy)
+    x, _, kvs = _layer_scan(params, x, cfg, policy, collect_kv=True)
+    logits = _readout(params, x[:, -1:, :], cfg, policy)
+    ck, cv = kvs  # (L, B, S, K, Dh)
+    pad = ((0, 0), (0, 0), (0, DECODE_HEADROOM), (0, 0), (0, 0))
+    ck, cv = jnp.pad(ck, pad), jnp.pad(cv, pad)
+    cache = {"k": policy.act(ck, None, "dp", "kvseq", None, None),
+             "v": policy.act(cv, None, "dp", "kvseq", None, None),
+             "pos": jnp.array(x.shape[1], jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: Params, cache: dict, batch: dict, cfg: ModelConfig,
+                policy: ShardingPolicy):
+    """One-token decode against the cache. batch["tokens"]: (B, 1[, C])."""
+    x = _embed_input(params, batch, cfg, policy)
+    pos = cache["pos"]
+
+    def body(carry, xs):
+        y = carry
+        blk, k_l, v_l = xs
+        h = L.apply_norm(blk["norm1"], y, cfg)
+        attn_out, (k_l, v_l) = L.attention_decode(
+            blk["attn"], h, cfg, policy, (k_l, v_l), pos)
+        y = y + attn_out
+        h = L.apply_norm(blk["norm2"], y, cfg)
+        if cfg.num_experts:
+            ffn_out, _ = MOE.moe_block(blk["moe"], h, cfg, policy)
+        else:
+            ffn_out = L.mlp_block(blk["mlp"], h, cfg, policy)
+        return y + ffn_out, (k_l, v_l)
+
+    if cfg.scan_layers:
+        x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"],
+                                             cache["k"], cache["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.num_layers):
+            blk = jax.tree.map(lambda a: a[i], params["blocks"])
+            x, (k_i, v_i) = body(x, (blk, cache["k"][i], cache["v"][i]))
+            ks.append(k_i); vs.append(v_i)
+        ck, cv = jnp.stack(ks), jnp.stack(vs)
+    logits = _readout(params, x, cfg, policy)
+    new_cache = {"k": policy.act(ck, None, "dp", "kvseq", None, None),
+                 "v": policy.act(cv, None, "dp", "kvseq", None, None),
+                 "pos": pos + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Specs for the dry-run (ShapeDtypeStruct stand-ins, no allocation)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                policy: ShardingPolicy) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = policy.sds
+
+    if shape.kind == "decode":
+        if cfg.family == "audio":
+            return {"tokens": sds((B, 1, cfg.num_codebooks), i32,
+                                  "dp", None, None)}
+        return {"tokens": sds((B, 1), i32, "dp", None)}
+
+    batch: dict = {}
+    if cfg.family == "audio":
+        batch["tokens"] = sds((B, S, cfg.num_codebooks), i32, "dp", None, None)
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S, cfg.num_codebooks), i32,
+                                  "dp", None, None)
+        return batch
+    s_text = S - cfg.num_patches if cfg.family == "vlm" else S
+    batch["tokens"] = sds((B, s_text), i32, "dp", None)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = sds((B, cfg.num_patches, VIT_DIM),
+                                    jnp.bfloat16, "dp", None, None)
+    if shape.kind == "train":
+        batch["labels"] = sds((B, s_text), i32, "dp", None)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                policy: ShardingPolicy) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    K, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    kv = policy.sds((cfg.num_layers, B, S + DECODE_HEADROOM, K, Dh),
+                    jnp.bfloat16, None, "dp", "kvseq", None, None)
+    return {"k": kv, "v": kv, "pos": policy.sds((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for MODEL_FLOPS = 6·N·D)
+
+
+def param_count(cfg: ModelConfig) -> tuple[int, int]:
+    """(total, active) parameter counts excluding embeddings."""
+    d, f, h, k, dh = (cfg.d_model, cfg.d_ff, cfg.num_heads,
+                      cfg.num_kv_heads, cfg.resolved_head_dim)
+    attn = d * h * dh + 2 * d * k * dh + h * dh * d
+    if cfg.qkv_bias:
+        attn += (h + 2 * k) * dh
+    if cfg.qk_norm:
+        attn += 2 * dh
+    if cfg.num_experts:
+        expert = 3 * d * f
+        ffn_total = cfg.num_experts * expert + d * cfg.num_experts
+        ffn_active = cfg.experts_per_token * expert + d * cfg.num_experts
+    else:
+        n_mat = 3 if cfg.mlp_variant in ("swiglu", "geglu") else 2
+        ffn_total = ffn_active = n_mat * d * f
+    norms = 2 * d * (2 if cfg.norm_type == "layernorm" else 1)
+    per_layer_t = attn + ffn_total + norms
+    per_layer_a = attn + ffn_active + norms
+    total = cfg.num_layers * per_layer_t
+    active = cfg.num_layers * per_layer_a
+    embed = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "audio":
+        embed = 2 * cfg.num_codebooks * cfg.vocab_size * d
+    if cfg.family == "vlm":
+        embed += VIT_DIM * d
+    final = d * (2 if cfg.norm_type == "layernorm" else 1)
+    return total + embed + final, active + embed + final
+
+
+# ---------------------------------------------------------------------------
+# Roofline unit: one block, forward (+backward for train)
+
+
+def layer_unit(cfg: ModelConfig, shape: ShapeConfig, policy: ShardingPolicy,
+               *, unroll: bool, kind: str):
+    """Returns (fn, example_args) lowering exactly one scanned block body."""
+    ucfg = dataclasses.replace(cfg, inner_unroll=unroll)
+    B, S = shape.global_batch, shape.seq_len
+    blk_sds = _block_sds(ucfg, policy)
+
+    if kind == "decode":
+        x_sds = policy.sds((B, 1, cfg.d_model), jnp.bfloat16, "dp", None, None)
+        K, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        kv_sds = policy.sds((B, S + DECODE_HEADROOM, K, Dh), jnp.bfloat16,
+                            "dp", "kvseq", None, None)
+        pos = jnp.int32(S)
+
+        def unit(blk, k_l, v_l, x):
+            h = L.apply_norm(blk["norm1"], x, ucfg)
+            attn_out, (k_l, v_l) = L.attention_decode(
+                blk["attn"], h, ucfg, policy, (k_l, v_l), pos)
+            y = x + attn_out
+            h = L.apply_norm(blk["norm2"], y, ucfg)
+            if ucfg.num_experts:
+                ffn_out, _ = MOE.moe_block(blk["moe"], h, ucfg, policy)
+            else:
+                ffn_out = L.mlp_block(blk["mlp"], h, ucfg, policy)
+            return y + ffn_out, (k_l, v_l)
+        return unit, (blk_sds, kv_sds, kv_sds, x_sds)
+
+    x_sds = policy.sds((B, S, cfg.d_model), jnp.bfloat16, "dp", "sp", None)
+    if kind == "train":
+        def unit(blk, x):
+            def f(blk_, x_):
+                y, aux, _ = _block_apply(blk_, x_, ucfg, policy)
+                return (y.astype(jnp.float32).sum() + aux)
+            return jax.grad(f, argnums=(0, 1))(blk, x)
+        return unit, (blk_sds, x_sds)
+
+    def unit(blk, x):
+        y, _, _ = _block_apply(blk, x, ucfg, policy)
+        return y
+    return unit, (blk_sds, x_sds)
+
+
+def _block_sds(cfg: ModelConfig, policy: ShardingPolicy):
+    """ShapeDtypeStructs (with shardings) for one un-stacked block."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(lambda: init_block(key, cfg, dtype))
+    specs = block_specs(cfg, policy)
+
+    def one(sds, spec):
+        sh = (jax.sharding.NamedSharding(policy.mesh,
+                                         policy.sanitize(sds.shape, spec))
+              if policy.mesh else None)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+    return jax.tree.map(one, shapes, specs)

@@ -1,0 +1,177 @@
+"""Logical-axis sharding policy mapping model dimensions onto the mesh.
+
+Mesh axes (launch/mesh.py):
+    single-pod: ("data", "model") = (16, 16)
+    multi-pod:  ("pod", "data", "model") = (2, 16, 16)
+
+Logical axes used by the model code:
+
+    "dp"    batch (data parallel) -> ("pod", "data") when the pod axis exists
+    "tp"    tensor parallel (heads / mlp-hidden / vocab / experts) -> "model"
+    "fsdp"  parameter storage sharding over "data" (big archs only)
+    "kvseq" decode-time KV-cache sequence sharding -> "model"
+            (GQA archs have too few KV heads to TP-shard at decode; sharding
+            the cache over *sequence* keeps per-chip KV memory flat and turns
+            the softmax into a flash-style partial-reduce over "model")
+
+The policy deliberately expresses everything as PartitionSpecs consumed by
+pjit/GSPMD (`with_sharding_constraint` on activations, `NamedSharding` on
+inputs); no manual collectives are required except where shard_map is used.
+ZeRO-1: `zero1_spec` extends a parameter spec with the "data" axis on the
+largest unsharded-and-divisible dimension, sharding optimizer moments and
+master weights across data-parallel replicas.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh | None = None
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fsdp_enabled: bool = False
+    kvseq_shard: bool = False     # decode-mode KV sequence sharding
+    seq_shard: bool = False       # sequence parallelism for activations
+
+    def _resolve(self, logical: str | None):
+        if logical is None:
+            return None
+        if logical == "dp":
+            return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+        if logical == "tp":
+            return self.tp_axis
+        if logical == "fsdp":
+            return self.dp_axes[-1] if self.fsdp_enabled else None
+        if logical == "kvseq":
+            return self.tp_axis if self.kvseq_shard else None
+        if logical == "sp":
+            return self.dp_axes[-1] if self.seq_shard else None
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def spec(self, *axes: str | None) -> P:
+        return P(*[self._resolve(a) for a in axes])
+
+    def _entry_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        entries = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in entries:
+            size *= self.mesh.shape[a]
+        return size
+
+    def sanitize(self, shape: Sequence[int], pspec: P) -> P:
+        """Drop spec entries that do not evenly divide their dimension
+        (e.g. 2 KV heads on a 16-way model axis -> replicate), and drop
+        repeated mesh axes (a mesh axis may shard at most one dim)."""
+        if self.mesh is None:
+            return pspec
+        entries = list(pspec) + [None] * (len(shape) - len(pspec))
+        out, used = [], set()
+        for dim, e in zip(shape, entries):
+            if e is not None:
+                axes = e if isinstance(e, tuple) else (e,)
+                if any(a in used for a in axes):
+                    e = None
+            if e is not None and dim % self._entry_size(e) == 0:
+                out.append(e)
+                for a in (e if isinstance(e, tuple) else (e,)):
+                    used.add(a)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def sharding(self, *axes: str | None) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+    def sds(self, shape: Sequence[int], dtype, *axes: str | None):
+        """ShapeDtypeStruct with a sanitized NamedSharding (dry-run inputs)."""
+        sh = None
+        if self.mesh is not None:
+            sh = NamedSharding(self.mesh, self.sanitize(shape, self.spec(*axes)))
+        return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sh)
+
+    def act(self, x: jax.Array, *axes: str | None) -> jax.Array:
+        """Constrain an activation's sharding; no-op without a mesh."""
+        if self.mesh is None:
+            return x
+        spec = self.sanitize(x.shape, self.spec(*axes))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # -- sizes -------------------------------------------------------------
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        resolved = self._resolve(logical)
+        if resolved is None:
+            return 1
+        if isinstance(resolved, tuple):
+            size = 1
+            for a in resolved:
+                size *= self.mesh.shape[a]
+            return size
+        return self.mesh.shape[resolved]
+
+    # -- ZeRO-1 ------------------------------------------------------------
+
+    def zero1_spec(self, shape: Sequence[int], pspec: P) -> P:
+        """Extend ``pspec`` with the data axis on the biggest free dim
+        (optimizer-state sharding across data-parallel replicas)."""
+        if self.mesh is None:
+            return pspec
+        data_axis = self.dp_axes[-1]
+        data_size = self.mesh.shape[data_axis]
+        entries = list(pspec) + [None] * (len(shape) - len(pspec))
+        used = set()
+        for e in entries:
+            for a in (e if isinstance(e, tuple) else (e,)):
+                if a is not None:
+                    used.add(a)
+        if data_axis in used:
+            return pspec
+        best, best_size = -1, 0
+        for i, (dim, e) in enumerate(zip(shape, entries)):
+            if e is None and dim % data_size == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best < 0:
+            return pspec
+        entries[best] = data_axis
+        return P(*entries)
+
+    def zero1_sharding_tree(self, params: Any) -> Any:
+        """Map a param pytree of (ShapeDtypeStruct|Array) with .sharding to
+        ZeRO-1 shardings for same-shaped optimizer state."""
+        def one(leaf):
+            spec = leaf.sharding.spec if isinstance(leaf.sharding, NamedSharding) else P()
+            return NamedSharding(self.mesh, self.zero1_spec(leaf.shape, spec))
+        return jax.tree.map(one, params)
+
+
+def make_policy(mesh: Mesh | None, *, multi_pod: bool = False,
+                fsdp: bool = False, mode: str = "train") -> ShardingPolicy:
+    """Build the policy for a (mesh, step-kind) pair.
+
+    mode: "train" | "prefill" -> heads-TP attention, batch DP
+          "decode"            -> KV-sequence sharding over the model axis
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    # Sequence parallelism shares the data axis with batch DP, so it only
+    # activates when the batch cannot occupy the axis (e.g. batch-1 decode).
+    return ShardingPolicy(
+        mesh=mesh,
+        dp_axes=dp,
+        fsdp_enabled=fsdp,
+        kvseq_shard=(mode in ("decode", "prefill")),
+        seq_shard=False,
+    )

@@ -1,0 +1,103 @@
+"""Optimizers from scratch (no optax): AdamW and momentum-SGD on pytrees.
+
+Mixed precision: compute/storage params are bf16; the optimizer keeps f32
+master weights + moments.  Under the ZeRO-1 sharding policy the three f32
+trees are additionally sharded over the data axis (parallel/sharding.py),
+so per-chip optimizer memory is params*12B / |mesh| for the big archs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: Pytree) -> dict:
+    # jnp.array (not astype): master must be a distinct buffer even when
+    # params are already f32, or donating the train state donates it twice
+    f32 = lambda p: jnp.array(p, jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"master": jax.tree.map(f32, params),
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads: Pytree, opt_state: dict, step: jax.Array,
+                 cfg: AdamWConfig) -> tuple[Pytree, dict, jax.Array]:
+    """Returns (new bf16-castable master params, new opt state, grad norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - jnp.power(cfg.b1, t)
+    c2 = 1.0 - jnp.power(cfg.b2, t)
+
+    def upd(g, m, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * g * g
+        mhat = mu / c1
+        vhat = nu / c2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * m
+        return m - cfg.lr * step_, mu, nu
+
+    flat, treedef = jax.tree.flatten(opt_state["master"])
+    gflat = jax.tree.leaves(grads)
+    muflat = jax.tree.leaves(opt_state["mu"])
+    nuflat = jax.tree.leaves(opt_state["nu"])
+    out = [upd(g, m, mu, nu) for g, m, mu, nu in zip(gflat, flat, muflat, nuflat)]
+    new_master = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_master, {"master": new_master, "mu": new_mu, "nu": new_nu}, gnorm
+
+
+@dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.05
+    momentum: float = 0.0
+
+
+def sgd_init(params: Pytree, cfg: SGDConfig) -> dict:
+    if cfg.momentum:
+        return {"vel": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                    params)}
+    return {}
+
+
+def sgd_update(params: Pytree, grads: Pytree, state: dict,
+               cfg: SGDConfig) -> tuple[Pytree, dict]:
+    """Plain (optionally momentum) SGD in the params' own dtype — used by the
+    FL clients (the paper's local gradient steps)."""
+    if cfg.momentum:
+        new_vel = jax.tree.map(
+            lambda v, g: cfg.momentum * v + g.astype(jnp.float32),
+            state["vel"], grads)
+        new_params = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - cfg.lr * v).astype(p.dtype),
+            params, new_vel)
+        return new_params, {"vel": new_vel}
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - cfg.lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_params, state

@@ -1,0 +1,269 @@
+"""Step factories: train_step / prefill_step / decode_step + their
+ShapeDtypeStruct input trees for the dry-run (no allocation).
+
+train state = {"step": i32, "params": bf16 tree, "opt": {master, mu, nu} f32}
+  * params sharded per the model's param_specs (TP over "model", optionally
+    FSDP over "data");
+  * opt-state f32 trees additionally ZeRO-1-sharded over "data";
+  * grads are averaged over DP implicitly by GSPMD (replicated-param VJP).
+
+Microbatching (gradient accumulation) via `num_microbatches`: the batch is
+split along the batch axis and grads accumulate in f32 through a lax.scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ShapeConfig
+from repro.models.api import ModelBundle
+from repro.parallel.sharding import ShardingPolicy
+from repro.train.optim import AdamWConfig, adamw_update, init_opt_state
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# State construction / specs
+
+
+def init_train_state(model: ModelBundle, key) -> dict:
+    params = model.init(key)
+    return {"step": jnp.zeros((), jnp.int32), "params": params,
+            "opt": init_opt_state(params)}
+
+
+def _with_sharding(sds_tree: Pytree, spec_tree: Pytree,
+                   policy: ShardingPolicy) -> Pytree:
+    def one(sds, spec):
+        sh = (NamedSharding(policy.mesh, policy.sanitize(sds.shape, spec))
+              if policy.mesh else None)
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh)
+    return jax.tree.map(one, sds_tree, spec_tree)
+
+
+def param_sds(model: ModelBundle, policy: ShardingPolicy) -> Pytree:
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    return _with_sharding(shapes, model.param_specs(policy), policy)
+
+
+def train_state_sds(model: ModelBundle, policy: ShardingPolicy) -> dict:
+    p_sds = param_sds(model, policy)
+    specs = model.param_specs(policy)
+
+    def opt_leaf(sds, spec):
+        z_spec = policy.zero1_spec(sds.shape, policy.sanitize(sds.shape, spec))
+        sh = NamedSharding(policy.mesh, z_spec) if policy.mesh else None
+        return jax.ShapeDtypeStruct(sds.shape, jnp.float32, sharding=sh)
+
+    opt_tree = jax.tree.map(opt_leaf, p_sds, specs)
+    scalar_sh = (NamedSharding(policy.mesh, jax.sharding.PartitionSpec())
+                 if policy.mesh else None)
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=scalar_sh),
+        "params": p_sds,
+        "opt": {"master": opt_tree,
+                "mu": jax.tree.map(lambda x: x, opt_tree),
+                "nu": jax.tree.map(lambda x: x, opt_tree)},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Steps
+
+
+def _q8_pod_sync(grads: Pytree, axis: str = "pod") -> Pytree:
+    """§Perf H3 — the paper's payload-shrinking idea applied to the cross-pod
+    link: sync gradients across pods as blockwise-int8 typed-array payloads
+    (absmax/127 scales) instead of a bf16/f32 all-reduce.
+
+    Runs inside a shard_map manual over the pod axis: all_gather the (q8,
+    scales) pair from every pod, dequantize, average.  Cross-pod bytes per
+    param: 1.25 B one-way vs 2 B x 2 passes for a ring all-reduce — 3.2x.
+    (Production would thread error-feedback residuals through the optimizer
+    state; quantization-error compensation is validated separately in
+    tests/test_params_codec.py::test_error_feedback_reduces_bias.)
+    """
+    block = 256
+
+    def sync_leaf(g):
+        if g.size < 4 * block:  # tiny leaves: plain mean
+            return jax.lax.pmean(g, axis)
+        shape = g.shape
+        n = g.size
+        pad = (-n) % block
+        flat = jnp.pad(g.reshape(-1), (0, pad)).reshape(-1, block)
+        absmax = jnp.abs(flat).max(axis=1)
+        scales = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+        q = jnp.clip(jnp.round(flat / scales[:, None]), -127, 127
+                     ).astype(jnp.int8)
+        q_all = jax.lax.all_gather(q, axis)          # (pods, nb, block) i8
+        s_all = jax.lax.all_gather(scales, axis)     # (pods, nb) f32
+        deq = q_all.astype(jnp.float32) * s_all[..., None]
+        mean = deq.mean(0).reshape(-1)[:n].reshape(shape)
+        return mean.astype(g.dtype)
+
+    return jax.tree.map(sync_leaf, grads)
+
+
+def make_train_step(model: ModelBundle, policy: ShardingPolicy,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    num_microbatches: int = 1,
+                    pod_grad_compress: bool = False) -> Callable:
+    specs = model.param_specs(policy)
+
+    def constrain_params(params):
+        if policy.mesh is None:
+            return params
+        return jax.tree.map(
+            lambda p, s: jax.lax.with_sharding_constraint(
+                p, NamedSharding(policy.mesh, policy.sanitize(p.shape, s))),
+            params, specs)
+
+    def constrain_grads_zero(grads):
+        """§Perf H2: pin accumulated grads to ZeRO (dp-sharded) specs — the
+        per-microbatch DP reduction lowers to reduce-scatter (1x traffic)
+        instead of all-reduce (2x), and the f32 accumulator shrinks |dp|x."""
+        if policy.mesh is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(policy.mesh, policy.zero1_spec(
+                    g.shape, policy.sanitize(g.shape, s)))),
+            grads, specs)
+
+    def grads_of(params, batch, pol):
+        def loss_fn(p):
+            return model.loss(p, batch, pol)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        return loss, metrics, grads
+
+    def compute_grads(params, batch, pol):
+        """(loss, metrics, grads) with optional grad-accumulation scan."""
+        if num_microbatches > 1:
+            # gradient accumulation via lax.scan: the while loop serializes
+            # microbatches structurally, so only ONE microbatch's activation
+            # stack is ever live (XLA-CPU deletes optimization_barrier, so an
+            # unrolled python loop would let all MB forward stacks coexist).
+            # Cost accounting: the scan body is counted once by XLA's
+            # cost_analysis; launch/dryrun.py lowers the microbatch body
+            # standalone and launch/roofline.py re-multiplies.
+            def micro(carry, mb):
+                acc = carry
+                loss, metrics, grads = grads_of(params, mb, pol)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return constrain_grads_zero(acc), (loss, metrics)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(num_microbatches,
+                                    x.shape[0] // num_microbatches,
+                                    *x.shape[1:]), batch)
+            zero = constrain_grads_zero(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, (losses, metrics) = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            return losses.mean(), jax.tree.map(lambda m: m.mean(), metrics), grads
+        return grads_of(params, batch, pol)
+
+    use_pod = (pod_grad_compress and policy.mesh is not None
+               and "pod" in policy.mesh.axis_names)
+    if use_pod:
+        import dataclasses as _dc
+
+        from jax.sharding import PartitionSpec as P
+
+        # inside the pod-manual region, "dp" covers only the data axis;
+        # grads accumulate per-pod across ALL microbatches and sync ONCE
+        # per step as q8 typed-array payloads (§Perf H3)
+        inner_policy = _dc.replace(policy, dp_axes=("data",))
+
+        def per_pod(params, batch):
+            loss, metrics, grads = compute_grads(params, batch, inner_policy)
+            grads = _q8_pod_sync(grads)
+            loss = jax.lax.pmean(loss, "pod")
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+            return loss, metrics, grads
+
+        pod_compute = jax.shard_map(
+            per_pod, mesh=policy.mesh,
+            in_specs=(P(), P("pod")), out_specs=(P(), P(), P()),
+            axis_names=frozenset({"pod"}), check_vma=False)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = constrain_params(state["params"])
+        if use_pod:
+            loss, metrics, grads = pod_compute(params, batch)
+        else:
+            loss, metrics, grads = compute_grads(params, batch, policy)
+
+        new_master, new_opt, gnorm = adamw_update(
+            grads, state["opt"], state["step"], opt_cfg)
+        new_params = jax.tree.map(
+            lambda m, p: m.astype(p.dtype), new_master, params)
+        new_params = constrain_params(new_params)
+        new_state = {"step": state["step"] + 1, "params": new_params,
+                     "opt": new_opt}
+        metrics = dict(metrics)
+        metrics.update({"total_loss": loss, "grad_norm": gnorm})
+        return new_state, metrics
+
+    return train_step
+
+
+def make_microbatch_unit(model: ModelBundle, policy: ShardingPolicy):
+    """Standalone fwd+bwd of ONE microbatch (roofline unit for the grad-
+    accumulation scan body)."""
+    def unit(params, mb):
+        def loss_fn(p):
+            return model.loss(p, mb, policy)
+        (_, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return grads
+    return unit
+
+
+def make_prefill_step(model: ModelBundle, policy: ShardingPolicy) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, policy)
+    return prefill_step
+
+
+def make_decode_step(model: ModelBundle, policy: ShardingPolicy) -> Callable:
+    def decode_step(params, cache, batch):
+        return model.decode(params, cache, batch, policy)
+    return decode_step
+
+
+def effective_microbatches(requested: int, shape: ShapeConfig,
+                           policy: ShardingPolicy) -> int:
+    """Each microbatch slab must still shard over the dp axis: clamp MB so
+    (global_batch / MB) % |dp| == 0 (on the 512-chip mesh |dp|=32, a 16-row
+    microbatch would replicate -> 10x per-chip memory)."""
+    mb = max(1, requested)
+    dp = policy.axis_size("dp")
+    while mb > 1 and (shape.global_batch // mb) % dp:
+        mb //= 2
+    return mb
+
+
+def step_and_specs(model: ModelBundle, shape: ShapeConfig,
+                   policy: ShardingPolicy, *, num_microbatches: int = 0,
+                   pod_grad_compress: bool = False):
+    """(fn, example_args, donate_argnums) for one (arch x shape) cell."""
+    batch = model.input_specs(shape, policy)
+    if shape.kind == "train":
+        mb = effective_microbatches(
+            num_microbatches or model.cfg.train_microbatches, shape, policy)
+        fn = make_train_step(model, policy, num_microbatches=mb,
+                             pod_grad_compress=pod_grad_compress)
+        return fn, (train_state_sds(model, policy), batch), (0,)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(model, policy)
+        return fn, (param_sds(model, policy), batch), ()
+    fn = make_decode_step(model, policy)
+    cache = model.cache_specs(shape, policy)
+    return fn, (param_sds(model, policy), cache, batch), (1,)

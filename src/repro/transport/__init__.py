@@ -1,0 +1,13 @@
+from repro.transport.coap import (
+    CoapMessage,
+    Code,
+    Option,
+    TransferStats,
+    Type,
+    blockwise_messages,
+    transfer_stats,
+)
+from repro.transport.network import LossyLink
+
+__all__ = ["CoapMessage", "Code", "Option", "TransferStats", "Type",
+           "blockwise_messages", "transfer_stats", "LossyLink"]

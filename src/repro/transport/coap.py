@@ -1,0 +1,188 @@
+"""CoAP message layer (RFC 7252) + blockwise transfer (RFC 7959).
+
+Enough of CoAP is implemented to account *exact* on-the-wire bytes for the
+paper's scenario (§IV): CON/NON/ACK messages, options (Uri-Path, Observe,
+Block1/Block2, Content-Format), payload marker, and blockwise splitting so
+that every frame fits the IEEE 802.15.4 127-byte MTU.  This is what turns
+the paper's Table-I message sizes into frame counts on the simulated link
+(§VI-B "message interval" analysis).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from enum import IntEnum
+
+IEEE802154_MTU = 127
+# 802.15.4 MAC header+FCS (~21 B) + 6LoWPAN/UDP compressed header (~11 B)
+LOWPAN_OVERHEAD = 32
+COAP_MAX_PAYLOAD = 64  # payload per block so header+token+options fit the MTU
+
+CONTENT_CBOR = 60  # application/cbor (RFC 7049 registry)
+
+
+class Code(IntEnum):
+    EMPTY = 0x00
+    GET = 0x01
+    POST = 0x02
+    PUT = 0x03
+    CONTENT = 0x45      # 2.05
+    CHANGED = 0x44      # 2.04
+    ACK_TIMEOUT = 0xA0  # internal
+
+
+class Type(IntEnum):
+    CON = 0
+    NON = 1
+    ACK = 2
+    RST = 3
+
+
+class Option(IntEnum):
+    OBSERVE = 6
+    URI_PATH = 11
+    CONTENT_FORMAT = 12
+    URI_QUERY = 15
+    BLOCK2 = 23
+    BLOCK1 = 27
+
+
+@dataclass
+class CoapMessage:
+    mtype: Type
+    code: Code
+    mid: int
+    token: bytes = b""
+    options: list[tuple[int, bytes]] = field(default_factory=list)
+    payload: bytes = b""
+
+    def encode(self) -> bytes:
+        """RFC 7252 §3 wire format."""
+        if len(self.token) > 8:
+            raise ValueError("token too long")
+        out = bytearray()
+        out.append((1 << 6) | (self.mtype << 4) | len(self.token))
+        out.append(self.code)
+        out += self.mid.to_bytes(2, "big")
+        out += self.token
+        prev = 0
+        for num, val in sorted(self.options):
+            delta = num - prev
+            prev = num
+            d, dx = self._nibble(delta)
+            l, lx = self._nibble(len(val))
+            out.append((d << 4) | l)
+            out += dx + lx + val
+        if self.payload:
+            out.append(0xFF)
+            out += self.payload
+        return bytes(out)
+
+    @staticmethod
+    def _nibble(v: int) -> tuple[int, bytes]:
+        if v < 13:
+            return v, b""
+        if v < 269:
+            return 13, bytes([v - 13])
+        return 14, (v - 269).to_bytes(2, "big")
+
+    @classmethod
+    def decode(cls, data: bytes) -> "CoapMessage":
+        ver_t_tkl, code = data[0], data[1]
+        mtype = Type((ver_t_tkl >> 4) & 3)
+        tkl = ver_t_tkl & 0xF
+        mid = int.from_bytes(data[2:4], "big")
+        token = data[4:4 + tkl]
+        pos = 4 + tkl
+        options: list[tuple[int, bytes]] = []
+        num = 0
+        while pos < len(data):
+            if data[pos] == 0xFF:
+                pos += 1
+                break
+            d, l = data[pos] >> 4, data[pos] & 0xF
+            pos += 1
+            d, pos = cls._read_ext(d, data, pos)
+            l, pos = cls._read_ext(l, data, pos)
+            num += d
+            options.append((num, data[pos:pos + l]))
+            pos += l
+        return cls(mtype, Code(code), mid, token, options, data[pos:])
+
+    @staticmethod
+    def _read_ext(v: int, data: bytes, pos: int) -> tuple[int, int]:
+        if v == 13:
+            return data[pos] + 13, pos + 1
+        if v == 14:
+            return int.from_bytes(data[pos:pos + 2], "big") + 269, pos + 2
+        if v == 15:
+            raise ValueError("reserved option nibble")
+        return v, pos
+
+
+def block_option_value(num: int, more: bool, szx: int) -> bytes:
+    """RFC 7959 block option uint: NUM << 4 | M << 3 | SZX."""
+    v = (num << 4) | (int(more) << 3) | szx
+    if v == 0:
+        return b""
+    length = max(1, math.ceil(v.bit_length() / 8))
+    return v.to_bytes(length, "big")
+
+
+def szx_for(block_size: int) -> int:
+    return int(math.log2(block_size)) - 4
+
+
+def blockwise_messages(payload: bytes, *, uri: str, code: Code = Code.POST,
+                       block_size: int = COAP_MAX_PAYLOAD,
+                       mid0: int = 0, token: bytes = b"\x01") -> list[CoapMessage]:
+    """Split a payload into Block1 CoAP messages, each fitting the MTU."""
+    szx = szx_for(block_size)
+    path_opts = [(Option.URI_PATH, seg.encode())
+                 for seg in uri.strip("/").split("/")]
+    fmt_opt = (Option.CONTENT_FORMAT, bytes([CONTENT_CBOR]))
+    n_blocks = max(1, math.ceil(len(payload) / block_size))
+    msgs = []
+    for i in range(n_blocks):
+        chunk = payload[i * block_size:(i + 1) * block_size]
+        more = i < n_blocks - 1
+        opts = list(path_opts) + [fmt_opt]
+        if n_blocks > 1:
+            opts.append((Option.BLOCK1, block_option_value(i, more, szx)))
+        msgs.append(CoapMessage(Type.CON, code, mid0 + i, token, opts, chunk))
+    return msgs
+
+
+@dataclass
+class TransferStats:
+    messages: int = 0          # application payloads
+    blocks: int = 0            # blockwise CoAP messages
+    frames: int = 0            # link frames incl. retransmissions
+    payload_bytes: int = 0
+    wire_bytes: int = 0        # CoAP bytes incl. headers
+    link_bytes: int = 0        # + MAC/6LoWPAN overhead per frame
+    retransmissions: int = 0
+    failed_messages: int = 0   # gave up after MAX_RETRANSMIT
+
+    def add(self, other: "TransferStats") -> None:
+        for f in ("messages", "blocks", "frames", "payload_bytes",
+                  "wire_bytes", "link_bytes", "retransmissions",
+                  "failed_messages"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+
+
+def transfer_stats(payload: bytes, *, uri: str,
+                   code: Code = Code.POST) -> TransferStats:
+    """Frame accounting for one application payload over the 127 B link."""
+    msgs = blockwise_messages(payload, uri=uri, code=code)
+    stats = TransferStats(messages=1, blocks=len(msgs),
+                          payload_bytes=len(payload))
+    for m in msgs:
+        wire = len(m.encode())
+        if wire + LOWPAN_OVERHEAD > IEEE802154_MTU:
+            raise AssertionError(
+                f"CoAP message exceeds MTU: {wire + LOWPAN_OVERHEAD}")
+        stats.frames += 1
+        stats.wire_bytes += wire
+        stats.link_bytes += wire + LOWPAN_OVERHEAD
+    return stats

@@ -1,0 +1,129 @@
+"""CBOR codec unit tests: RFC 8949 Appendix A vectors + structural cases."""
+import math
+
+import pytest
+
+from repro.core import cbor
+from repro.core.cbor import Tag
+
+# (python value, hex encoding) — straight from RFC 8949 Appendix A.
+RFC8949_VECTORS = [
+    (0, "00"),
+    (1, "01"),
+    (10, "0a"),
+    (23, "17"),
+    (24, "1818"),
+    (25, "1819"),
+    (100, "1864"),
+    (1000, "1903e8"),
+    (1000000, "1a000f4240"),
+    (1000000000000, "1b000000e8d4a51000"),
+    (18446744073709551615, "1bffffffffffffffff"),
+    (-1, "20"),
+    (-10, "29"),
+    (-100, "3863"),
+    (-1000, "3903e7"),
+    (0.0, "f90000"),
+    (-0.0, "f98000"),
+    (1.0, "f93c00"),
+    (1.1, "fb3ff199999999999a"),
+    (1.5, "f93e00"),
+    (65504.0, "f97bff"),
+    (100000.0, "fa47c35000"),
+    (3.4028234663852886e38, "fa7f7fffff"),
+    (1.0e300, "fb7e37e43c8800759c"),
+    (5.960464477539063e-8, "f90001"),
+    (0.00006103515625, "f90400"),
+    (-4.0, "f9c400"),
+    (-4.1, "fbc010666666666666"),
+    (math.inf, "f97c00"),
+    (-math.inf, "f9fc00"),
+    (False, "f4"),
+    (True, "f5"),
+    (None, "f6"),
+    (b"", "40"),
+    (b"\x01\x02\x03\x04", "4401020304"),
+    ("", "60"),
+    ("a", "6161"),
+    ("IETF", "6449455446"),
+    ("ü", "62c3bc"),
+    ([], "80"),
+    ([1, 2, 3], "83010203"),
+    ([1, [2, 3], [4, 5]], "8301820203820405"),
+    (list(range(1, 26)),
+     "98190102030405060708090a0b0c0d0e0f101112131415161718181819"),
+    ({}, "a0"),
+    ({1: 2, 3: 4}, "a201020304"),
+    ({"a": 1, "b": [2, 3]}, "a26161016162820203"),
+    (Tag(1, 1363896240), "c11a514b67b0"),
+    (Tag(32, "http://www.example.com"),
+     "d82076687474703a2f2f7777772e6578616d706c652e636f6d"),
+]
+
+
+@pytest.mark.parametrize("value,hexenc", RFC8949_VECTORS)
+def test_encode_rfc8949_vectors(value, hexenc):
+    assert cbor.encode(value).hex() == hexenc
+
+
+@pytest.mark.parametrize("value,hexenc", RFC8949_VECTORS)
+def test_decode_rfc8949_vectors(value, hexenc):
+    decoded = cbor.decode(bytes.fromhex(hexenc))
+    if isinstance(value, float):
+        assert decoded == value or (math.isnan(value) and math.isnan(decoded))
+    else:
+        assert decoded == value
+        assert type(decoded) is type(value) or isinstance(value, (list, tuple))
+
+
+def test_nan_encoding():
+    assert cbor.encode(math.nan).hex() == "f97e00"
+    assert math.isnan(cbor.decode(bytes.fromhex("f97e00")))
+
+
+def test_undefined_roundtrip():
+    data = cbor.encode(cbor.UNDEFINED)
+    assert data == b"\xf7"
+    assert cbor.decode(data) is cbor.UNDEFINED
+
+
+def test_forced_width_encoders():
+    assert cbor.encode_uint64(1).hex() == "1b0000000000000001"
+    assert cbor.encode_float64(1.0).hex() == "fb3ff0000000000000"
+    assert cbor.encode_float32(1.0).hex() == "fa3f800000"
+    assert cbor.encode_float16(1.0).hex() == "f93c00"
+
+
+def test_indefinite_length_decode():
+    # 0x9f = indefinite array, 0xff = break
+    assert cbor.decode(bytes.fromhex("9f010203ff")) == [1, 2, 3]
+    # indefinite bstr of two chunks
+    assert cbor.decode(bytes.fromhex("5f42010243030405ff")) == b"\x01\x02\x03\x04\x05"
+    # indefinite map (RFC 8949 appendix A: {_ "a": 1, "b": [_ 2, 3]})
+    assert cbor.decode(bytes.fromhex("bf61610161629f0203ffff")) == {"a": 1, "b": [2, 3]}
+
+
+def test_trailing_bytes_rejected():
+    with pytest.raises(cbor.CBORDecodeError):
+        cbor.decode(b"\x01\x01")
+
+
+def test_truncated_rejected():
+    with pytest.raises(cbor.CBORDecodeError):
+        cbor.decode(b"\x19\x03")
+
+
+def test_sequence_iteration():
+    data = cbor.encode(1) + cbor.encode([2, 3]) + cbor.encode("x")
+    assert list(cbor.iter_sequence(data)) == [1, [2, 3], "x"]
+
+
+def test_head_size():
+    assert cbor.head_size(0) == 1
+    assert cbor.head_size(23) == 1
+    assert cbor.head_size(24) == 2
+    assert cbor.head_size(255) == 2
+    assert cbor.head_size(256) == 3
+    assert cbor.head_size(65535) == 3
+    assert cbor.head_size(65536) == 5
+    assert cbor.head_size(2**32) == 9

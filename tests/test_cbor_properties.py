@@ -1,0 +1,151 @@
+"""Property-based tests (hypothesis) for the CBOR codec + TinyFL invariants."""
+import math
+import struct
+import uuid
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cbor, cddl
+from repro.core.cbor import Tag
+from repro.core.messages import (
+    FLGlobalModelUpdate,
+    FLLocalModelUpdate,
+    ModelMetadata,
+    ParamsEncoding,
+)
+from repro.core.typed_arrays import decode_typed_array, encode_typed_array
+
+# -- strategies ----------------------------------------------------------------
+
+scalars = st.one_of(
+    st.integers(min_value=-(2**64 - 1) - 0, max_value=2**64 - 1).filter(
+        lambda v: -(2**64) <= v <= 2**64 - 1 and (v >= 0 or -1 - v <= 2**64 - 1)),
+    st.floats(allow_nan=False),
+    st.booleans(),
+    st.none(),
+    st.binary(max_size=64),
+    st.text(max_size=64),
+)
+
+cbor_values = st.recursive(
+    scalars,
+    lambda children: st.one_of(
+        st.lists(children, max_size=8),
+        st.dictionaries(st.one_of(st.integers(min_value=0, max_value=1000),
+                                  st.text(max_size=8)), children, max_size=8),
+        st.builds(Tag, st.integers(min_value=0, max_value=2**32), children),
+    ),
+    max_leaves=30,
+)
+
+
+def _normalize(v):
+    """tuples decode as lists."""
+    if isinstance(v, tuple):
+        return [_normalize(x) for x in v]
+    if isinstance(v, list):
+        return [_normalize(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _normalize(x) for k, x in v.items()}
+    if isinstance(v, Tag):
+        return Tag(v.tag, _normalize(v.value))
+    if isinstance(v, bytearray):
+        return bytes(v)
+    return v
+
+
+@given(cbor_values)
+@settings(max_examples=300, deadline=None)
+def test_roundtrip(value):
+    assert cbor.decode(cbor.encode(value)) == _normalize(value)
+
+
+@given(st.integers(min_value=0, max_value=2**64 - 1))
+def test_uint_minimal_length(v):
+    """Preferred serialization: no shorter valid encoding exists."""
+    enc = cbor.encode(v)
+    expected = 1 if v < 24 else 2 if v <= 0xFF else 3 if v <= 0xFFFF else \
+        5 if v <= 0xFFFFFFFF else 9
+    assert len(enc) == expected
+
+
+@given(st.floats(allow_nan=False))
+def test_float_minimal_width_is_lossless(v):
+    """Minimal-width float selection never loses the exact value."""
+    decoded = cbor.decode(cbor.encode(v))
+    assert decoded == v
+    # and it really is minimal: if it encoded wider than half, half must not fit
+    enc = cbor.encode(v)
+    if len(enc) == 5:
+        assert not cbor.float_fits_half(v)
+    elif len(enc) == 9:
+        assert not cbor.float_fits_single(v)
+
+
+@given(st.lists(st.floats(width=16, allow_nan=False), min_size=1, max_size=100))
+def test_typed_array_f16_roundtrip(values):
+    arr = np.array(values, dtype=np.float16)
+    item = cbor.decode(encode_typed_array(arr))
+    out = decode_typed_array(item)
+    np.testing.assert_array_equal(out, arr)
+
+
+@given(st.lists(st.floats(width=32, allow_nan=False), min_size=1, max_size=100),
+       st.sampled_from([np.float32, np.float64, np.int8, np.uint8, np.int32]))
+def test_typed_array_roundtrip_dtypes(values, dtype):
+    arr = np.array(values).astype(dtype)
+    item = cbor.decode(encode_typed_array(arr))
+    np.testing.assert_array_equal(decode_typed_array(item), arr)
+
+
+@given(st.integers(min_value=1, max_value=2000))
+@settings(max_examples=50, deadline=None)
+def test_cbor_f16_at_most_half_of_json(n):
+    """Paper's headline claim: CBOR-best ≈ 50% of JSON for value 1.0 params,
+    and never larger than the JSON message (for n >= 4)."""
+    msg = FLGlobalModelUpdate(uuid.uuid4(), 1, np.full((n,), 1.0), True)
+    c = len(msg.to_cbor(ParamsEncoding.TA_F16))
+    j = len(msg.to_json())
+    assert c <= j
+    if n >= 100:  # asymptotically 2 bytes vs 4 chars per param
+        assert c / j <= 0.55
+
+
+@given(st.integers(min_value=1, max_value=500),
+       st.integers(min_value=0, max_value=2**32),
+       st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_global_update_roundtrip_property(n, rnd, cont):
+    rng = np.random.default_rng(n)
+    params = rng.standard_normal(n).astype(np.float32)
+    msg = FLGlobalModelUpdate(uuid.uuid4(), rnd, params, cont)
+    data = msg.to_cbor(ParamsEncoding.TA_F32)
+    cddl.validate(cbor.decode(data), cddl.FL_GLOBAL_MODEL_UPDATE)
+    back = FLGlobalModelUpdate.from_cbor(data)
+    assert back.round == rnd and back.continue_training == cont
+    np.testing.assert_allclose(back.params, params, rtol=0, atol=0)
+
+
+@given(st.lists(st.floats(width=32, allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_local_update_f16_quantization_bound(values):
+    """f16 payload error is bounded by half-precision rounding (paper §VII)."""
+    params = np.array(values, dtype=np.float32)
+    msg = FLLocalModelUpdate(uuid.uuid4(), 1, params, ModelMetadata(0.1, 0.2))
+    back = FLLocalModelUpdate.from_cbor(msg.to_cbor(ParamsEncoding.TA_F16))
+    expected = params.astype(np.float16).astype(np.float64)
+    np.testing.assert_array_equal(back.params, expected)
+
+
+@given(st.binary(min_size=0, max_size=300))
+@settings(max_examples=300, deadline=None)
+def test_decoder_never_crashes_on_garbage(data):
+    """Decoder is total: returns a value or raises CBORDecodeError, never
+    anything else (robustness on a lossy link)."""
+    try:
+        cbor.decode(data)
+    except (cbor.CBORDecodeError, UnicodeDecodeError):
+        pass

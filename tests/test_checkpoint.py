@@ -1,0 +1,71 @@
+"""CBOR checkpointing: roundtrip, integrity, pruning, restart fallback."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.checkpoint.cbor_checkpoint import CheckpointCorrupt
+
+
+def _tree():
+    return {"layer": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                      "b": np.ones(4, np.float32)},
+            "step_arr": np.array([7], np.int32)}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    p = save_checkpoint(tmp_path / "ck.cbor", tree, step=3, round_=2,
+                        meta={"model_id": "x"})
+    restored, header = restore_checkpoint(p, tree)
+    assert header["step"] == 3 and header["round"] == 2
+    for a, b in zip(np.asarray(restored["layer"]["w"]), tree["layer"]["w"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_bfloat16_leaves_roundtrip_as_f32(tmp_path):
+    tree = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    p = save_checkpoint(tmp_path / "ck.cbor", tree)
+    restored, _ = restore_checkpoint(p, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.ones((4, 4), np.float32))
+
+
+def test_corruption_detected(tmp_path):
+    tree = _tree()
+    p = save_checkpoint(tmp_path / "ck.cbor", tree)
+    raw = bytearray(p.read_bytes())
+    raw[-5] ^= 0xFF  # flip a payload byte
+    p.write_bytes(bytes(raw))
+    with pytest.raises((CheckpointCorrupt, Exception)):
+        restore_checkpoint(p, tree)
+
+
+def test_manager_prunes_and_restores_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = _tree()
+    for step in (1, 2, 3, 4):
+        tree["layer"]["b"] = np.full(4, float(step), np.float32)
+        mgr.save(tree, step)
+    assert len(list(tmp_path.glob("ckpt_*.cbor"))) == 2
+    restored, header = mgr.restore_latest(tree)
+    assert header["step"] == 4
+    np.testing.assert_array_equal(np.asarray(restored["layer"]["b"]),
+                                  np.full(4, 4.0, np.float32))
+
+
+def test_manager_falls_back_past_corrupt_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    tree = _tree()
+    mgr.save(tree, 1)
+    mgr.save(tree, 2)
+    latest = mgr.latest()
+    latest.write_bytes(latest.read_bytes()[:40])  # torn write
+    restored = mgr.restore_latest(tree)
+    assert restored is not None
+    _, header = restored
+    assert header["step"] == 1
+
+
+def test_restore_none_when_empty(tmp_path):
+    assert CheckpointManager(tmp_path).restore_latest(_tree()) is None

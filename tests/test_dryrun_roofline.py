@@ -1,0 +1,121 @@
+"""Dry-run machinery smoke test (subprocess; 512 fake devices) + roofline math."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.roofline import RooflineRow, corrected_costs, model_flops
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    """End-to-end: lower+compile one cheap cell on the production mesh."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen2_0_5b", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        cwd=REPO, env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+        capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.loads((tmp_path / "qwen2_0_5b__decode_32k__single.json")
+                     .read_text())
+    assert rec["status"] == "ok"
+    assert rec["cost"]["flops"] > 0
+    assert rec["memory"]["peak_estimate_bytes"] > 0
+    assert rec["unit"]["multiplier"] == 24
+
+
+def test_collective_parser():
+    hlo = """
+HloModule m
+ENTRY %main (p: f32[128,256]) -> f32[128,256] {
+  %p = f32[128,256] parameter(0)
+  %ag = f32[128,4096] all-gather(f32[128,256] %p), replica_groups={}
+  %ar = f32[128,256] all-reduce(f32[128,256] %p), to_apply=%add
+  ROOT %cp = f32[128,256] collective-permute(f32[128,256] %p)
+}
+"""
+    stats = collective_stats(hlo)
+    assert stats.count_by_kind["all-gather"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 128 * 4096 * 4
+    assert stats.bytes_by_kind["all-reduce"] == 2 * 128 * 256 * 4
+    assert stats.bytes_by_kind["collective-permute"] == 128 * 256 * 4
+
+
+def test_collective_parser_while_trip_counts():
+    """A collective inside a while body counts trip-count times."""
+    hlo = """
+HloModule m
+
+%cond (s: (s32[], f32[64])) -> pred[] {
+  %s = (s32[], f32[64]) parameter(0)
+  %i = s32[] get-tuple-element(%s), index=0
+  %k = s32[] constant(24)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %k), direction=LT
+}
+
+%body (s: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %s = (s32[], f32[64]) parameter(0)
+  %x = f32[64] get-tuple-element(%s), index=1
+  %ar = f32[64] all-reduce(f32[64] %x), to_apply=%add
+  %i = s32[] get-tuple-element(%s), index=0
+  ROOT %t = (s32[], f32[64]) tuple(%i, %ar)
+}
+
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64]) tuple(%zero, %p)
+  %w = (s32[], f32[64]) while((s32[], f32[64]) %init), condition=%cond, body=%body
+  ROOT %out = f32[64] get-tuple-element(%w), index=1
+}
+"""
+    stats = collective_stats(hlo)
+    assert stats.bytes_by_kind["all-reduce"] == 24 * 2 * 64 * 4
+
+
+def _fake_rec(step_f, while_f, unroll_f, mult, mb=1, mbbody=None):
+    unit = {
+        "multiplier": mult, "microbatches": mb,
+        "while": {"cost": {"flops": while_f, "bytes": 0},
+                  "collectives": {"total_bytes": 0}},
+        "unroll": {"cost": {"flops": unroll_f, "bytes": 0},
+                   "collectives": {"total_bytes": 0}},
+    }
+    if mbbody is not None:
+        unit["mbbody"] = {"cost": {"flops": mbbody, "bytes": 0},
+                          "collectives": {"total_bytes": 0}}
+    return {"cost": {"flops": step_f, "bytes": 0},
+            "collectives": {"total_bytes": 0}, "unit": unit}
+
+
+def test_scan_correction_single_level():
+    # step = outside(10) + body_while(5); true = 10 + 24*6
+    rec = _fake_rec(step_f=15, while_f=5, unroll_f=6, mult=24)
+    f, _, _ = corrected_costs(rec)
+    assert f == 15 - 5 + 24 * 6
+
+
+def test_scan_correction_two_level():
+    # mb body = inner(7, layer-while counted once: 5); true mb = 7-5+24*6=146
+    # step = outside(3) + mbbody-once(7) = 10; true = 10 - 7 + 4*146 = 587
+    rec = _fake_rec(step_f=10, while_f=5, unroll_f=6, mult=24, mb=4, mbbody=7)
+    f, _, _ = corrected_costs(rec)
+    assert f == 10 - 7 + 4 * (7 - 5 + 24 * 6)
+
+
+def test_model_flops_and_roofline_row():
+    rec = {"shape": "train_4k", "kind": "train",
+           "model": {"active_params": 1_000_000_000}}
+    assert model_flops(rec) == 6.0 * 1e9 * 256 * 4096
+    row = RooflineRow("a", "train_4k", "train", 256,
+                      flops=1e14, bytes_hbm=1e11, coll_bytes=1e9,
+                      mem_gb=10.0, model_flops=6.0 * 1e9 * 256 * 4096)
+    assert row.bottleneck == "compute"
+    assert 0 < row.roofline_fraction < 1
+    assert row.t_compute > row.t_memory > row.t_collective

@@ -1,0 +1,142 @@
+"""Flash attention (chunked scan + custom FA2-style VJP) vs naive reference."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import flash_attention
+from repro.parallel.sharding import ShardingPolicy
+
+POLICY = ShardingPolicy(mesh=None)
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    B, S, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    qi, ki = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qi >= ki
+    if window:
+        mask &= qi - ki < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, Dh)
+
+
+def _qkv(B=2, S=67, H=4, K=2, Dh=16, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, K, Dh)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (67, 16), (16, 16), (130, 32)])
+@pytest.mark.parametrize("window", [0, 24])
+def test_forward_matches_naive(S, chunk, window):
+    q, k, v = _qkv(S=S)
+    out = flash_attention(q, k, v, chunk=chunk, window=window, policy=POLICY)
+    ref = naive_attention(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [0, 24])
+def test_grads_match_naive(window):
+    q, k, v = _qkv(S=48)
+
+    def f_flash(q, k, v):
+        o = flash_attention(q, k, v, chunk=16, window=window, policy=POLICY)
+        return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+
+    def f_ref(q, k, v):
+        return jnp.sum(jnp.sin(naive_attention(q, k, v, window=window)))
+
+    g_flash = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g_flash, g_ref, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=3e-5, rtol=3e-5, err_msg=name)
+
+
+def test_grad_unroll_matches_while():
+    q, k, v = _qkv(S=64)
+
+    def f(unroll):
+        def g(q, k, v):
+            o = flash_attention(q, k, v, chunk=16, policy=POLICY,
+                                unroll=unroll)
+            return jnp.sum(o * o)
+        return jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+
+    for a, b in zip(f(True), f(False)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def test_mqa_and_mha_paths():
+    for K in (1, 4):
+        q, k, v = _qkv(K=K)
+        out = flash_attention(q, k, v, chunk=32, policy=POLICY)
+        ref = naive_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# --- head padding (§Perf H1) ---------------------------------------------------
+
+class _FakeTPPolicy(ShardingPolicy):
+    """mesh-less policy that pretends the TP axis has 4 devices."""
+
+    def axis_size(self, logical):
+        return 4 if logical == "tp" else 1
+
+
+def test_head_padding_is_exact():
+    """Padded-head attention == unpadded attention (zero wo rows)."""
+    import dataclasses
+    from repro.configs.base import ModelConfig
+    from repro.models.layers import attention_block, init_attention
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=6, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      head_dim=8, attn_chunk=16, qkv_bias=True,
+                      param_dtype="float32")
+    p = init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 24, 32)),
+                    jnp.float32)
+    base = attention_block(p, x, cfg, POLICY)
+    padded_cfg = dataclasses.replace(cfg, pad_attn_heads_to_tp=True)
+    padded = attention_block(p, x, padded_cfg, _FakeTPPolicy(mesh=None))
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(base),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_head_padding_decode_is_exact():
+    import dataclasses
+    from repro.configs.base import ModelConfig
+    from repro.models.layers import attention_decode, init_attention
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=6, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      head_dim=8, attn_chunk=16, param_dtype="float32")
+    p = init_attention(jax.random.PRNGKey(1), cfg, jnp.float32)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 1, 32)), jnp.float32)
+    cache = (jnp.asarray(rng.standard_normal((2, 16, 2, 8)), jnp.float32),
+             jnp.asarray(rng.standard_normal((2, 16, 2, 8)), jnp.float32))
+    pos = jnp.int32(7)
+    base, _ = attention_decode(p, x, cfg, POLICY, cache, pos)
+    padded_cfg = dataclasses.replace(cfg, pad_attn_heads_to_tp=True)
+    padded, _ = attention_decode(p, x, padded_cfg, _FakeTPPolicy(mesh=None),
+                                 cache, pos)
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(base),
+                               atol=2e-5, rtol=2e-5)

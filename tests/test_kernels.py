@@ -1,0 +1,145 @@
+"""Pallas kernel validation (interpret=True on CPU) vs pure-jnp ref oracles.
+
+Per kernel: sweep shapes (aligned, unaligned, tiny, large) and value ranges,
+assert_allclose against ref.py, plus hypothesis property tests on invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.fedavg.fedavg import fedavg_reduce
+from repro.kernels.fedavg.ref import fedavg_ref
+from repro.kernels.q8_block.q8_block import BLOCK, dequantize_q8, quantize_q8
+from repro.kernels.q8_block.ref import dequantize_q8_ref, quantize_q8_ref
+from repro.kernels.quantize_f16.ops import (
+    f16_payload_to_params,
+    params_to_f16_payload,
+)
+from repro.kernels.quantize_f16.quantize_f16 import dequantize_f16, quantize_f16
+from repro.kernels.quantize_f16.ref import dequantize_f16_ref, quantize_f16_ref
+
+SIZES = [1, 7, 128, 1024, 1025, 44_426, 262_144]  # incl. LeNet-5 param count
+
+
+# --- quantize_f16 -------------------------------------------------------------
+
+@pytest.mark.parametrize("n", SIZES)
+def test_quantize_f16_matches_ref(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n) * 100, jnp.float32)
+    out = quantize_f16(x)
+    ref = quantize_f16_ref(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("n", [128, 4096])
+def test_dequantize_f16_matches_ref(n):
+    rng = np.random.default_rng(n)
+    bits = jnp.asarray(rng.integers(0, 2**16, n), jnp.uint16)
+    out = dequantize_f16(bits)
+    ref = dequantize_f16_ref(bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@given(st.lists(st.floats(width=16, allow_nan=False), min_size=1, max_size=300))
+@settings(max_examples=30, deadline=None)
+def test_f16_roundtrip_exact_for_representable(values):
+    x = jnp.asarray(np.array(values, np.float16).astype(np.float32))
+    back = dequantize_f16(quantize_f16(x))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_f16_payload_matches_cbor_typed_array():
+    """Kernel payload bytes == numpy astype('<f2') bytes (CBOR tag 84)."""
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.standard_normal(5000), jnp.float32)
+    payload = params_to_f16_payload(flat)
+    expected = np.asarray(flat).astype("<f2").tobytes()
+    assert payload == expected
+    back = f16_payload_to_params(payload)
+    np.testing.assert_array_equal(back, np.asarray(flat).astype(np.float16)
+                                  .astype(np.float32))
+
+
+# --- q8_block -----------------------------------------------------------------
+
+@pytest.mark.parametrize("nblocks", [1, 2, 127, 128, 129, 1000])
+@pytest.mark.parametrize("scale", [1e-3, 1.0, 1e4])
+def test_q8_matches_ref(nblocks, scale):
+    rng = np.random.default_rng(nblocks)
+    x = jnp.asarray(rng.standard_normal((nblocks, BLOCK)) * scale, jnp.float32)
+    q, s = quantize_q8(x)
+    q_ref, s_ref = quantize_q8_ref(x)
+    # f32 associativity (reciprocal-multiply vs divide) allows 1-2 ULP drift
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    diff = np.abs(np.asarray(q).astype(int) - np.asarray(q_ref).astype(int))
+    assert diff.max() <= 1 and (diff != 0).mean() < 1e-3
+    deq = dequantize_q8(q, s)
+    deq_ref = dequantize_q8_ref(q_ref, s_ref)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(deq_ref),
+                               rtol=1e-6, atol=float(scale) * 1e-2)
+
+
+def test_q8_zero_block_safe():
+    x = jnp.zeros((4, BLOCK), jnp.float32)
+    q, s = quantize_q8(x)
+    assert not np.isnan(np.asarray(s)).any()
+    np.testing.assert_array_equal(np.asarray(q), 0)
+
+
+@given(st.integers(1, 50), st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_q8_error_bound_property(nblocks, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((nblocks, BLOCK)), jnp.float32)
+    q, s = quantize_q8(x)
+    err = np.abs(np.asarray(dequantize_q8(q, s)) - np.asarray(x))
+    bound = np.abs(np.asarray(x)).max(1) / 127.0 * 0.5 + 1e-6
+    assert (err <= bound[:, None]).all()
+
+
+# --- fedavg -------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,n", [(1, 100), (3, 2048), (16, 44_426), (64, 4096)])
+def test_fedavg_matches_ref(k, n):
+    rng = np.random.default_rng(k * n)
+    updates = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    weights = jnp.asarray(rng.integers(1, 500, k), jnp.float32)
+    out = fedavg_reduce(updates, weights)
+    ref = fedavg_ref(updates, weights)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-6, atol=2e-6)
+
+
+def test_fedavg_identity_single_client():
+    u = jnp.asarray(np.random.default_rng(0).standard_normal((1, 333)),
+                    jnp.float32)
+    out = fedavg_reduce(u, jnp.asarray([17.0]))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(u[0]), rtol=1e-6)
+
+
+@given(st.integers(2, 8), st.integers(1, 500))
+@settings(max_examples=20, deadline=None)
+def test_fedavg_convexity_property(k, n):
+    """Output is inside the per-coordinate envelope of the inputs."""
+    rng = np.random.default_rng(k + n)
+    updates = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    weights = jnp.asarray(rng.integers(1, 100, k), jnp.float32)
+    out = np.asarray(fedavg_reduce(updates, weights))
+    u = np.asarray(updates)
+    assert (out <= u.max(0) + 1e-5).all() and (out >= u.min(0) - 1e-5).all()
+
+
+def test_fedavg_agrees_with_fl_aggregation():
+    """Kernel result == the FL runtime's numpy fedavg."""
+    from repro.fl.aggregation import fedavg as np_fedavg
+    rng = np.random.default_rng(5)
+    updates = rng.standard_normal((5, 1000)).astype(np.float32)
+    sizes = rng.integers(10, 100, 5)
+    a = np_fedavg(list(updates), list(sizes))
+    b = np.asarray(fedavg_reduce(jnp.asarray(updates),
+                                 jnp.asarray(sizes, jnp.float32)))
+    np.testing.assert_allclose(a, b, rtol=2e-6, atol=2e-6)

@@ -1,0 +1,97 @@
+"""Params codec: flatten/unflatten, q8 quantization, error feedback, top-k."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cbor
+from repro.core.params_codec import (
+    ErrorFeedback,
+    decode_q8,
+    decode_topk,
+    delta_decode,
+    delta_encode,
+    encode_q8,
+    encode_topk,
+    flatten_params,
+    quantize_q8,
+    unflatten_params,
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": rng.standard_normal((3, 5)).astype(np.float32),
+            "b": {"c": rng.standard_normal(7).astype(np.float32),
+                  "d": rng.standard_normal((2, 2, 2)).astype(np.float32)}}
+
+
+def test_flatten_roundtrip():
+    tree = _tree()
+    flat, spec = flatten_params(tree)
+    assert flat.size == spec.total == 15 + 7 + 8
+    back = unflatten_params(flat, spec)
+    for (_, a), (_, b) in zip(
+            sorted({"a": tree["a"], "c": tree["b"]["c"], "d": tree["b"]["d"]}.items()),
+            sorted({"a": back["a"], "c": back["b"]["c"], "d": back["b"]["d"]}.items())):
+        np.testing.assert_array_equal(a, b)
+
+
+@given(st.integers(min_value=1, max_value=3000), st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_q8_error_bound(n, seed):
+    rng = np.random.default_rng(seed)
+    flat = (rng.standard_normal(n) * 10).astype(np.float32)
+    q, scales, deq = quantize_q8(flat, block=256)
+    # per-block max error is scale/2 = absmax/254
+    err = np.abs(deq - flat)
+    blocks = np.pad(flat, (0, (-n) % 256)).reshape(-1, 256)
+    bound = np.abs(blocks).max(1) / 127.0 * 0.5 + 1e-7
+    assert (err.reshape(-1) <= np.repeat(bound, 256)[:n] + 1e-6).all()
+
+
+def test_q8_cbor_roundtrip():
+    flat = np.linspace(-4, 4, 1000).astype(np.float32)
+    item, err = encode_q8(flat)
+    decoded = decode_q8(cbor.decode(item), flat.size)
+    np.testing.assert_allclose(decoded, flat, atol=4 / 127 * 0.51 + 1e-6)
+    np.testing.assert_allclose(flat - decoded, err, atol=1e-7)
+
+
+def test_q8_size_is_quarter_of_f32():
+    flat = np.random.default_rng(0).standard_normal(100_000).astype(np.float32)
+    item, _ = encode_q8(flat, block=256)
+    assert len(item) < 0.27 * flat.size * 4
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the running mean of dequantized updates converges to the
+    true mean (unbiased compressed aggregation)."""
+    rng = np.random.default_rng(0)
+    true = rng.standard_normal(512).astype(np.float32) * 0.01
+    ef = ErrorFeedback()
+    acc = np.zeros_like(true)
+    for _ in range(50):
+        comp = ef.compensate(true)
+        _, scales, deq = quantize_q8(comp, block=128)
+        ef.update(comp - deq)
+        acc += deq
+    np.testing.assert_allclose(acc / 50, true, atol=2e-4)
+
+
+def test_topk_roundtrip():
+    flat = np.zeros(1000, np.float32)
+    flat[[3, 500, 999]] = [5.0, -7.0, 2.0]
+    item, err = encode_topk(flat, k=3)
+    out = decode_topk(cbor.decode(item))
+    np.testing.assert_allclose(out, flat, atol=1e-2)
+    assert np.abs(err).max() < 1e-2
+
+
+def test_delta_roundtrip():
+    rng = np.random.default_rng(1)
+    base = rng.standard_normal(100).astype(np.float32)
+    new = base + 0.01 * rng.standard_normal(100).astype(np.float32)
+    d = delta_encode(new, base)
+    np.testing.assert_allclose(delta_decode(d, base), new, rtol=1e-6)
+    assert np.abs(d).max() < 0.1  # deltas quantize much better than weights

@@ -1,0 +1,89 @@
+"""CoAP layer + lossy-link simulation tests."""
+import numpy as np
+import pytest
+
+from repro.transport.coap import (
+    COAP_MAX_PAYLOAD,
+    IEEE802154_MTU,
+    LOWPAN_OVERHEAD,
+    CoapMessage,
+    Code,
+    Option,
+    Type,
+    block_option_value,
+    blockwise_messages,
+    transfer_stats,
+)
+from repro.transport.network import LossyLink
+
+
+def test_coap_roundtrip():
+    msg = CoapMessage(Type.CON, Code.POST, mid=0x1234, token=b"\xaa\xbb",
+                      options=[(Option.URI_PATH, b"fl"),
+                               (Option.URI_PATH, b"model"),
+                               (Option.CONTENT_FORMAT, b"\x3c")],
+                      payload=b"hello-cbor")
+    back = CoapMessage.decode(msg.encode())
+    assert back.mtype == Type.CON and back.code == Code.POST
+    assert back.mid == 0x1234 and back.token == b"\xaa\xbb"
+    assert back.options == sorted(msg.options)
+    assert back.payload == b"hello-cbor"
+
+
+def test_option_delta_extended():
+    # option numbers forcing 13/14 extended deltas
+    msg = CoapMessage(Type.NON, Code.GET, 1, b"", options=[(300, b"x"), (11, b"a")])
+    back = CoapMessage.decode(msg.encode())
+    assert back.options == [(11, b"a"), (300, b"x")]
+
+
+def test_block_option_value():
+    assert block_option_value(0, False, 0) == b""   # all-zero -> empty option
+    assert block_option_value(0, False, 2) == bytes([0x02])
+    assert block_option_value(1, True, 2) == bytes([0x1A])
+    assert block_option_value(300, False, 2) == (300 << 4 | 2).to_bytes(2, "big")
+
+
+@pytest.mark.parametrize("size", [0, 1, 63, 64, 65, 1000, 20027])
+def test_blockwise_fits_mtu(size):
+    payload = bytes(size % 251 for _ in range(size))
+    msgs = blockwise_messages(payload, uri="fl/model")
+    assert b"".join(m.payload for m in msgs) == payload
+    for m in msgs:
+        assert len(m.encode()) + LOWPAN_OVERHEAD <= IEEE802154_MTU
+
+
+def test_small_message_single_frame():
+    """Paper §VI-B2: FL_Local_DataSet_Update (<=28 B) always fits one frame."""
+    stats = transfer_stats(b"\x00" * 28, uri="fl/progress", code=Code.CONTENT)
+    assert stats.frames == 1
+
+
+def test_large_model_frame_count():
+    """20 kB model -> blockwise, ~payload/64 frames."""
+    stats = transfer_stats(b"\x01" * 20027, uri="fl/model")
+    assert stats.messages == 1
+    assert stats.frames == stats.blocks == -(-20027 // COAP_MAX_PAYLOAD)
+    assert stats.wire_bytes > stats.payload_bytes  # header overhead counted
+
+
+def test_lossy_link_retransmits_deterministically():
+    a = LossyLink(drop_prob=0.2, seed=42).send_payload(
+        b"\x02" * 5000, uri="fl/model")
+    b = LossyLink(drop_prob=0.2, seed=42).send_payload(
+        b"\x02" * 5000, uri="fl/model")
+    assert a.retransmissions == b.retransmissions > 0
+    assert a.frames == a.blocks + a.retransmissions
+    assert a.failed_messages == 0
+
+
+def test_link_gives_up_after_max_retransmits():
+    link = LossyLink(drop_prob=0.95, seed=1)
+    stats = link.send_payload(b"\x02" * 500, uri="fl/model")
+    assert stats.failed_messages == 1
+
+
+def test_lossless_link_no_retries():
+    s = LossyLink(drop_prob=0.0).send_payload(b"\x03" * 1000, uri="fl/model")
+    assert s.retransmissions == 0
+    assert LossyLink.airtime_seconds(s) > 0
