@@ -1,24 +1,34 @@
-"""Codec throughput: encode/decode µs per model size.
+"""Codec throughput: encode/decode µs per model size, plus BENCH_codec.json.
 
 Compares the paths that exist in the system:
   * python_ref    — the pure-Python CBOR item encoder (oracle)
-  * numpy_ta      — vectorized typed-array payload (np.astype + tobytes)
+  * numpy_ta      — message encode via the zero-copy fast path
+  * decode_seed   — the seed decode chain: recursive oracle decode (payload
+                    sliced to fresh bytes) + a ``bytes()`` copy before
+                    ``np.frombuffer`` — kept inline as the baseline the
+                    ISSUE's ≥3x decode criterion is measured against
+  * decode_fastpath — iterative memoryview decode, ``np.frombuffer`` on the
+                    zero-copy payload view
   * pallas_f16    — the quantize_f16 kernel path (interpret mode on CPU;
                     on TPU this is the compiled VMEM-tiled kernel)
   * q8_kernel     — blockwise int8 compression kernel
+
+``run()`` prints the CSV section; ``run_json()`` additionally returns the
+machine-readable record (encode/decode MB/s and tracemalloc peak bytes per
+model size) that ``benchmarks/run.py`` writes to ``BENCH_codec.json`` so the
+perf trajectory is tracked PR over PR.
 """
 from __future__ import annotations
 
 import time
+import tracemalloc
 import uuid
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cbor
+from repro.core import cbor, fastpath
 from repro.core.messages import FLGlobalModelUpdate, ParamsEncoding
-from repro.kernels.q8_block.ops import compress_update
-from repro.kernels.quantize_f16.ops import params_to_f16_payload
+from repro.core.typed_arrays import decode_typed_array
 
 UUID = uuid.UUID(bytes=bytes(range(16)))
 SIZES = [1000, 10_000, 44_426, 1_000_000]
@@ -32,30 +42,86 @@ def _time(fn, repeats=5) -> float:
     return (time.perf_counter() - t0) / repeats * 1e6
 
 
-def run() -> list[str]:
+def _peak_alloc(fn) -> int:
+    tracemalloc.start()
+    fn()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return peak
+
+
+def _decode_seed(data: bytes) -> np.ndarray:
+    """The seed decode chain, verbatim: oracle decode (payload slice copy)
+    then a bytes() round-trip into np.frombuffer (second copy)."""
+    item = cbor.decode(data)
+    ta = item[2]
+    return np.frombuffer(bytes(ta.value), dtype="<f4")
+
+
+def _decode_fastpath(data: bytes) -> np.ndarray:
+    item = fastpath.decode(data)
+    return decode_typed_array(item[2])
+
+
+def _paths(n: int, flat: np.ndarray, msg: FLGlobalModelUpdate,
+           wire_f32: bytes, jflat) -> dict:
+    from repro.kernels.q8_block.ops import compress_update
+    from repro.kernels.quantize_f16.ops import params_to_f16_payload
+
+    return {
+        "python_ref_dynamic": (lambda: cbor.encode(
+            [float(v) for v in flat[: min(n, 10_000)]]),
+            min(n, 10_000) * 4),
+        "numpy_ta_f16": (lambda: msg.to_cbor(ParamsEncoding.TA_F16), n * 4),
+        "numpy_ta_f32": (lambda: msg.to_cbor(ParamsEncoding.TA_F32), n * 4),
+        "decode_seed_f32": (lambda: _decode_seed(wire_f32), n * 4),
+        "decode_fastpath_f32": (lambda: _decode_fastpath(wire_f32), n * 4),
+        "pallas_f16": (lambda: params_to_f16_payload(jflat), n * 4),
+        "q8_kernel": (lambda: compress_update(jflat), n * 4),
+    }
+
+
+def run_json() -> tuple[list[str], dict]:
+    """-> (CSV rows, BENCH_codec.json record)."""
+    import jax.numpy as jnp
+
     rows = ["path,model_size,us_per_call,derived_MBps"]
+    record: dict = {"bench": "codec_throughput", "unit": "MB/s", "sizes": {}}
     rng = np.random.default_rng(0)
     for n in SIZES:
         flat = rng.standard_normal(n).astype(np.float32)
         jflat = jnp.asarray(flat)
         msg = FLGlobalModelUpdate(UUID, 1, flat, True)
+        wire_f32 = msg.to_cbor(ParamsEncoding.TA_F32)
 
-        paths = {
-            "python_ref_dynamic": (lambda: cbor.encode(
-                [float(v) for v in flat[: min(n, 10_000)]]),
-                min(n, 10_000) * 4),
-            "numpy_ta_f16": (lambda: msg.to_cbor(ParamsEncoding.TA_F16),
-                             n * 4),
-            "numpy_ta_f32": (lambda: msg.to_cbor(ParamsEncoding.TA_F32),
-                             n * 4),
-            "pallas_f16": (lambda: params_to_f16_payload(jflat), n * 4),
-            "q8_kernel": (lambda: compress_update(jflat), n * 4),
-        }
-        for name, (fn, nbytes) in paths.items():
+        entry: dict = {"bytes_f32_payload": n * 4}
+        for name, (fn, nbytes) in _paths(n, flat, msg, wire_f32,
+                                         jflat).items():
             us = _time(fn)
             rows.append(f"{name},{n},{us:.1f},{nbytes / us:.1f}")
+            entry[name] = {"us_per_call": round(us, 1),
+                           "MBps": round(nbytes / us, 1)}
+        entry["speedup_decode_fastpath_vs_seed"] = round(
+            entry["decode_seed_f32"]["us_per_call"]
+            / entry["decode_fastpath_f32"]["us_per_call"], 2)
+        entry["peak_alloc_encode_fastpath"] = _peak_alloc(
+            lambda: msg.to_cbor(ParamsEncoding.TA_F32))
+        entry["peak_alloc_decode_seed"] = _peak_alloc(
+            lambda: _decode_seed(wire_f32))
+        entry["peak_alloc_decode_fastpath"] = _peak_alloc(
+            lambda: _decode_fastpath(wire_f32))
+        record["sizes"][str(n)] = entry
+    return rows, record
+
+
+def run() -> list[str]:
+    rows, _ = run_json()
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import json
+
+    rows, record = run_json()
+    print("\n".join(rows))
+    print(json.dumps(record, indent=2))

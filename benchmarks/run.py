@@ -1,7 +1,11 @@
-# One function per paper table. Prints CSV sections.
+# One function per paper table. Prints CSV sections; also writes
+# BENCH_codec.json (codec MB/s + peak allocations) so the serialization
+# perf trajectory is tracked from PR to PR.
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 
 def main() -> None:
@@ -12,10 +16,17 @@ def main() -> None:
         bench_message_sizes,
     )
 
+    def codec_run():
+        rows, record = bench_codec_throughput.run_json()
+        out = Path(__file__).resolve().parent.parent / "BENCH_codec.json"
+        out.write_text(json.dumps(record, indent=2) + "\n")
+        rows.append(f"# wrote {out}")
+        return rows
+
     sections = [
         ("table1_message_sizes", bench_message_sizes.run),
         ("table2_lenet5", bench_lenet.run),
-        ("codec_throughput", bench_codec_throughput.run),
+        ("codec_throughput", codec_run),
         ("fl_round_accounting", bench_fl_round.run),
     ]
     for name, fn in sections:

@@ -1,9 +1,10 @@
 # The paper's primary contribution: TinyFL CBOR message serialization for
-# federated learning.  RFC 8949 codec, RFC 8746 typed arrays, CDDL schema
-# validation, the three TinyFL message types, and the JSON/Protobuf baselines
-# the paper evaluates against.
-from repro.core import cbor, cddl, messages, typed_arrays
+# federated learning.  RFC 8949 codec (oracle + zero-copy fast path),
+# RFC 8746 typed arrays, CDDL schema validation, the three TinyFL message
+# types, and the JSON/Protobuf baselines the paper evaluates against.
+from repro.core import cbor, cddl, fastpath, messages, typed_arrays
 from repro.core.cbor import Tag, decode, encode
+from repro.core.fastpath import CBORSequenceReader, CBORSequenceWriter, Raw
 from repro.core.messages import (
     FLGlobalModelUpdate,
     FLLocalDataSetUpdate,
@@ -14,8 +15,9 @@ from repro.core.messages import (
 )
 
 __all__ = [
-    "cbor", "cddl", "messages", "typed_arrays",
+    "cbor", "cddl", "fastpath", "messages", "typed_arrays",
     "Tag", "decode", "encode",
+    "CBORSequenceReader", "CBORSequenceWriter", "Raw",
     "FLGlobalModelUpdate", "FLLocalDataSetUpdate", "FLLocalModelUpdate",
     "FLModelChunk", "ModelMetadata", "ParamsEncoding",
 ]

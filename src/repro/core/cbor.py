@@ -1,10 +1,13 @@
 """RFC 8949 CBOR codec, from scratch.
 
-This is the reference ("oracle") implementation of the paper's serialization
-substrate.  It favours clarity and exactness over speed: every encoder makes
-the *shortest* valid encoding (preferred serialization, RFC 8949 §4.1), which
-is what the paper's "CBOR best" numbers assume.  The "CBOR worst" numbers use
-the forced-width helpers (``encode_uint64``/``encode_float64``).
+This is the reference ("oracle") half of the repo's two-codec architecture:
+it favours clarity and exactness over speed, and defines the byte-exact
+contract that ``repro.core.fastpath`` — the zero-copy streaming codec used
+on every hot path — must match (a differential test asserts identical
+output).  Every encoder here makes the *shortest* valid encoding (preferred
+serialization, RFC 8949 §4.1), which is what the paper's "CBOR best" numbers
+assume.  The "CBOR worst" numbers use the forced-width helpers
+(``encode_uint64``/``encode_float64``).
 
 Supported: unsigned/negative integers, byte/text strings, arrays, maps, tags,
 simple values (false/true/null/undefined), half/single/double floats with
@@ -374,9 +377,16 @@ def decode_prefix(data: bytes) -> tuple[Any, int]:
 
 
 def iter_sequence(data: bytes) -> Iterator[Any]:
-    """Iterate items of an RFC 8742 CBOR sequence."""
-    pos = 0
-    while pos < len(data):
-        item, used = decode_prefix(data[pos:])
-        pos += used
+    """Iterate items of an RFC 8742 CBOR sequence.
+
+    Cursor-based: one shared reader advances through the buffer, so the
+    whole sequence costs O(n) (the old per-item ``data[pos:]`` tail slice
+    made this quadratic).  ``fastpath.CBORSequenceReader`` additionally
+    decodes byte strings as zero-copy views and accepts file objects.
+    """
+    reader = _Reader(data)
+    while reader.pos < len(data):
+        item = _decode_item(reader)
+        if item is BREAK:
+            raise CBORDecodeError("unexpected break code in sequence")
         yield item

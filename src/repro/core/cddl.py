@@ -66,7 +66,8 @@ class Bstr(Node):
     length: int | None = None
 
     def check(self, value: Any) -> None:
-        if not isinstance(value, (bytes, bytearray)):
+        # memoryview: the zero-copy fast-path decoder returns bstr as views.
+        if not isinstance(value, (bytes, bytearray, memoryview)):
             raise CDDLValidationError(f"expected bstr, got {type(value)!r}")
         if self.length is not None and len(value) != self.length:
             raise CDDLValidationError(

@@ -32,8 +32,9 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import cbor
+from repro.core import cbor, fastpath
 from repro.core.cbor import Tag
+from repro.core.fastpath import Raw
 from repro.core.typed_arrays import (
     TAG_BF16LE,
     TAG_F16LE,
@@ -74,19 +75,24 @@ _TA_DTYPES = {
 
 def _encode_params(params: np.ndarray, encoding: ParamsEncoding,
                    payload: bytes | None = None) -> object:
-    """Build the CBOR object for fl-model-params."""
+    """Build the CBOR object for fl-model-params.
+
+    Typed-array encodings return the numpy array itself (or ``Tag(tag,
+    ndarray)`` for extension tags): the fast-path encoder writes the array
+    buffer straight into the preallocated output, so the payload is copied
+    exactly once end to end.
+    """
     if encoding in _TA_TAGS:
         if payload is not None:  # pre-quantized bytes (Pallas kernel output)
-            return _RawItem(encode_typed_array_from_payload(payload, _TA_TAGS[encoding]))
+            return Raw(encode_typed_array_from_payload(payload, _TA_TAGS[encoding]))
         if encoding is ParamsEncoding.TA_BF16:
             bits = _f32_to_bf16_bits(np.asarray(params, dtype=np.float32))
-            return _RawItem(encode_typed_array(bits, tag=TAG_BF16LE))
-        arr = np.asarray(params, dtype=_TA_DTYPES[encoding]).reshape(-1)
-        return _RawItem(encode_typed_array(arr))
+            return Tag(TAG_BF16LE, bits)
+        return np.asarray(params, dtype=_TA_DTYPES[encoding]).reshape(-1)
     if encoding is ParamsEncoding.Q8:
         from repro.core.params_codec import encode_q8
         item, _ = encode_q8(np.asarray(params, dtype=np.float32).reshape(-1))
-        return _RawItem(item)
+        return Raw(item)
     if encoding is ParamsEncoding.DYNAMIC:
         return [float(v) for v in np.asarray(params).reshape(-1)]
     if encoding is ParamsEncoding.ARRAY_F64:
@@ -105,22 +111,39 @@ def bf16_bits_to_f32(bits: np.ndarray) -> np.ndarray:
     return (bits.astype("<u4") << 16).view("<f4")
 
 
-@dataclass(frozen=True)
-class _RawItem:
-    """Pre-encoded CBOR bytes spliced verbatim into a parent container."""
-
-    raw: bytes
+# Backwards-compatible alias: pre-encoded CBOR bytes spliced verbatim.
+_RawItem = Raw
 
 
-def _encode_obj(obj: object, *, worst: bool = False) -> bytes:
-    """cbor.encode with _RawItem splicing and optional worst-case widths."""
-    if isinstance(obj, _RawItem):
-        return obj.raw
+def _encode_obj(obj: object, *, worst: bool = False,
+                fast: bool = True) -> bytes:
+    """Encode a message object tree to CBOR.
+
+    ``fast=True`` (the default, and the hot path) routes through
+    ``fastpath.encode``: one size pre-pass, one preallocated buffer, one
+    payload copy.  ``fast=False`` uses the pure-Python oracle splicing
+    encoder below; both produce byte-identical output, which the
+    differential tests assert on every message type.
+    """
+    if fast:
+        return fastpath.encode(obj, worst=worst)
+    return _encode_obj_oracle(obj, worst=worst)
+
+
+def _encode_obj_oracle(obj: object, *, worst: bool = False) -> bytes:
+    """The oracle: recursive cbor.encode with splicing (seed implementation)."""
+    if isinstance(obj, Raw):
+        return obj.data
+    if isinstance(obj, np.ndarray):
+        return encode_typed_array(obj)
+    if isinstance(obj, Tag) and isinstance(obj.value, np.ndarray):
+        return encode_typed_array(obj.value, tag=obj.tag)
     if isinstance(obj, (list, tuple)):
-        body = b"".join(_encode_obj(v, worst=worst) for v in obj)
+        body = b"".join(_encode_obj_oracle(v, worst=worst) for v in obj)
         return cbor.encode_array_header(len(obj)) + body
     if isinstance(obj, Tag):
-        return cbor.encode_tag_header(obj.tag) + _encode_obj(obj.value, worst=worst)
+        return cbor.encode_tag_header(obj.tag) + _encode_obj_oracle(
+            obj.value, worst=worst)
     if worst:
         if isinstance(obj, bool):
             return cbor.encode_bool(obj)
@@ -209,18 +232,19 @@ class FLGlobalModelUpdate:
     continue_training: bool
 
     def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16, *,
-                worst: bool = False, params_payload: bytes | None = None) -> bytes:
+                worst: bool = False, params_payload: bytes | None = None,
+                fast: bool = True) -> bytes:
         obj = [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
             _encode_params(self.params, encoding, params_payload),
             bool(self.continue_training),
         ]
-        return _encode_obj(obj, worst=worst)
+        return _encode_obj(obj, worst=worst, fast=fast)
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLGlobalModelUpdate":
-        item = cbor.decode(data)
+        item = fastpath.decode(data)
         _expect_array(item, 4, "FL_Global_Model_Update")
         ident, rnd, params, cont = item
         return cls(
@@ -252,15 +276,15 @@ class FLLocalDataSetUpdate:
     dataset_size: int
     metadata: ModelMetadata | None = None
 
-    def to_cbor(self, *, worst: bool = False) -> bytes:
+    def to_cbor(self, *, worst: bool = False, fast: bool = True) -> bytes:
         obj: list = [int(self.dataset_size)]
         if self.metadata is not None:  # group: spliced, not nested
             obj += [float(self.metadata.train_loss), float(self.metadata.val_loss)]
-        return _encode_obj(obj, worst=worst)
+        return _encode_obj(obj, worst=worst, fast=fast)
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLLocalDataSetUpdate":
-        item = cbor.decode(data)
+        item = fastpath.decode(data)
         if not isinstance(item, list) or len(item) not in (1, 3):
             raise ValueError("FL_Local_DataSet_Update must be [size] or [size, tl, vl]")
         meta = None
@@ -293,7 +317,8 @@ class FLLocalModelUpdate:
     metadata: ModelMetadata
 
     def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16, *,
-                worst: bool = False, params_payload: bytes | None = None) -> bytes:
+                worst: bool = False, params_payload: bytes | None = None,
+                fast: bool = True) -> bytes:
         obj = [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
@@ -301,11 +326,11 @@ class FLLocalModelUpdate:
             float(self.metadata.train_loss),
             float(self.metadata.val_loss),
         ]
-        return _encode_obj(obj, worst=worst)
+        return _encode_obj(obj, worst=worst, fast=fast)
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLLocalModelUpdate":
-        item = cbor.decode(data)
+        item = fastpath.decode(data)
         _expect_array(item, 5, "FL_Local_Model_Update")
         ident, rnd, params, tl, vl = item
         return cls(
@@ -351,7 +376,8 @@ class FLModelChunk:
     params: np.ndarray
 
     def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F32, *,
-                params_payload: bytes | None = None) -> bytes:
+                params_payload: bytes | None = None,
+                fast: bool = True) -> bytes:
         obj = [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
@@ -360,11 +386,11 @@ class FLModelChunk:
             int(self.crc32),
             _encode_params(self.params, encoding, params_payload),
         ]
-        return _encode_obj(obj)
+        return _encode_obj(obj, fast=fast)
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLModelChunk":
-        item = cbor.decode(data)
+        item = fastpath.decode(data)
         _expect_array(item, 6, "FL_Model_Chunk")
         ident, rnd, idx, total, crc, params = item
         return cls(_decode_uuid(ident), _expect_uint(rnd, "round"),
@@ -396,6 +422,7 @@ def _expect_bool(item: object, name: str) -> bool:
 def _decode_uuid(item: object) -> uuid_module.UUID:
     if not isinstance(item, Tag) or item.tag != TAG_UUID:
         raise ValueError("fl-model-identifier must be #6.37(bstr)")
-    if not isinstance(item.value, (bytes, bytearray)) or len(item.value) != 16:
+    if not isinstance(item.value, (bytes, bytearray, memoryview)) \
+            or len(item.value) != 16:
         raise ValueError("UUID must be a 16-byte string")
     return uuid_module.UUID(bytes=bytes(item.value))

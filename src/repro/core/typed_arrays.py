@@ -86,17 +86,23 @@ def typed_array_size(num_elements: int, itemsize: int, tag: int) -> int:
 
 
 def decode_typed_array(item: Tag) -> np.ndarray:
-    """Decode a Tag(typed-array-tag, bstr) into a 1-D numpy array."""
+    """Decode a Tag(typed-array-tag, bstr) into a 1-D numpy array.
+
+    Zero-copy: the result is a ``np.frombuffer`` view over the payload, so a
+    ``memoryview`` payload (the fast-path decoder's output) decodes without
+    any byte copying.  The view is read-only when the payload is; call
+    ``.copy()``/``.astype(...)`` before mutating or outliving the buffer.
+    """
     if not isinstance(item, Tag):
         raise TypeError("expected a CBOR Tag")
     if item.tag not in _TAG_TO_DTYPE:
         raise TypeError(f"tag {item.tag} is not a supported typed array")
     dtype = _TAG_TO_DTYPE[item.tag]
-    if not isinstance(item.value, (bytes, bytearray)):
+    if not isinstance(item.value, (bytes, bytearray, memoryview)):
         raise TypeError("typed array content must be a byte string")
     if len(item.value) % dtype.itemsize:
         raise ValueError("typed array byte length not a multiple of item size")
-    return np.frombuffer(bytes(item.value), dtype=dtype)
+    return np.frombuffer(item.value, dtype=dtype)
 
 
 def is_typed_array(item: object) -> bool:

@@ -7,6 +7,7 @@ the observe mechanism, and answers the final GET with `FL_Local_Model_Update`.
 from __future__ import annotations
 
 import uuid
+import zlib
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable
@@ -19,6 +20,7 @@ from repro.core.messages import (
     FLGlobalModelUpdate,
     FLLocalDataSetUpdate,
     FLLocalModelUpdate,
+    FLModelChunk,
     ModelMetadata,
     ParamsEncoding,
 )
@@ -53,6 +55,9 @@ class FLClient:
     samples_seen: int = 0
     _train_idx: np.ndarray = field(init=False, repr=False, default=None)
     _val_idx: np.ndarray = field(init=False, repr=False, default=None)
+    _chunks: dict[int, np.ndarray] = field(init=False, repr=False,
+                                           default_factory=dict)
+    _chunk_key: tuple = field(init=False, repr=False, default=None)
 
     def __post_init__(self) -> None:
         n = len(self.data["labels"])
@@ -74,6 +79,43 @@ class FLClient:
         self.model_id = msg.model_id
         self.samples_seen = 0
         self.training_enabled = msg.continue_training
+
+    def handle_model_chunk(self, msg: FLModelChunk) -> bool:
+        """POST /fl/model/chunk — one slice of a chunked global model.
+
+        Verifies the chunk's CRC32 (over its little-endian f32 payload),
+        buffers it, and installs the assembled model once every chunk of
+        the (model_id, round) generation has arrived.  Returns True on
+        install.  A chunk from a newer round discards stale buffers (a
+        client that missed the end of one round resynchronizes on the
+        next), while a late or retransmitted chunk from an *older* round
+        is dropped without touching in-progress assembly.
+        """
+        if msg.num_chunks < 1 or not 0 <= msg.chunk_index < msg.num_chunks:
+            raise ValueError(
+                f"chunk index {msg.chunk_index} out of range "
+                f"for {msg.num_chunks} chunks")
+        part = np.ascontiguousarray(msg.params, dtype="<f4")
+        if zlib.crc32(memoryview(part).cast("B")) != msg.crc32:
+            raise ValueError(
+                f"chunk {msg.chunk_index}/{msg.num_chunks}: CRC mismatch")
+        key = (msg.model_id, msg.round, msg.num_chunks)
+        if key != self._chunk_key:
+            if self._chunk_key is not None and msg.round < self._chunk_key[1]:
+                return False  # delayed duplicate from a finished round
+            self._chunks = {}
+            self._chunk_key = key
+        self._chunks[msg.chunk_index] = part
+        if len(self._chunks) < msg.num_chunks:
+            return False
+        flat = np.concatenate([self._chunks[i]
+                               for i in range(msg.num_chunks)])
+        self._chunks = {}
+        self._chunk_key = None
+        self.handle_global_model(FLGlobalModelUpdate(
+            model_id=msg.model_id, round=msg.round, params=flat,
+            continue_training=True))
+        return True
 
     def dataset_size(self) -> int:
         return len(self._train_idx)

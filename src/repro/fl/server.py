@@ -11,7 +11,9 @@ aggregation, client dropout handling, CBOR round checkpointing with restart.
 from __future__ import annotations
 
 import uuid
+import zlib
 from dataclasses import dataclass, field
+from typing import Iterator
 
 import numpy as np
 
@@ -20,6 +22,7 @@ from repro.core.messages import (
     FLGlobalModelUpdate,
     FLLocalDataSetUpdate,
     FLLocalModelUpdate,
+    FLModelChunk,
     ParamsEncoding,
 )
 from repro.fl.aggregation import fedavg
@@ -102,6 +105,28 @@ class FLServer:
         return FLGlobalModelUpdate(
             model_id=self.model_id, round=self.round,
             params=self.global_params, continue_training=cont)
+
+    def global_update_chunks(self, chunk_elems: int) -> Iterator[FLModelChunk]:
+        """Chunked global-model dissemination (streaming fast path).
+
+        Yields ``FLModelChunk`` messages covering ``global_params`` in
+        ``chunk_elems``-element slices.  Each chunk's ``crc32`` covers its
+        little-endian f32 payload, so receivers verify integrity per chunk
+        instead of per model.  Chunks are numpy slices of the live global
+        vector — ``to_cbor`` copies each slice exactly once, into the
+        encoder's preallocated buffer, so peak memory is one chunk (not one
+        model) regardless of model size.
+        """
+        if chunk_elems <= 0:
+            raise ValueError("chunk_elems must be positive")
+        params = np.ascontiguousarray(self.global_params, dtype="<f4")
+        num = max(1, -(-params.size // chunk_elems))
+        for i in range(num):
+            part = params[i * chunk_elems : (i + 1) * chunk_elems]
+            yield FLModelChunk(
+                model_id=self.model_id, round=self.round, chunk_index=i,
+                num_chunks=num, crc32=zlib.crc32(memoryview(part).cast("B")),
+                params=part)
 
     def observe_ready(self, update: FLLocalDataSetUpdate) -> bool:
         """Observe notification filter: has the client trained enough?"""

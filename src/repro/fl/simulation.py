@@ -10,11 +10,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core import cbor, cddl
+from repro.core import cddl, fastpath
 from repro.core.messages import (
     FLGlobalModelUpdate,
     FLLocalDataSetUpdate,
     FLLocalModelUpdate,
+    FLModelChunk,
 )
 from repro.fl.client import FLClient
 from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
@@ -45,12 +46,22 @@ class SimulationReport:
 class FLSimulation:
     def __init__(self, server: FLServer, clients: list[FLClient],
                  drop_prob: float = 0.0, seed: int = 0,
-                 multicast_global: bool = True) -> None:
+                 multicast_global: bool = True,
+                 chunk_elems: int | None = None) -> None:
         self.server = server
         self.clients = {c.client_id: c for c in clients}
         self.link = LossyLink(drop_prob=drop_prob, seed=seed)
         self.accounting = MessageAccounting()
         self.multicast_global = multicast_global
+        # chunk_elems: when set, the global model is disseminated as a
+        # stream of FL_Model_Chunk messages of this many parameters each
+        # (the streaming fast path) instead of one monolithic update.
+        # The chunk wire format is always ta-float32le (the per-chunk CRC
+        # is defined over the f32 LE payload), so cfg.params_encoding only
+        # governs the client -> server legs; the stream is inherently
+        # multicast (one transfer reaches all receivers), so
+        # multicast_global does not apply to it either.
+        self.chunk_elems = chunk_elems
         self._rng = np.random.default_rng(seed)
 
     # -- wire helpers (validate every message against its CDDL schema) -------
@@ -60,10 +71,30 @@ class FLSimulation:
         """Validate against CDDL, push over the lossy link.  Returns None if
         the transfer failed after max retransmissions (treated upstream as a
         dropout — the FL round continues without this message)."""
-        cddl.validate(cbor.decode(payload), cddl.SCHEMAS[mtype])
+        cddl.validate(fastpath.decode(payload), cddl.SCHEMAS[mtype])
         stats = self.link.send_payload(payload, uri=uri, code=code)
         self.accounting.record(mtype, stats)
         return None if stats.failed_messages else payload
+
+    def _disseminate_chunked(self, receivers: list[int]) -> list[int]:
+        """Stream the global model as FL_Model_Chunk messages (fast path).
+
+        Multicast semantics: one wire stream reaches every receiver.  A
+        chunk lost after max retransmissions aborts the stream — no client
+        can assemble that round's model, mirroring the monolithic multicast
+        failure mode.  Returns the clients that installed the full model.
+        """
+        installed: set[int] = set()
+        for chunk in self.server.global_update_chunks(self.chunk_elems):
+            wire = self._send(chunk.to_cbor(), "FL_Model_Chunk",
+                              "fl/model/chunk", Code.POST)
+            if wire is None:
+                return []
+            msg = FLModelChunk.from_cbor(wire)
+            for cid in receivers:
+                if self.clients[cid].handle_model_chunk(msg):
+                    installed.add(cid)
+        return [c for c in receivers if c in installed]
 
     # -- one FL round (paper Fig. 2) ------------------------------------------
 
@@ -74,18 +105,22 @@ class FLSimulation:
 
         # (1) global model dissemination: multicast = one wire transfer
         #     reaching all clients (§VI-B2); unicast = one per client.
-        msg = server.global_update_message()
-        payload = msg.to_cbor(enc)
-        sends = 1 if self.multicast_global else len(selected)
-        delivered_global = True
-        for _ in range(sends):
-            if self._send(payload, "FL_Global_Model_Update", "fl/model",
-                          Code.POST) is None:
-                delivered_global = False
-        receivers = selected if delivered_global else []
-        for cid in receivers:
-            self.clients[cid].handle_global_model(
-                FLGlobalModelUpdate.from_cbor(payload))
+        #     chunk_elems switches to the streaming FL_Model_Chunk path.
+        if self.chunk_elems is not None:
+            receivers = self._disseminate_chunked(selected)
+        else:
+            msg = server.global_update_message()
+            payload = msg.to_cbor(enc)
+            sends = 1 if self.multicast_global else len(selected)
+            delivered_global = True
+            for _ in range(sends):
+                if self._send(payload, "FL_Global_Model_Update", "fl/model",
+                              Code.POST) is None:
+                    delivered_global = False
+            receivers = selected if delivered_global else []
+            for cid in receivers:
+                self.clients[cid].handle_global_model(
+                    FLGlobalModelUpdate.from_cbor(payload))
 
         # (2) local training + observe notifications
         reporters, dropped, stopped = [], [], []

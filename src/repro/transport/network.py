@@ -8,6 +8,7 @@ through this to report bytes / frames / retransmissions / airtime per round.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Iterable
 
 import numpy as np
 
@@ -58,6 +59,25 @@ class LossyLink:
                     return stats
                 stats.retransmissions += 1
         return stats
+
+    def send_stream(self, payloads: Iterable[bytes], *, uri: str,
+                    code: Code = Code.POST,
+                    stop_on_failure: bool = True) -> TransferStats:
+        """Send a stream of application payloads (e.g. FL model chunks).
+
+        Payloads may be ``bytes`` or any buffer (``memoryview`` slices from
+        the zero-copy encoder are sent without conversion).  Aggregated
+        ``TransferStats`` across the stream; with ``stop_on_failure`` the
+        stream aborts at the first undeliverable payload — the receiver
+        cannot assemble a model with a hole in it, so the remaining chunks
+        would be wasted airtime.
+        """
+        total = TransferStats()
+        for payload in payloads:
+            total.add(self.send_payload(payload, uri=uri, code=code))
+            if stop_on_failure and total.failed_messages:
+                break
+        return total
 
     @staticmethod
     def airtime_seconds(stats: TransferStats) -> float:

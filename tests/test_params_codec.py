@@ -1,6 +1,8 @@
 """Params codec: flatten/unflatten, q8 quantization, error feedback, top-k."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep: see requirements-dev.txt
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -87,3 +87,19 @@ def test_lossless_link_no_retries():
     s = LossyLink(drop_prob=0.0).send_payload(b"\x03" * 1000, uri="fl/model")
     assert s.retransmissions == 0
     assert LossyLink.airtime_seconds(s) > 0
+
+
+def test_send_stream_aggregates_and_accepts_memoryviews():
+    payloads = [memoryview(bytes([i]) * 300) for i in range(4)]
+    stats = LossyLink(drop_prob=0.0).send_stream(payloads, uri="fl/model")
+    assert stats.messages == 4
+    assert stats.payload_bytes == 1200
+    assert stats.frames == stats.blocks == 4 * -(-300 // COAP_MAX_PAYLOAD)
+    assert stats.failed_messages == 0
+
+
+def test_send_stream_stops_on_failure():
+    link = LossyLink(drop_prob=0.95, seed=1)
+    stats = link.send_stream([b"\x02" * 500] * 10, uri="fl/model")
+    assert stats.failed_messages == 1
+    assert stats.messages < 10  # aborted at the first undeliverable payload
