@@ -1,14 +1,76 @@
 # One function per paper table. Prints CSV sections; also writes
 # BENCH_codec.json (codec MB/s + peak allocations) so the serialization
 # perf trajectory is tracked from PR to PR.
+#
+# `--check` compares a fresh codec run against the committed
+# BENCH_codec.json and exits non-zero on a >2x decode-throughput
+# regression — the PR-over-PR trend gate (run via the tier-2 pytest
+# marker: `pytest -m tier2`).
 from __future__ import annotations
 
+import argparse
 import json
+import sys
 import time
 from pathlib import Path
 
+_REPO = Path(__file__).resolve().parent.parent
+if str(_REPO) not in sys.path:   # `python benchmarks/run.py` from anywhere
+    sys.path.insert(0, str(_REPO))
 
-def main() -> None:
+BENCH_JSON = _REPO / "BENCH_codec.json"
+DECODE_PATHS = ("decode_fastpath_f32", "decode_seed_f32")
+REGRESSION_FACTOR = 2.0
+
+
+def check(factor: float = REGRESSION_FACTOR) -> int:
+    """Fresh codec bench vs committed BENCH_codec.json.
+
+    Returns 0 when every decode path is within ``factor`` of the committed
+    throughput, 1 on a regression (or a missing/malformed committed record).
+    """
+    from benchmarks import bench_codec_throughput
+
+    if not BENCH_JSON.exists():
+        print(f"check: no committed record at {BENCH_JSON}")
+        return 1
+    committed = json.loads(BENCH_JSON.read_text())
+    _, fresh = bench_codec_throughput.run_json()
+    failures = []
+    compared = 0
+    for size, entry in committed.get("sizes", {}).items():
+        for name in DECODE_PATHS:
+            old = entry.get(name, {}).get("MBps")
+            new = fresh["sizes"].get(size, {}).get(name, {}).get("MBps")
+            if not old or not new:
+                continue
+            compared += 1
+            if new * factor < old:
+                failures.append(
+                    f"  {name} @ {size} params: {old:.1f} -> {new:.1f} MB/s "
+                    f"({old / new:.1f}x slower)")
+    if compared == 0:
+        print("check: committed record has no comparable decode entries")
+        return 1
+    if failures:
+        print(f"check: decode throughput regressed >{factor}x:")
+        print("\n".join(failures))
+        return 1
+    print(f"check: OK ({compared} decode entries within {factor}x "
+          "of committed BENCH_codec.json)")
+    return 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--check", action="store_true",
+                        help="compare a fresh codec bench against the "
+                             "committed BENCH_codec.json; exit 1 on >2x "
+                             "decode-throughput regression")
+    args = parser.parse_args()
+    if args.check:
+        return check()
+
     from benchmarks import (
         bench_codec_throughput,
         bench_fl_round,
@@ -18,9 +80,8 @@ def main() -> None:
 
     def codec_run():
         rows, record = bench_codec_throughput.run_json()
-        out = Path(__file__).resolve().parent.parent / "BENCH_codec.json"
-        out.write_text(json.dumps(record, indent=2) + "\n")
-        rows.append(f"# wrote {out}")
+        BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+        rows.append(f"# wrote {BENCH_JSON}")
         return rows
 
     sections = [
@@ -39,7 +100,8 @@ def main() -> None:
     print("## roofline")
     print("see reports/roofline.json + EXPERIMENTS.md §Roofline "
           "(derived from the dry-run artifacts, not wall-clock)")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

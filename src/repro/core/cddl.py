@@ -221,9 +221,27 @@ FL_MODEL_CHUNK = ArrayOf([       # beyond-paper extension (DESIGN.md §9.1)
     fl_model_params,
 ])
 
+# Selective-repeat control messages (docs/chunk_protocol.md).  A receiver
+# that is missing chunks after a transfer window NACKs the missing indices;
+# the sender re-sends only those.  A complete receiver ACKs the generation.
+FL_CHUNK_NACK = ArrayOf([
+    fl_model_identifier,
+    fl_model_round,
+    Uint(),                      # num-chunks (the expected generation size)
+    ArrayOf([OneOrMore(Uint())]),  # missing chunk indices (never empty: ACK)
+])
+
+FL_CHUNK_ACK = ArrayOf([
+    fl_model_identifier,
+    fl_model_round,
+    Uint(),                      # num-chunks received and assembled
+])
+
 SCHEMAS: dict[str, Node] = {
     "FL_Global_Model_Update": FL_GLOBAL_MODEL_UPDATE,
     "FL_Local_DataSet_Update": FL_LOCAL_DATASET_UPDATE,
     "FL_Local_Model_Update": FL_LOCAL_MODEL_UPDATE,
     "FL_Model_Chunk": FL_MODEL_CHUNK,
+    "FL_Chunk_Nack": FL_CHUNK_NACK,
+    "FL_Chunk_Ack": FL_CHUNK_ACK,
 }

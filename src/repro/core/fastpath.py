@@ -74,6 +74,7 @@ __all__ = [
     "encoded_size",
     "encode_into",
     "encode",
+    "encode_view",
     "decode",
     "decode_prefix",
     "CBORSequenceReader",
@@ -311,6 +312,22 @@ def encode(obj: Any, *, worst: bool = False) -> bytes:
     if end != len(buf):
         raise RuntimeError(f"size pre-pass mismatch: {end} != {len(buf)}")
     return bytes(buf)
+
+
+def encode_view(obj: Any, *, worst: bool = False) -> memoryview:
+    """Like ``encode`` but skips the finalize ``bytes()`` copy.
+
+    Returns a readonly ``memoryview`` over the single preallocated buffer —
+    the cheapest wire payload for callers that accept any buffer object
+    (``LossyLink`` payloads, ``CBORSequenceWriter.write_raw``).  The view
+    keeps the underlying ``bytearray`` alive; call ``bytes(view)`` if an
+    owned, hashable copy is needed.
+    """
+    buf = bytearray(encoded_size(obj, worst=worst))
+    end = encode_into(obj, buf, 0, worst=worst)
+    if end != len(buf):
+        raise RuntimeError(f"size pre-pass mismatch: {end} != {len(buf)}")
+    return memoryview(buf).toreadonly()
 
 
 # ---------------------------------------------------------------------------

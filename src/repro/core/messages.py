@@ -398,6 +398,80 @@ class FLModelChunk:
                    _expect_uint(crc, "crc32"), params_from_cbor(params))
 
 
+@dataclass
+class FLChunkNack:
+    """Selective-repeat NACK: receiver -> sender, after a transfer window.
+
+    [model-uuid, round, num-chunks: uint, [+ missing-index: uint]]
+
+    ``missing`` is the set of chunk indices of the (model_id, round)
+    generation the receiver has not assembled; the sender re-sends only
+    those.  An empty set is not a valid NACK — complete receivers send
+    ``FLChunkAck`` instead (the CDDL schema enforces ``[+ uint]``).
+    """
+
+    model_id: uuid_module.UUID
+    round: int
+    num_chunks: int
+    missing: tuple[int, ...]
+
+    def to_cbor(self, *, fast: bool = True) -> bytes:
+        if not self.missing:
+            raise ValueError("empty NACK: send FLChunkAck instead")
+        obj = [
+            Tag(TAG_UUID, self.model_id.bytes),
+            int(self.round),
+            int(self.num_chunks),
+            [int(i) for i in self.missing],
+        ]
+        return _encode_obj(obj, fast=fast)
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLChunkNack":
+        item = fastpath.decode(data)
+        _expect_array(item, 4, "FL_Chunk_Nack")
+        ident, rnd, total, missing = item
+        if not isinstance(missing, list) or not missing:
+            raise ValueError("fl-chunk-missing must be a non-empty array")
+        return cls(
+            model_id=_decode_uuid(ident),
+            round=_expect_uint(rnd, "fl-model-round"),
+            num_chunks=_expect_uint(total, "num-chunks"),
+            missing=tuple(_expect_uint(i, "missing-index") for i in missing),
+        )
+
+
+@dataclass
+class FLChunkAck:
+    """Selective-repeat ACK: the receiver assembled every chunk.
+
+    [model-uuid, round, num-chunks: uint]
+    """
+
+    model_id: uuid_module.UUID
+    round: int
+    num_chunks: int
+
+    def to_cbor(self, *, fast: bool = True) -> bytes:
+        obj = [
+            Tag(TAG_UUID, self.model_id.bytes),
+            int(self.round),
+            int(self.num_chunks),
+        ]
+        return _encode_obj(obj, fast=fast)
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLChunkAck":
+        item = fastpath.decode(data)
+        _expect_array(item, 3, "FL_Chunk_Ack")
+        ident, rnd, total = item
+        return cls(
+            model_id=_decode_uuid(ident),
+            round=_expect_uint(rnd, "fl-model-round"),
+            num_chunks=_expect_uint(total, "num-chunks"),
+        )
+
+
 # ---------------------------------------------------------------------------
 # Decode helpers
 

@@ -1,7 +1,16 @@
 from repro.fl.aggregation import fedavg
+from repro.fl.chunking import (
+    AssemblerReceiver,
+    ChunkAssembler,
+    ChunkTransferReport,
+    chunk_stream,
+    run_selective_repeat,
+)
 from repro.fl.client import FLClient
 from repro.fl.server import FLServer, OrchestrationConfig
 from repro.fl.simulation import FLSimulation, SimulationReport
 
 __all__ = ["fedavg", "FLClient", "FLServer", "OrchestrationConfig",
-           "FLSimulation", "SimulationReport"]
+           "FLSimulation", "SimulationReport", "AssemblerReceiver",
+           "ChunkAssembler", "ChunkTransferReport", "chunk_stream",
+           "run_selective_repeat"]

@@ -1,0 +1,295 @@
+"""Symmetric selective-repeat chunk transfer (docs/chunk_protocol.md).
+
+One protocol engine serves both directions of the FL round:
+
+  * downlink — the server multicasts the global model as ``FLModelChunk``
+    messages; each client NACKs the chunk indices it is missing after a
+    window and the server re-multicasts only the union of the missing sets;
+  * uplink — a client streams its local model update through the same
+    ``FLModelChunk`` framing (CON unicast), and the *server* NACKs what it
+    has not reassembled.
+
+The pieces:
+
+  * ``chunk_stream``      — slice a flat f32 parameter vector into CRC'd
+    ``FLModelChunk`` messages (numpy views of the live vector; each chunk is
+    copied exactly once, into the encoder's output buffer);
+  * ``ChunkAssembler``    — per-receiver reassembly state: CRC verification,
+    duplicate suppression, stale-round rejection, missing-set queries;
+  * ``run_selective_repeat`` — the windowed NACK round-trip over a
+    ``LossyLink``, with exact byte accounting (``ChunkTransferReport``) so
+    tests can assert retransmitted bytes stay below a full-stream re-send.
+
+Feedback messages themselves traverse the lossy link: a lost NACK simply
+means the sender learns nothing from that receiver this window and polls
+again on the next one, so control-plane loss degrades latency, never
+correctness.
+"""
+from __future__ import annotations
+
+import uuid
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core import cddl, fastpath
+from repro.core.messages import FLChunkAck, FLChunkNack, FLModelChunk
+from repro.transport.coap import Code, TransferStats
+from repro.transport.network import LossyLink
+
+# Window budget: the initial full-stream window plus up to this many repair
+# windows before incomplete receivers are treated as dropouts for the round.
+MAX_REPAIR_WINDOWS = 10
+
+
+def chunk_stream(model_id: uuid.UUID, round_: int, params: np.ndarray,
+                 chunk_elems: int) -> Iterator[FLModelChunk]:
+    """Slice ``params`` into ``chunk_elems``-element ``FLModelChunk``s.
+
+    Each chunk's ``crc32`` covers its little-endian f32 payload, so
+    receivers verify integrity per chunk instead of per model.  Chunks are
+    numpy views of ``params`` — peak memory is one chunk regardless of
+    model size.
+    """
+    if chunk_elems <= 0:
+        raise ValueError("chunk_elems must be positive")
+    flat = np.ascontiguousarray(params, dtype="<f4").reshape(-1)
+    num = max(1, -(-flat.size // chunk_elems))
+    for i in range(num):
+        part = flat[i * chunk_elems : (i + 1) * chunk_elems]
+        yield FLModelChunk(
+            model_id=model_id, round=round_, chunk_index=i, num_chunks=num,
+            crc32=zlib.crc32(memoryview(part).cast("B")), params=part)
+
+
+class ChunkAssembler:
+    """Reassembles one generation (model_id, round, num_chunks) of chunks.
+
+    * CRC32 of every chunk is verified before it is buffered (``ValueError``
+      on mismatch — a corrupt chunk can never reach the assembled model);
+    * duplicates (retransmits of an already-buffered or already-completed
+      chunk) are counted and dropped;
+    * a chunk from an *older* round than the assembler has seen is rejected
+      as stale, while a newer round discards the stale partial state and
+      resynchronizes.
+    """
+
+    def __init__(self) -> None:
+        self._key: tuple | None = None           # (model_id, round, n)
+        self._parts: dict[int, np.ndarray] = {}
+        self._completed_key: tuple | None = None
+        self.duplicates = 0
+        self.stale_rejected = 0
+
+    @property
+    def in_progress(self) -> bool:
+        return self._key is not None
+
+    def _is_stale(self, round_: int) -> bool:
+        latest = -1
+        if self._key is not None:
+            latest = max(latest, self._key[1])
+        if self._completed_key is not None:
+            latest = max(latest, self._completed_key[1])
+        return round_ < latest
+
+    def add(self, msg: FLModelChunk) -> np.ndarray | None:
+        """Verify + buffer one chunk; returns the assembled flat f32 vector
+        once every chunk of the generation has arrived, else None."""
+        if msg.num_chunks < 1 or not 0 <= msg.chunk_index < msg.num_chunks:
+            raise ValueError(
+                f"chunk index {msg.chunk_index} out of range "
+                f"for {msg.num_chunks} chunks")
+        part = np.ascontiguousarray(msg.params, dtype="<f4")
+        if zlib.crc32(memoryview(part).cast("B")) != msg.crc32:
+            raise ValueError(
+                f"chunk {msg.chunk_index}/{msg.num_chunks}: CRC mismatch")
+        key = (msg.model_id, msg.round, msg.num_chunks)
+        if key == self._completed_key:
+            self.duplicates += 1      # late retransmit of a finished round
+            return None
+        if key != self._key:
+            if self._is_stale(msg.round):
+                self.stale_rejected += 1
+                return None
+            self._parts = {}
+            self._key = key
+        if msg.chunk_index in self._parts:
+            self.duplicates += 1
+            return None
+        self._parts[msg.chunk_index] = part
+        if len(self._parts) < msg.num_chunks:
+            return None
+        flat = np.concatenate([self._parts[i] for i in range(msg.num_chunks)])
+        self._completed_key = key
+        self._key = None
+        self._parts = {}
+        return flat
+
+    def is_complete(self, model_id: uuid.UUID, round_: int) -> bool:
+        ck = self._completed_key
+        return ck is not None and ck[0] == model_id and ck[1] == round_
+
+    def missing(self, model_id: uuid.UUID, round_: int,
+                num_chunks: int) -> list[int]:
+        """Chunk indices of the given generation not yet assembled."""
+        key = (model_id, round_, num_chunks)
+        if key == self._completed_key:
+            return []
+        if key != self._key:    # nothing buffered for this generation yet
+            return list(range(num_chunks))
+        return [i for i in range(num_chunks) if i not in self._parts]
+
+    def feedback(self, model_id: uuid.UUID, round_: int,
+                 num_chunks: int) -> FLChunkAck | FLChunkNack:
+        """The selective-repeat control message for the given generation."""
+        miss = self.missing(model_id, round_, num_chunks)
+        if not miss:
+            return FLChunkAck(model_id, round_, num_chunks)
+        return FLChunkNack(model_id, round_, num_chunks, tuple(miss))
+
+
+@dataclass
+class ChunkTransferReport:
+    """Exact accounting for one selective-repeat transfer."""
+
+    num_chunks: int = 0
+    windows: int = 0                      # transfer windows incl. the first
+    chunk_sends: int = 0                  # chunk messages sent incl. repairs
+    initial_payload_bytes: int = 0        # one full stream
+    payload_bytes: int = 0                # all chunk payload bytes sent
+    control_messages: int = 0
+    control_payload_bytes: int = 0
+    lost_feedback: int = 0                # NACK/ACKs the link failed to carry
+    completed: list[int] = field(default_factory=list)  # receiver positions
+    stats: TransferStats = field(default_factory=TransferStats)
+
+    @property
+    def retransmitted_chunks(self) -> int:
+        return self.chunk_sends - self.num_chunks
+
+    @property
+    def retransmitted_payload_bytes(self) -> int:
+        return self.payload_bytes - self.initial_payload_bytes
+
+
+def _validate(payload, mtype: str) -> None:
+    cddl.validate(fastpath.decode(payload), cddl.SCHEMAS[mtype])
+
+
+def run_selective_repeat(
+    link: LossyLink,
+    chunks: Sequence[FLModelChunk],
+    receivers: Sequence,
+    *,
+    uri: str,
+    feedback_uri: str,
+    code: Code = Code.POST,
+    multicast: bool = False,
+    max_windows: int = 1 + MAX_REPAIR_WINDOWS,
+    validate: bool = True,
+    record: Callable[[str, TransferStats], None] | None = None,
+) -> ChunkTransferReport:
+    """Drive one selective-repeat transfer of ``chunks`` to ``receivers``.
+
+    Each receiver is any object with
+
+        receive_chunk(msg: FLModelChunk)                  -> buffer/install
+        chunk_feedback(model_id, round, num_chunks)       -> Nack | Ack
+
+    (``FLClient`` on the downlink; an assembler-backed server endpoint on
+    the uplink; bare ``AssemblerReceiver``s in the loss-sweep harness.)
+
+    Window 0 sends every chunk; window k>0 re-sends only the union of the
+    missing sets NACK'd by receivers whose feedback survived the link.  The
+    loop ends when every receiver's ACK has reached the sender or the
+    window budget is spent.  ``record`` receives per-message-type
+    ``TransferStats`` (``FL_Model_Chunk`` / ``FL_Chunk_Nack`` /
+    ``FL_Chunk_Ack``) for round accounting.
+    """
+    if not chunks:
+        raise ValueError("empty chunk stream")
+    mid, rnd, n = chunks[0].model_id, chunks[0].round, chunks[0].num_chunks
+    wires = [c.to_cbor() for c in chunks]
+    if validate:
+        for w in wires:
+            _validate(w, "FL_Model_Chunk")
+    report = ChunkTransferReport(
+        num_chunks=n, initial_payload_bytes=sum(len(w) for w in wires))
+
+    complete: set[int] = set()   # receivers that assembled (ground truth)
+    acked: set[int] = set()      # receivers whose ACK reached the sender
+    to_send = list(range(n))
+    window = 0
+    while window < max_windows and len(acked) < len(receivers):
+        if to_send:
+            delivery = link.request_stream(
+                [wires[i] for i in to_send], uri=uri, code=code,
+                indices=to_send, num_receivers=len(receivers),
+                multicast=multicast, window=window)
+            if record:
+                record("FL_Model_Chunk", delivery.stats)
+            report.stats.add(delivery.stats)
+            report.chunk_sends += len(to_send)
+            report.payload_bytes += delivery.stats.payload_bytes
+            for i in sorted(set().union(*delivery.delivered)):
+                msg = FLModelChunk.from_cbor(wires[i])  # decode once, fan out
+                for ridx, rcv in enumerate(receivers):
+                    if i in delivery.delivered[ridx]:
+                        rcv.receive_chunk(msg)
+        # NACK round-trip: every not-yet-acked receiver reports its state.
+        missing_union: set[int] = set()
+        for ridx, rcv in enumerate(receivers):
+            if ridx in acked:
+                continue
+            fb = rcv.chunk_feedback(mid, rnd, n)
+            is_ack = isinstance(fb, FLChunkAck)
+            if is_ack:
+                complete.add(ridx)
+            payload = fb.to_cbor()
+            mtype = "FL_Chunk_Ack" if is_ack else "FL_Chunk_Nack"
+            if validate:
+                _validate(payload, mtype)
+            stats = link.send_payload(payload, uri=feedback_uri,
+                                      code=Code.CONTENT)
+            if record:
+                record(mtype, stats)
+            report.stats.add(stats)
+            report.control_messages += 1
+            report.control_payload_bytes += len(payload)
+            if stats.failed_messages:
+                report.lost_feedback += 1
+                continue          # the sender never saw this feedback
+            if is_ack:
+                acked.add(ridx)
+            else:
+                back = FLChunkNack.from_cbor(payload)
+                missing_union |= set(back.missing)
+        to_send = sorted(missing_union)
+        window += 1
+        report.windows = window
+    report.completed = sorted(complete)
+    return report
+
+
+class AssemblerReceiver:
+    """Minimal receiver endpoint: a bare ``ChunkAssembler`` plus the
+    assembled result — what the loss-sweep harness and the server's uplink
+    reassembly use."""
+
+    def __init__(self) -> None:
+        self.assembler = ChunkAssembler()
+        self.assembled: np.ndarray | None = None
+
+    def receive_chunk(self, msg: FLModelChunk) -> bool:
+        flat = self.assembler.add(msg)
+        if flat is None:
+            return False
+        self.assembled = flat
+        return True
+
+    def chunk_feedback(self, model_id: uuid.UUID, round_: int,
+                       num_chunks: int) -> FLChunkAck | FLChunkNack:
+        return self.assembler.feedback(model_id, round_, num_chunks)

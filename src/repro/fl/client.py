@@ -7,7 +7,6 @@ the observe mechanism, and answers the final GET with `FL_Local_Model_Update`.
 from __future__ import annotations
 
 import uuid
-import zlib
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Callable
@@ -17,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.messages import (
+    FLChunkAck,
+    FLChunkNack,
     FLGlobalModelUpdate,
     FLLocalDataSetUpdate,
     FLLocalModelUpdate,
@@ -24,6 +25,7 @@ from repro.core.messages import (
     ModelMetadata,
     ParamsEncoding,
 )
+from repro.fl.chunking import ChunkAssembler, chunk_stream
 from repro.core.params_codec import (
     ErrorFeedback,
     ParamsSpec,
@@ -55,9 +57,8 @@ class FLClient:
     samples_seen: int = 0
     _train_idx: np.ndarray = field(init=False, repr=False, default=None)
     _val_idx: np.ndarray = field(init=False, repr=False, default=None)
-    _chunks: dict[int, np.ndarray] = field(init=False, repr=False,
-                                           default_factory=dict)
-    _chunk_key: tuple = field(init=False, repr=False, default=None)
+    _assembler: ChunkAssembler = field(init=False, repr=False,
+                                       default_factory=ChunkAssembler)
 
     def __post_init__(self) -> None:
         n = len(self.data["labels"])
@@ -88,34 +89,36 @@ class FLClient:
         the (model_id, round) generation has arrived.  Returns True on
         install.  A chunk from a newer round discards stale buffers (a
         client that missed the end of one round resynchronizes on the
-        next), while a late or retransmitted chunk from an *older* round
-        is dropped without touching in-progress assembly.
+        next), while a retransmitted chunk of an older — or the already
+        installed — generation is dropped as a duplicate without touching
+        in-progress assembly (see ``ChunkAssembler``).
         """
-        if msg.num_chunks < 1 or not 0 <= msg.chunk_index < msg.num_chunks:
-            raise ValueError(
-                f"chunk index {msg.chunk_index} out of range "
-                f"for {msg.num_chunks} chunks")
-        part = np.ascontiguousarray(msg.params, dtype="<f4")
-        if zlib.crc32(memoryview(part).cast("B")) != msg.crc32:
-            raise ValueError(
-                f"chunk {msg.chunk_index}/{msg.num_chunks}: CRC mismatch")
-        key = (msg.model_id, msg.round, msg.num_chunks)
-        if key != self._chunk_key:
-            if self._chunk_key is not None and msg.round < self._chunk_key[1]:
-                return False  # delayed duplicate from a finished round
-            self._chunks = {}
-            self._chunk_key = key
-        self._chunks[msg.chunk_index] = part
-        if len(self._chunks) < msg.num_chunks:
+        flat = self._assembler.add(msg)
+        if flat is None:
             return False
-        flat = np.concatenate([self._chunks[i]
-                               for i in range(msg.num_chunks)])
-        self._chunks = {}
-        self._chunk_key = None
         self.handle_global_model(FLGlobalModelUpdate(
             model_id=msg.model_id, round=msg.round, params=flat,
             continue_training=True))
         return True
+
+    # engine-facing aliases: the selective-repeat loop (fl.chunking) drives
+    # any receiver through receive_chunk / chunk_feedback.
+    receive_chunk = handle_model_chunk
+
+    def chunk_feedback(self, model_id: uuid.UUID, round_: int,
+                       num_chunks: int) -> FLChunkAck | FLChunkNack:
+        """Selective-repeat feedback for the given downlink generation:
+        ACK when fully assembled/installed, else NACK the missing set."""
+        return self._assembler.feedback(model_id, round_, num_chunks)
+
+    def local_model_chunks(self, chunk_elems: int) -> list[FLModelChunk]:
+        """The local model update as a chunked uplink stream — the same
+        ``FLModelChunk`` framing as the downlink, in reverse."""
+        if self.params is None:
+            raise RuntimeError("no local model to upload")
+        flat, _ = flatten_params(self.params)
+        return list(chunk_stream(self.model_id, self.round, flat,
+                                 chunk_elems))
 
     def dataset_size(self) -> int:
         return len(self._train_idx)

@@ -11,7 +11,6 @@ aggregation, client dropout handling, CBOR round checkpointing with restart.
 from __future__ import annotations
 
 import uuid
-import zlib
 from dataclasses import dataclass, field
 from typing import Iterator
 
@@ -26,6 +25,7 @@ from repro.core.messages import (
     ParamsEncoding,
 )
 from repro.fl.aggregation import fedavg
+from repro.fl.chunking import AssemblerReceiver, chunk_stream
 
 
 @dataclass(frozen=True)
@@ -59,6 +59,7 @@ class FLServer:
         self.model_id = uuid.uuid4()
         self.round = 0
         self.stopped_clients: set[int] = set()
+        self._uplink: dict[int, "UplinkEndpoint"] = {}
         self.history: list[RoundResult] = []
         self._rng = np.random.default_rng(cfg.seed)
         self.ckpt = (CheckpointManager(cfg.checkpoint_dir)
@@ -112,21 +113,34 @@ class FLServer:
         Yields ``FLModelChunk`` messages covering ``global_params`` in
         ``chunk_elems``-element slices.  Each chunk's ``crc32`` covers its
         little-endian f32 payload, so receivers verify integrity per chunk
-        instead of per model.  Chunks are numpy slices of the live global
-        vector — ``to_cbor`` copies each slice exactly once, into the
-        encoder's preallocated buffer, so peak memory is one chunk (not one
-        model) regardless of model size.
+        instead of per model.  Chunks are numpy views of the live global
+        vector; ``to_cbor`` copies each slice exactly once.  Note the
+        selective-repeat sender (``run_selective_repeat``) materializes
+        every encoded chunk for the whole transfer so repair windows can
+        re-send without re-encoding — peak memory there is the model plus
+        one encoded copy, not one chunk.
         """
-        if chunk_elems <= 0:
-            raise ValueError("chunk_elems must be positive")
-        params = np.ascontiguousarray(self.global_params, dtype="<f4")
-        num = max(1, -(-params.size // chunk_elems))
-        for i in range(num):
-            part = params[i * chunk_elems : (i + 1) * chunk_elems]
-            yield FLModelChunk(
-                model_id=self.model_id, round=self.round, chunk_index=i,
-                num_chunks=num, crc32=zlib.crc32(memoryview(part).cast("B")),
-                params=part)
+        return chunk_stream(self.model_id, self.round, self.global_params,
+                            chunk_elems)
+
+    # -- chunked uplink: per-client reassembly of local-model updates --------
+
+    def uplink_endpoint(self, client_id: int) -> "UplinkEndpoint":
+        """The server-side receiver for one client's chunked upload.
+
+        Reassembly state is keyed by client id and survives across repair
+        windows within the round; ``finish_round`` discards any partial
+        uploads of the closing round."""
+        ep = self._uplink.get(client_id)
+        if ep is None:
+            ep = self._uplink[client_id] = UplinkEndpoint(self)
+        return ep
+
+    def pop_uplink(self, client_id: int) -> np.ndarray | None:
+        """The client's fully reassembled flat params, or None if the upload
+        never completed.  Clears the client's reassembly state."""
+        ep = self._uplink.pop(client_id, None)
+        return ep.assembled if ep is not None else None
 
     def observe_ready(self, update: FLLocalDataSetUpdate) -> bool:
         """Observe notification filter: has the client trained enough?"""
@@ -161,9 +175,32 @@ class FLServer:
     def finish_round(self, result: RoundResult) -> None:
         self.history.append(result)
         self.round += 1
+        self._uplink.clear()   # partial uploads of the closed round are void
         self._checkpoint()
 
     @property
     def done(self) -> bool:
         active = self.cfg.num_clients - len(self.stopped_clients)
         return self.round >= self.cfg.num_rounds or active == 0
+
+
+class UplinkEndpoint(AssemblerReceiver):
+    """Server-side receiver for one client's chunked local-model upload.
+
+    An ``AssemblerReceiver`` plus the server's generation gate: a chunk
+    whose (model_id, round) is not the server's *current* generation is
+    rejected outright — a straggler re-sending last round's model cannot
+    touch this round's reassembly state.
+    """
+
+    def __init__(self, server: FLServer) -> None:
+        super().__init__()
+        self._server = server
+        self.rejected_stale = 0
+
+    def receive_chunk(self, msg: FLModelChunk) -> bool:
+        if (msg.model_id != self._server.model_id
+                or msg.round != self._server.round):
+            self.rejected_stale += 1
+            return False
+        return super().receive_chunk(msg)

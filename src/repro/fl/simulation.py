@@ -15,8 +15,9 @@ from repro.core.messages import (
     FLGlobalModelUpdate,
     FLLocalDataSetUpdate,
     FLLocalModelUpdate,
-    FLModelChunk,
+    ModelMetadata,
 )
+from repro.fl.chunking import ChunkTransferReport, run_selective_repeat
 from repro.fl.client import FLClient
 from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
 from repro.transport.coap import Code, TransferStats
@@ -53,15 +54,17 @@ class FLSimulation:
         self.link = LossyLink(drop_prob=drop_prob, seed=seed)
         self.accounting = MessageAccounting()
         self.multicast_global = multicast_global
-        # chunk_elems: when set, the global model is disseminated as a
-        # stream of FL_Model_Chunk messages of this many parameters each
-        # (the streaming fast path) instead of one monolithic update.
+        # chunk_elems: when set, model transfers in BOTH directions run as
+        # selective-repeat FL_Model_Chunk streams of this many parameters
+        # each (docs/chunk_protocol.md) instead of monolithic updates.
         # The chunk wire format is always ta-float32le (the per-chunk CRC
-        # is defined over the f32 LE payload), so cfg.params_encoding only
-        # governs the client -> server legs; the stream is inherently
-        # multicast (one transfer reaches all receivers), so
+        # is defined over the f32 LE payload), so cfg.params_encoding then
+        # only governs the tiny progress updates; the downlink stream is
+        # inherently multicast (one transfer reaches all receivers), so
         # multicast_global does not apply to it either.
         self.chunk_elems = chunk_elems
+        self.last_downlink_report: ChunkTransferReport | None = None
+        self.last_uplink_report: ChunkTransferReport | None = None
         self._rng = np.random.default_rng(seed)
 
     # -- wire helpers (validate every message against its CDDL schema) -------
@@ -77,24 +80,48 @@ class FLSimulation:
         return None if stats.failed_messages else payload
 
     def _disseminate_chunked(self, receivers: list[int]) -> list[int]:
-        """Stream the global model as FL_Model_Chunk messages (fast path).
+        """Stream the global model as FL_Model_Chunk messages with
+        selective-repeat recovery (docs/chunk_protocol.md).
 
-        Multicast semantics: one wire stream reaches every receiver.  A
-        chunk lost after max retransmissions aborts the stream — no client
-        can assemble that round's model, mirroring the monolithic multicast
-        failure mode.  Returns the clients that installed the full model.
+        NON multicast: one wire stream reaches every receiver, each of which
+        loses chunks independently.  After every window the clients NACK
+        their missing chunk indices (or ACK completion) and the server
+        re-multicasts only the union of the missing sets.  A client still
+        incomplete when the window budget runs out is a dropout for the
+        round — everyone else trains.  Returns the clients that installed
+        the full model.
         """
-        installed: set[int] = set()
-        for chunk in self.server.global_update_chunks(self.chunk_elems):
-            wire = self._send(chunk.to_cbor(), "FL_Model_Chunk",
-                              "fl/model/chunk", Code.POST)
-            if wire is None:
-                return []
-            msg = FLModelChunk.from_cbor(wire)
-            for cid in receivers:
-                if self.clients[cid].handle_model_chunk(msg):
-                    installed.add(cid)
-        return [c for c in receivers if c in installed]
+        if not receivers:
+            return []
+        chunks = list(self.server.global_update_chunks(self.chunk_elems))
+        report = run_selective_repeat(
+            self.link, chunks, [self.clients[cid] for cid in receivers],
+            uri="fl/model/chunk", feedback_uri="fl/model/chunk/fb",
+            multicast=True, record=self.accounting.record)
+        self.last_downlink_report = report
+        return [receivers[i] for i in report.completed]
+
+    def _collect_chunked(self, cid: int) -> np.ndarray | None:
+        """Chunked client → server local-model upload (reverse direction).
+
+        CON unicast chunk stream into the server's per-client reassembly
+        endpoint; the *server* NACKs missing indices and the client re-sends
+        only those.  Returns the reassembled flat f32 params, or None if the
+        upload never completed (treated upstream as a dropout)."""
+        chunks = self.clients[cid].local_model_chunks(self.chunk_elems)
+        report = run_selective_repeat(
+            self.link, chunks, [self.server.uplink_endpoint(cid)],
+            uri="fl/model/upload", feedback_uri="fl/model/upload/fb",
+            multicast=False, record=self._record_uplink)
+        self.last_uplink_report = report
+        return self.server.pop_uplink(cid)
+
+    def _record_uplink(self, mtype: str, stats: TransferStats) -> None:
+        # chunk traffic is accounted per direction; control messages share
+        # their message-type buckets with the downlink.
+        self.accounting.record(
+            "FL_Model_Chunk_Uplink" if mtype == "FL_Model_Chunk" else mtype,
+            stats)
 
     # -- one FL round (paper Fig. 2) ------------------------------------------
 
@@ -168,6 +195,21 @@ class FLSimulation:
         if server.quorum_met(len(reporters), len(selected)):
             updates, sizes = {}, {}
             for cid in reporters:
+                if self.chunk_elems is not None:
+                    # symmetric chunked uplink: params travel as a
+                    # selective-repeat FL_Model_Chunk stream; the metadata
+                    # already arrived in this round's progress update.
+                    flat = self._collect_chunked(cid)
+                    if flat is None:
+                        dropped.append(cid)   # upload never completed
+                        continue
+                    meta = progress[cid].metadata or ModelMetadata(
+                        float("nan"), float("nan"))
+                    updates[cid] = FLLocalModelUpdate(
+                        model_id=server.model_id, round=server.round,
+                        params=flat.astype(np.float64), metadata=meta)
+                    sizes[cid] = self.clients[cid].dataset_size()
+                    continue
                 raw = self.clients[cid].local_model_update().to_cbor(enc)
                 raw = self._send(raw, "FL_Local_Model_Update", "fl/model",
                                  Code.CONTENT)

@@ -10,16 +10,27 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    """jax.make_mesh across jax versions: ``AxisType`` and the ``axis_types``
+    kwarg only exist on newer releases; older ones get the positional form."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass  # make_mesh predates the axis_types kwarg
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate 1x1 mesh for CPU tests of the sharded code path."""
     n = len(jax.devices())
     d = 2 if n % 2 == 0 and n > 1 else 1
-    axis_types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((n // d, d), ("data", "model"), axis_types=axis_types)
+    return _make_mesh((n // d, d), ("data", "model"))

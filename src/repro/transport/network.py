@@ -4,11 +4,23 @@ Deterministic (seeded) frame-level simulation: per-frame drop probability,
 CON retransmission with exponential backoff (RFC 7252 §4.2), 250 kbit/s link
 rate for latency accounting.  The FL runtime sends every TinyFL message
 through this to report bytes / frames / retransmissions / airtime per round.
+
+Two delivery models coexist (docs/chunk_protocol.md):
+
+  * ``send_payload`` — CON unicast: every frame is acknowledged and
+    retransmitted up to MAX_RETRANSMIT; a payload either arrives whole or is
+    declared failed.  Used for small control messages and monolithic model
+    transfers.
+  * ``request_stream`` — one selective-repeat *window*: a batch of chunk
+    payloads pushed NON-style with per-payload delivery tracking instead of
+    an all-or-nothing verdict.  Losing a chunk never aborts the window; the
+    caller learns exactly which indices each receiver got and drives the
+    NACK round-trip (re-sending only the missing set) on top.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Iterable
+from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
@@ -23,11 +35,27 @@ from repro.transport.coap import (
 LINK_BPS = 250_000
 MAX_RETRANSMIT = 4
 
+# Test hook signature: (uri, window, chunk_index, receiver) -> drop whole chunk?
+ChunkDropFn = Callable[[str, int, int, int], bool]
+
+
+@dataclass
+class StreamDelivery:
+    """Result of one ``request_stream`` window."""
+
+    stats: TransferStats
+    delivered: list[set[int]]    # per receiver: chunk indices that arrived
+
 
 @dataclass
 class LossyLink:
     drop_prob: float = 0.0
     seed: int = 0
+    # When set, chunk-level loss in ``request_stream`` is decided by this
+    # schedule instead of the frame-level RNG — the loss-sweep harness uses
+    # it to inject exact seeded drop patterns (uniform / bursty /
+    # adversarial) while byte accounting stays realistic.
+    chunk_drop: ChunkDropFn | None = None
     _rng: np.random.Generator = field(init=False, repr=False)
 
     def __post_init__(self) -> None:
@@ -78,6 +106,86 @@ class LossyLink:
             if stop_on_failure and total.failed_messages:
                 break
         return total
+
+    def request_stream(self, payloads: Sequence, *, uri: str,
+                       code: Code = Code.POST,
+                       indices: Sequence[int] | None = None,
+                       num_receivers: int = 1,
+                       multicast: bool = False,
+                       window: int = 0) -> StreamDelivery:
+        """Send one selective-repeat window of chunk payloads.
+
+        ``indices[i]`` names the chunk carried by ``payloads[i]`` (defaults
+        to 0..n-1); repair windows pass the original chunk indices so
+        delivery sets and drop schedules stay keyed by chunk identity.
+
+        * ``multicast=True``: every frame goes on the air exactly once
+          (bytes counted once) and each of ``num_receivers`` receivers
+          independently loses frames — a receiver holds a chunk iff it got
+          every frame.  No link-layer retransmission: recovery belongs to
+          the chunk layer's NACK round-trip.
+        * ``multicast=False``: CON unicast per chunk (frame retransmission
+          up to MAX_RETRANSMIT), but unlike ``send_payload`` streams, a
+          chunk that exhausts its budget is recorded as undelivered and the
+          window *continues* — no abort.
+
+        The ``chunk_drop`` schedule, when set, replaces the frame-level RNG
+        for delivery decisions (frames are still counted once for byte
+        accounting), making chunk loss exactly reproducible in tests.
+        """
+        if indices is None:
+            indices = range(len(payloads))
+        delivered: list[set[int]] = [set() for _ in range(num_receivers)]
+        total = TransferStats()
+        for payload, idx in zip(payloads, indices):
+            if self.chunk_drop is not None:
+                stats = self._count_frames_once(payload, uri=uri, code=code)
+                got = [not self.chunk_drop(uri, window, idx, r)
+                       for r in range(num_receivers)]
+            elif multicast:
+                stats, got = self._multicast_payload(
+                    payload, uri=uri, code=code, num_receivers=num_receivers)
+            else:
+                stats = self.send_payload(payload, uri=uri, code=code)
+                got = [not stats.failed_messages] * num_receivers
+                stats.failed_messages = 0  # chunk loss is recoverable here
+            total.add(stats)
+            for r in range(num_receivers):
+                if got[r]:
+                    delivered[r].add(idx)
+        return StreamDelivery(stats=total, delivered=delivered)
+
+    def _count_frames_once(self, payload, *, uri: str,
+                           code: Code) -> TransferStats:
+        """Byte/frame accounting for a payload framed once (no retries)."""
+        stats = TransferStats(messages=1, payload_bytes=len(payload))
+        for msg in blockwise_messages(payload, uri=uri, code=code):
+            wire = len(msg.encode())
+            assert wire + LOWPAN_OVERHEAD <= IEEE802154_MTU
+            stats.blocks += 1
+            stats.frames += 1
+            stats.wire_bytes += wire
+            stats.link_bytes += wire + LOWPAN_OVERHEAD
+        return stats
+
+    def _multicast_payload(self, payload, *, uri: str, code: Code,
+                           num_receivers: int
+                           ) -> tuple[TransferStats, list[bool]]:
+        """NON multicast: frames on air once, per-receiver independent loss.
+
+        The loss unit is the *chunk* (one draw per receiver per payload),
+        matching the selective-repeat recovery granularity: a multi-frame
+        chunk is either held whole or NACK'd whole, so simulating it as one
+        loss event keeps ``drop_prob`` meaningful for multi-kB chunks
+        (per-frame loss compounded over dozens of frames would make every
+        chunk vanish and says nothing the chunk layer can act on).
+        """
+        stats = self._count_frames_once(payload, uri=uri, code=code)
+        if self.drop_prob > 0.0:
+            got = (self._rng.random(num_receivers) >= self.drop_prob).tolist()
+        else:
+            got = [True] * num_receivers
+        return stats, got
 
     @staticmethod
     def airtime_seconds(stats: TransferStats) -> float:

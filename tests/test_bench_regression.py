@@ -1,0 +1,25 @@
+"""Tier-2 perf trend gate: `benchmarks/run.py --check` must pass against the
+committed BENCH_codec.json (fails on a >2x decode-throughput regression).
+
+Marked ``tier2`` — excluded from the default (tier-1) run by pytest.ini so
+timing noise on loaded CI boxes can't fail correctness runs; run locally via
+``pytest -m tier2``.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.tier2
+def test_codec_throughput_within_2x_of_committed():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "benchmarks" / "run.py"), "--check"],
+        cwd=REPO, capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "check: OK" in proc.stdout

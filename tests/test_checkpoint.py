@@ -69,3 +69,72 @@ def test_manager_falls_back_past_corrupt_latest(tmp_path):
 
 def test_restore_none_when_empty(tmp_path):
     assert CheckpointManager(tmp_path).restore_latest(_tree()) is None
+
+
+# -- streaming edge cases through CBORSequenceReader ---------------------------
+
+
+def _item_offsets(data):
+    """Byte offset of every top-level item in an RFC 8742 sequence."""
+    from repro.core import fastpath
+    offsets, pos = [], 0
+    while pos < len(data):
+        offsets.append(pos)
+        _, pos = fastpath.decode_prefix(data, pos)
+    return offsets
+
+
+def test_truncated_final_leaf_detected(tmp_path):
+    from repro.core.cbor import CBORDecodeError
+
+    tree = _tree()
+    p = save_checkpoint(tmp_path / "ck.cbor", tree, step=9)
+    raw = p.read_bytes()
+    p.write_bytes(raw[:-17])   # cut mid-way through the final leaf payload
+    with pytest.raises((CheckpointCorrupt, CBORDecodeError)):
+        restore_checkpoint(p, tree)
+
+
+def test_manager_falls_back_past_truncated_final_leaf(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    tree = _tree()
+    mgr.save(tree, 1)
+    p = mgr.save(tree, 2)
+    p.write_bytes(p.read_bytes()[:-17])
+    restored = mgr.restore_latest(tree)
+    assert restored is not None
+    assert restored[1]["step"] == 1
+
+
+def test_corrupt_leaf_header_mid_file(tmp_path):
+    """A leaf *header* (not payload) damaged in the middle of the sequence:
+    both a non-map item and undecodable bytes must surface as corruption."""
+    from repro.core.cbor import CBORDecodeError
+
+    tree = _tree()
+    p = save_checkpoint(tmp_path / "ck.cbor", tree, step=1)
+    raw = p.read_bytes()
+    # sequence layout: header, (info, payload) per leaf -> offsets[3] is the
+    # second leaf's info map
+    off = _item_offsets(raw)[3]
+    not_a_map = bytearray(raw)
+    not_a_map[off] = 0x01          # map head -> uint 1: wrong type, decodable
+    p.write_bytes(bytes(not_a_map))
+    with pytest.raises((CheckpointCorrupt, CBORDecodeError)):
+        restore_checkpoint(p, tree)
+    garbage = bytearray(raw)
+    garbage[off] = 0xFF            # break code: not decodable at all
+    p.write_bytes(bytes(garbage))
+    with pytest.raises((CheckpointCorrupt, CBORDecodeError)):
+        restore_checkpoint(p, tree)
+
+
+def test_zero_leaf_checkpoint_roundtrip(tmp_path):
+    from repro.core.fastpath import CBORSequenceReader
+
+    p = save_checkpoint(tmp_path / "ck.cbor", {}, step=5, round_=2)
+    items = list(CBORSequenceReader(p.read_bytes()))
+    assert len(items) == 1         # header only, nothing else in the stream
+    assert items[0]["num_leaves"] == 0
+    restored, header = restore_checkpoint(p, {})
+    assert restored == {} and header["step"] == 5 and header["round"] == 2

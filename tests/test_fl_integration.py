@@ -145,6 +145,25 @@ def test_fl_chunked_dissemination_converges():
     assert losses[-1] < losses[0] * 0.95, losses
 
 
+def test_fl_chunked_lossy_selective_repeat_converges():
+    """Chunked rounds over a lossy link: downlink losses are repaired via
+    NACK re-multicast, uplinks stream through the same chunk framing, and
+    training still converges — the case the old abort-on-failure loop lost."""
+    sim = _make_sim(rounds=3, chunk_elems=8192, drop_prob=0.15)
+    report = sim.run()
+    acc = report.accounting.by_type
+    assert "FL_Model_Chunk" in acc            # downlink chunk stream
+    assert "FL_Model_Chunk_Uplink" in acc     # symmetric uplink stream
+    assert "FL_Chunk_Ack" in acc              # every transfer ends acked
+    assert "FL_Chunk_Nack" in acc             # 15% loss forces repairs
+    assert "FL_Local_Model_Update" not in acc  # monolithic uplink replaced
+    n_chunks = -(-sim.server.global_params.size // 8192)
+    assert acc["FL_Model_Chunk"].messages > 3 * n_chunks  # repairs happened
+    assert len(report.rounds) == 3
+    losses = [r.mean_train_loss for r in report.rounds]
+    assert losses[-1] < losses[0], losses
+
+
 def test_fl_q8_compressed_updates_converge():
     """Beyond-paper: full FL rounds with blockwise-int8 model payloads."""
     report = _make_sim(rounds=4, encoding=ParamsEncoding.Q8).run()

@@ -19,10 +19,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import _make_mesh
 from repro.train.steps import _q8_pod_sync
 
-mesh = jax.make_mesh((2, 2), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = _make_mesh((2, 2), ("pod", "data"))
 
 rng = np.random.default_rng(0)
 grads = {"w": jnp.asarray(rng.standard_normal((2, 512, 8)) * 0.01,
@@ -33,9 +33,16 @@ grads = {"w": jnp.asarray(rng.standard_normal((2, 512, 8)) * 0.01,
 def sync(g):
     return _q8_pod_sync(g, axis="pod")
 
-synced = jax.jit(jax.shard_map(
-    sync, mesh=mesh, in_specs=(P("pod"),), out_specs=P("pod"),
-    axis_names=frozenset({"pod", "data"}), check_vma=False))(grads)
+if hasattr(jax, "shard_map"):    # jax >= 0.6: top-level API, vma checking
+    smap = jax.shard_map(sync, mesh=mesh, in_specs=(P("pod"),),
+                         out_specs=P("pod"),
+                         axis_names=frozenset({"pod", "data"}),
+                         check_vma=False)
+else:                            # older jax: experimental API, check_rep
+    from jax.experimental.shard_map import shard_map
+    smap = shard_map(sync, mesh=mesh, in_specs=(P("pod"),),
+                     out_specs=P("pod"), check_rep=False)
+synced = jax.jit(smap)(grads)
 
 for k in grads:
     exact = np.asarray(grads[k]).mean(0)
