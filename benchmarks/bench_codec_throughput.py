@@ -2,21 +2,32 @@
 
 Compares the paths that exist in the system:
   * python_ref    — the pure-Python CBOR item encoder (oracle)
-  * numpy_ta      — message encode via the zero-copy fast path
+  * numpy_ta      — message encode via the contiguous fast path (one
+                    payload copy into the preallocated buffer + finalize)
+  * encode_vectored — scatter-gather message encode: owned header segments
+                    + borrowed payload views, zero payload copies
   * decode_seed   — the seed decode chain: recursive oracle decode (payload
                     sliced to fresh bytes) + a ``bytes()`` copy before
                     ``np.frombuffer`` — kept inline as the baseline the
                     ISSUE's ≥3x decode criterion is measured against
   * decode_fastpath — iterative memoryview decode, ``np.frombuffer`` on the
                     zero-copy payload view
-  * pallas_f16    — the quantize_f16 kernel path (interpret mode on CPU;
-                    on TPU this is the compiled VMEM-tiled kernel)
+  * pallas_f16    — the quantize_f16 kernel path emitting owned ``bytes``
+                    (interpret mode on CPU; on TPU this is the compiled
+                    VMEM-tiled kernel)
+  * pallas_f16_vec — the same kernel handing the wire a borrowed view,
+                    spliced into a vectored message (no ``bytes`` handoff)
   * q8_kernel     — blockwise int8 compression kernel
 
 ``run()`` prints the CSV section; ``run_json()`` additionally returns the
-machine-readable record (encode/decode MB/s and tracemalloc peak bytes per
-model size) that ``benchmarks/run.py`` writes to ``BENCH_codec.json`` so the
-perf trajectory is tracked PR over PR.
+machine-readable record (encode/decode MB/s, tracemalloc peak bytes, and a
+``copies_per_roundtrip`` counter per model size) that ``benchmarks/run.py``
+writes to ``BENCH_codec.json`` so the perf trajectory is tracked PR over PR.
+
+``copies_per_roundtrip`` is measured, not asserted: tracemalloc peak bytes
+of one encode + one decode divided by the payload size — ~2 for the
+contiguous encode chain (encode buffer + finalize), ~0 for the vectored
+chain (headers only on encode, views only on decode).
 """
 from __future__ import annotations
 
@@ -66,7 +77,10 @@ def _decode_fastpath(data: bytes) -> np.ndarray:
 def _paths(n: int, flat: np.ndarray, msg: FLGlobalModelUpdate,
            wire_f32: bytes, jflat) -> dict:
     from repro.kernels.q8_block.ops import compress_update
-    from repro.kernels.quantize_f16.ops import params_to_f16_payload
+    from repro.kernels.quantize_f16.ops import (
+        params_to_f16_payload,
+        params_to_f16_view,
+    )
 
     return {
         "python_ref_dynamic": (lambda: cbor.encode(
@@ -74,9 +88,14 @@ def _paths(n: int, flat: np.ndarray, msg: FLGlobalModelUpdate,
             min(n, 10_000) * 4),
         "numpy_ta_f16": (lambda: msg.to_cbor(ParamsEncoding.TA_F16), n * 4),
         "numpy_ta_f32": (lambda: msg.to_cbor(ParamsEncoding.TA_F32), n * 4),
+        "encode_vectored_f32": (
+            lambda: msg.to_cbor_segments(ParamsEncoding.TA_F32), n * 4),
         "decode_seed_f32": (lambda: _decode_seed(wire_f32), n * 4),
         "decode_fastpath_f32": (lambda: _decode_fastpath(wire_f32), n * 4),
         "pallas_f16": (lambda: params_to_f16_payload(jflat), n * 4),
+        "pallas_f16_vec": (lambda: msg.to_cbor_segments(
+            ParamsEncoding.TA_F16,
+            params_payload=params_to_f16_view(jflat)), n * 4),
         "q8_kernel": (lambda: compress_update(jflat), n * 4),
     }
 
@@ -104,12 +123,27 @@ def run_json() -> tuple[list[str], dict]:
         entry["speedup_decode_fastpath_vs_seed"] = round(
             entry["decode_seed_f32"]["us_per_call"]
             / entry["decode_fastpath_f32"]["us_per_call"], 2)
-        entry["peak_alloc_encode_fastpath"] = _peak_alloc(
+        entry["speedup_encode_vectored_vs_contiguous"] = round(
+            entry["numpy_ta_f32"]["us_per_call"]
+            / entry["encode_vectored_f32"]["us_per_call"], 2)
+        # peak allocations: "fastpath" tracks the production wire path —
+        # since the vectored refactor that is the scatter-gather encoder
+        # (headers only); the contiguous single-buffer path stays recorded
+        # for comparison.
+        peak_enc_vec = _peak_alloc(
+            lambda: msg.to_cbor_segments(ParamsEncoding.TA_F32))
+        peak_enc_contig = _peak_alloc(
             lambda: msg.to_cbor(ParamsEncoding.TA_F32))
+        peak_dec = _peak_alloc(lambda: _decode_fastpath(wire_f32))
+        entry["peak_alloc_encode_fastpath"] = peak_enc_vec
+        entry["peak_alloc_encode_contiguous"] = peak_enc_contig
         entry["peak_alloc_decode_seed"] = _peak_alloc(
             lambda: _decode_seed(wire_f32))
-        entry["peak_alloc_decode_fastpath"] = _peak_alloc(
-            lambda: _decode_fastpath(wire_f32))
+        entry["peak_alloc_decode_fastpath"] = peak_dec
+        entry["copies_per_roundtrip"] = {
+            "contiguous": round((peak_enc_contig + peak_dec) / (n * 4), 2),
+            "vectored": round((peak_enc_vec + peak_dec) / (n * 4), 2),
+        }
         record["sizes"][str(n)] = entry
     return rows, record
 

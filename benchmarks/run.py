@@ -1,11 +1,11 @@
 # One function per paper table. Prints CSV sections; also writes
-# BENCH_codec.json (codec MB/s + peak allocations) so the serialization
-# perf trajectory is tracked from PR to PR.
+# BENCH_codec.json (codec MB/s + peak allocations + copies_per_roundtrip)
+# so the serialization perf trajectory is tracked from PR to PR.
 #
 # `--check` compares a fresh codec run against the committed
-# BENCH_codec.json and exits non-zero on a >2x decode-throughput
-# regression — the PR-over-PR trend gate (run via the tier-2 pytest
-# marker: `pytest -m tier2`).
+# BENCH_codec.json and exits non-zero on a >2x decode- OR
+# encode-throughput regression — the PR-over-PR trend gate (run via the
+# tier-2 pytest marker: `pytest -m tier2`).
 from __future__ import annotations
 
 import argparse
@@ -20,14 +20,16 @@ if str(_REPO) not in sys.path:   # `python benchmarks/run.py` from anywhere
 
 BENCH_JSON = _REPO / "BENCH_codec.json"
 DECODE_PATHS = ("decode_fastpath_f32", "decode_seed_f32")
+ENCODE_PATHS = ("encode_vectored_f32", "numpy_ta_f32")
 REGRESSION_FACTOR = 2.0
 
 
 def check(factor: float = REGRESSION_FACTOR) -> int:
     """Fresh codec bench vs committed BENCH_codec.json.
 
-    Returns 0 when every decode path is within ``factor`` of the committed
-    throughput, 1 on a regression (or a missing/malformed committed record).
+    Returns 0 when every decode and encode path is within ``factor`` of
+    the committed throughput, 1 on a regression (or a missing/malformed
+    committed record).
     """
     from benchmarks import bench_codec_throughput
 
@@ -36,27 +38,33 @@ def check(factor: float = REGRESSION_FACTOR) -> int:
         return 1
     committed = json.loads(BENCH_JSON.read_text())
     _, fresh = bench_codec_throughput.run_json()
-    failures = []
+    failures = {"decode": [], "encode": []}
     compared = 0
     for size, entry in committed.get("sizes", {}).items():
-        for name in DECODE_PATHS:
-            old = entry.get(name, {}).get("MBps")
-            new = fresh["sizes"].get(size, {}).get(name, {}).get("MBps")
-            if not old or not new:
-                continue
-            compared += 1
-            if new * factor < old:
-                failures.append(
-                    f"  {name} @ {size} params: {old:.1f} -> {new:.1f} MB/s "
-                    f"({old / new:.1f}x slower)")
+        for kind, names in (("decode", DECODE_PATHS),
+                            ("encode", ENCODE_PATHS)):
+            for name in names:
+                old = entry.get(name, {}).get("MBps")
+                new = fresh["sizes"].get(size, {}).get(name, {}).get("MBps")
+                if not old or not new:
+                    continue
+                compared += 1
+                if new * factor < old:
+                    failures[kind].append(
+                        f"  {name} @ {size} params: {old:.1f} -> {new:.1f} "
+                        f"MB/s ({old / new:.1f}x slower)")
     if compared == 0:
-        print("check: committed record has no comparable decode entries")
+        print("check: committed record has no comparable codec entries")
         return 1
-    if failures:
-        print(f"check: decode throughput regressed >{factor}x:")
-        print("\n".join(failures))
+    failed = False
+    for kind, lines in failures.items():
+        if lines:
+            failed = True
+            print(f"check: {kind} throughput regressed >{factor}x:")
+            print("\n".join(lines))
+    if failed:
         return 1
-    print(f"check: OK ({compared} decode entries within {factor}x "
+    print(f"check: OK ({compared} codec entries within {factor}x "
           "of committed BENCH_codec.json)")
     return 0
 

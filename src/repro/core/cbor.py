@@ -200,7 +200,9 @@ def _encode_into(obj: Any, out: bytearray, fenc: Callable[[float], bytes]) -> No
         out += fenc(obj)
     elif isinstance(obj, bytes):
         out += encode_bytes(obj)
-    elif isinstance(obj, bytearray):
+    elif isinstance(obj, (bytearray, memoryview)):
+        # memoryview: borrowed payload views from the vectored fast path;
+        # the oracle copies them (clarity over speed).
         out += encode_bytes(bytes(obj))
     elif isinstance(obj, str):
         out += encode_text(obj)

@@ -222,13 +222,15 @@ FL_MODEL_CHUNK = ArrayOf([       # beyond-paper extension (DESIGN.md §9.1)
 ])
 
 # Selective-repeat control messages (docs/chunk_protocol.md).  A receiver
-# that is missing chunks after a transfer window NACKs the missing indices;
-# the sender re-sends only those.  A complete receiver ACKs the generation.
+# that is missing chunks after a transfer window NACKs the missing set as
+# flat (start, count) range pairs — bursty losses on wide streams cost two
+# uints per burst instead of one per chunk; the sender re-sends only those.
+# A complete receiver ACKs the generation (the pair list is never empty).
 FL_CHUNK_NACK = ArrayOf([
     fl_model_identifier,
     fl_model_round,
     Uint(),                      # num-chunks (the expected generation size)
-    ArrayOf([OneOrMore(Uint())]),  # missing chunk indices (never empty: ACK)
+    ArrayOf([OneOrMore(Group([Uint(), Uint()]))]),  # missing (start, count)+
 ])
 
 FL_CHUNK_ACK = ArrayOf([

@@ -30,14 +30,28 @@ Why it is fast:
     ``CBORSequenceWriter`` which streams typed-array payloads to the file
     without building the full item in memory.
 
+  * **Vectored encoding** (``encode_vectored``) goes one step further than
+    ``encode_into``: instead of copying payloads into one output buffer it
+    returns a *scatter-gather segment list* — small owned header segments
+    interleaved with **borrowed** read-only views of the source payload
+    buffers (numpy arrays, ``bytes``, ``Raw`` splices).  Joining the
+    segments reproduces ``cbor.encode(obj)`` byte-exactly, but the hot
+    wire path never joins: ``ScatterPayload`` presents the segments as one
+    sliceable byte sequence (the CoAP framer slices ≤64 B at a time), so a
+    multi-megabyte message reaches the link with **zero** payload copies
+    and O(1 KB) of owned header scratch.
+
 Both codecs raise ``cbor.CBORDecodeError`` on malformed input, so callers
 (e.g. ``CheckpointManager.restore_latest``) handle corruption uniformly.
 """
 from __future__ import annotations
 
+import io
+import os
 import struct
+from bisect import bisect_right
 from dataclasses import dataclass
-from typing import Any, BinaryIO, Iterator
+from typing import Any, BinaryIO, Iterator, Sequence
 
 import numpy as np
 
@@ -71,10 +85,14 @@ from repro.core.typed_arrays import tag_for_dtype
 
 __all__ = [
     "Raw",
+    "ScatterPayload",
     "encoded_size",
     "encode_into",
     "encode",
     "encode_view",
+    "encode_vectored",
+    "vectored_nbytes",
+    "vectored_bytes",
     "decode",
     "decode_prefix",
     "CBORSequenceReader",
@@ -265,7 +283,7 @@ def encode_into(obj: Any, buf, pos: int = 0, *, worst: bool = False) -> int:
         elif isinstance(o, float):
             pos = _write_float(buf, pos, o, worst)
         elif isinstance(o, (bytes, bytearray, memoryview)):
-            if isinstance(o, memoryview) and o.itemsize != 1:
+            if isinstance(o, memoryview) and (o.ndim != 1 or o.itemsize != 1):
                 o = o.cast("B")  # byte length, not element count
             n = len(o)
             pos = _write_head(buf, pos, MT_BSTR, n)
@@ -328,6 +346,200 @@ def encode_view(obj: Any, *, worst: bool = False) -> memoryview:
     if end != len(buf):
         raise RuntimeError(f"size pre-pass mismatch: {end} != {len(buf)}")
     return memoryview(buf).toreadonly()
+
+
+# ---------------------------------------------------------------------------
+# Vectored (scatter-gather) encoding: owned header segments + borrowed
+# payload views, never one contiguous output buffer.
+
+# Payloads below this many bytes are coalesced into the header scratch
+# instead of becoming their own borrowed segment: a 9-byte float is cheaper
+# to memcpy than to carry as an iovec entry through the whole wire path.
+BORROW_MIN = 512
+
+
+def _append_head(out: bytearray, major: int, arg: int) -> None:
+    """Grow ``out`` and delegate to ``_write_head`` — one head encoder."""
+    pos = len(out)
+    out += bytes(head_size(arg))
+    _write_head(out, pos, major, arg)
+
+
+def _append_float(out: bytearray, value: float, worst: bool) -> None:
+    pos = len(out)
+    out += bytes(_float_item_size(value, worst))
+    _write_float(out, pos, value, worst)
+
+
+def _byte_view(obj) -> memoryview:
+    v = obj if isinstance(obj, memoryview) else memoryview(obj)
+    if v.ndim != 1 or v.itemsize != 1:
+        v = v.cast("B")
+    return v
+
+
+def encode_vectored(obj: Any, *, worst: bool = False,
+                    borrow_min: int = BORROW_MIN) -> list[memoryview]:
+    """Scatter-gather CBOR encode: a list of read-only memoryview segments.
+
+    ``b"".join(segments)`` is byte-identical to ``cbor.encode(obj)`` (the
+    differential tests assert this), but no join ever happens on the hot
+    path: heads, small scalars and sub-``borrow_min`` payloads accumulate
+    in owned scratch segments, while large payloads (numpy typed-array
+    buffers, byte strings, ``Raw`` splices) become *borrowed* views of
+    their source buffers — zero payload copies, O(header) owned bytes.
+
+    The returned views keep their source buffers alive; callers must not
+    mutate a source (e.g. the live parameter vector) until the segments
+    have been consumed by the link / sink.
+    """
+    segments: list[memoryview] = []
+    scratch = bytearray()
+
+    def flush() -> None:
+        nonlocal scratch
+        if scratch:
+            segments.append(memoryview(scratch).toreadonly())
+            scratch = bytearray()
+
+    def emit_payload(view: memoryview) -> None:
+        nonlocal scratch
+        if view.nbytes >= borrow_min:
+            flush()
+            segments.append(view if view.readonly else view.toreadonly())
+        else:
+            scratch += view
+
+    stack = [obj]
+    pop = stack.pop
+    push = stack.append
+    while stack:
+        o = pop()
+        if o is None:
+            scratch.append((MT_SIMPLE << 5) | SIMPLE_NULL)
+        elif o is UNDEFINED:
+            scratch.append((MT_SIMPLE << 5) | SIMPLE_UNDEFINED)
+        elif isinstance(o, Raw):
+            emit_payload(_byte_view(o.data))
+        elif isinstance(o, bool):
+            scratch.append((MT_SIMPLE << 5)
+                           | (SIMPLE_TRUE if o else SIMPLE_FALSE))
+        elif isinstance(o, int):
+            if worst:
+                scratch.append((MT_UINT << 5) | AI_8BYTE)
+                scratch += o.to_bytes(8, "big")
+            elif o >= 0:
+                _append_head(scratch, MT_UINT, o)
+            else:
+                _append_head(scratch, MT_NINT, -1 - o)
+        elif isinstance(o, float):
+            _append_float(scratch, o, worst)
+        elif isinstance(o, (bytes, bytearray, memoryview)):
+            v = _byte_view(o)
+            _append_head(scratch, MT_BSTR, v.nbytes)
+            emit_payload(v)
+        elif isinstance(o, str):
+            raw = o.encode("utf-8")
+            _append_head(scratch, MT_TSTR, len(raw))
+            emit_payload(memoryview(raw))
+        elif isinstance(o, Tag):
+            _append_head(scratch, MT_TAG, o.tag)
+            if isinstance(o.value, np.ndarray):
+                payload = _ta_le(o.value)
+                _append_head(scratch, MT_BSTR, payload.nbytes)
+                emit_payload(memoryview(payload).cast("B"))
+                continue
+            push(o.value)
+        elif isinstance(o, np.ndarray):
+            payload = _ta_le(o)
+            _append_head(scratch, MT_TAG, tag_for_dtype(payload.dtype))
+            _append_head(scratch, MT_BSTR, payload.nbytes)
+            emit_payload(memoryview(payload).cast("B"))
+        elif isinstance(o, (list, tuple)):
+            _append_head(scratch, MT_ARRAY, len(o))
+            for item in reversed(o):
+                push(item)
+        elif isinstance(o, dict):
+            _append_head(scratch, MT_MAP, len(o))
+            for k, v in reversed(list(o.items())):
+                push(v)
+                push(k)
+        else:
+            raise TypeError(f"cannot CBOR-encode {type(o)!r}")
+    flush()
+    return segments
+
+
+def vectored_nbytes(segments: Sequence) -> int:
+    """Total wire length of a segment list, without joining."""
+    return sum(_byte_view(s).nbytes for s in segments)
+
+
+def vectored_bytes(segments: Sequence) -> bytes:
+    """Join a segment list into owned contiguous bytes (the *one* copy a
+    receiver pays; everything upstream of this call is copy-free)."""
+    return b"".join(segments)
+
+
+class ScatterPayload:
+    """A read-only concatenated view over scatter-gather segments.
+
+    Presents a segment list (``encode_vectored`` output) as one byte
+    sequence: ``len()`` counts bytes without joining, and slicing
+    materializes only the requested range — the CoAP blockwise framer
+    slices ≤64 B at a time, so a multi-megabyte vectored message crosses
+    the simulated link with O(block) transient memory and zero payload
+    joins.  ``tobytes()`` is the explicit receiver-side copy.
+    """
+
+    __slots__ = ("_segments", "_starts", "_nbytes")
+
+    def __init__(self, segments: Sequence) -> None:
+        segs = [v for v in map(_byte_view, segments) if v.nbytes]
+        starts = [0] * (len(segs) + 1)
+        for i, s in enumerate(segs):
+            starts[i + 1] = starts[i] + s.nbytes
+        self._segments = segs
+        self._starts = starts
+        self._nbytes = starts[-1]
+
+    def __len__(self) -> int:
+        return self._nbytes
+
+    @property
+    def num_segments(self) -> int:
+        return len(self._segments)
+
+    def segments(self) -> list[memoryview]:
+        return list(self._segments)
+
+    def __getitem__(self, key):
+        if isinstance(key, int):
+            if key < 0:
+                key += self._nbytes
+            if not 0 <= key < self._nbytes:
+                raise IndexError("ScatterPayload index out of range")
+            i = bisect_right(self._starts, key) - 1
+            return self._segments[i][key - self._starts[i]]
+        start, stop, step = key.indices(self._nbytes)
+        if step != 1:
+            raise ValueError("ScatterPayload slices must be contiguous")
+        if start >= stop:
+            return b""
+        out = bytearray(stop - start)
+        pos = 0
+        i = bisect_right(self._starts, start) - 1
+        while pos < len(out):
+            seg = self._segments[i]
+            lo = start + pos - self._starts[i]
+            take = min(seg.nbytes - lo, len(out) - pos)
+            out[pos : pos + take] = seg[lo : lo + take]
+            pos += take
+            i += 1
+        return bytes(out)
+
+    def tobytes(self) -> bytes:
+        return b"".join(self._segments)
 
 
 # ---------------------------------------------------------------------------
@@ -605,6 +817,13 @@ def decode_prefix(data, pos: int = 0, *, copy: bool = False) -> tuple[Any, int]:
 # ---------------------------------------------------------------------------
 # RFC 8742 CBOR sequences: cursor-based streaming reader / writer.
 
+try:  # kernel cap on iovec entries per writev call (1024 on Linux)
+    _IOV_MAX = os.sysconf("SC_IOV_MAX")
+except (AttributeError, ValueError, OSError):
+    _IOV_MAX = 1024
+if _IOV_MAX <= 0:
+    _IOV_MAX = 1024
+
 
 class CBORSequenceReader:
     """Iterate the items of an RFC 8742 CBOR sequence, O(n) total.
@@ -666,16 +885,51 @@ class CBORSequenceWriter:
         self.bytes_written += len(data)
         return len(data)
 
+    def write_segments(self, segments: Sequence) -> int:
+        """Flush a scatter-gather segment list (``encode_vectored`` output)
+        to the sink in one gather operation.
+
+        When the sink exposes a real file descriptor the segments go down
+        in a single ``os.writev`` call (looping on partial writes) — owned
+        header bytes and borrowed multi-megabyte payload views reach the
+        kernel without ever being joined in user space.  Sinks without a
+        descriptor (``BytesIO``, sockets wrapped in codecs, …) fall back
+        to sequential ``write`` calls, still join-free.
+        """
+        segs = [v for v in map(_byte_view, segments) if v.nbytes]
+        total = sum(s.nbytes for s in segs)
+        sink = self._sink
+        # Gather-write only for plain file objects whose write path IS the
+        # descriptor: transforming sinks (gzip/bz2/lzma wrappers) also
+        # expose the underlying fileno, and writev would inject raw bytes
+        # past their codec.  os.writev is POSIX-only.
+        direct = isinstance(sink, (io.FileIO, io.BufferedWriter,
+                                   io.BufferedRandom))
+        try:
+            fd = sink.fileno() if direct and hasattr(os, "writev") else None
+        except (AttributeError, OSError, io.UnsupportedOperation):
+            fd = None
+        if fd is None:
+            for s in segs:
+                sink.write(s)
+        else:
+            sink.flush()  # writev bypasses the Python-level buffer
+            while segs:
+                n = os.writev(fd, segs[:_IOV_MAX])
+                while segs and n >= segs[0].nbytes:
+                    n -= segs[0].nbytes
+                    segs.pop(0)
+                if n and segs:
+                    segs[0] = segs[0][n:]
+        self.bytes_written += total
+        return total
+
+    def write_vectored(self, obj: Any, *, worst: bool = False) -> int:
+        """Encode ``obj`` vectored and gather-flush it — payloads go from
+        their source buffers to the sink with zero intermediate copies."""
+        return self.write_segments(encode_vectored(obj, worst=worst))
+
     def write_typed_array(self, arr: np.ndarray, *, tag: int | None = None
                           ) -> int:
-        payload = _ta_le(arr)
-        if tag is None:
-            tag = tag_for_dtype(payload.dtype)
-        head = bytearray(head_size(tag) + head_size(payload.nbytes))
-        pos = _write_head(head, 0, MT_TAG, tag)
-        pos = _write_head(head, pos, MT_BSTR, payload.nbytes)
-        self._sink.write(head)
-        self._sink.write(memoryview(payload).cast("B"))
-        n = len(head) + payload.nbytes
-        self.bytes_written += n
-        return n
+        obj = arr if tag is None else Tag(tag, np.asarray(arr))
+        return self.write_vectored(obj)

@@ -43,7 +43,6 @@ from repro.core.typed_arrays import (
     TAG_UUID,
     decode_typed_array,
     encode_typed_array,
-    encode_typed_array_from_payload,
     is_typed_array,
 )
 
@@ -74,25 +73,28 @@ _TA_DTYPES = {
 
 
 def _encode_params(params: np.ndarray, encoding: ParamsEncoding,
-                   payload: bytes | None = None) -> object:
+                   payload=None) -> object:
     """Build the CBOR object for fl-model-params.
 
     Typed-array encodings return the numpy array itself (or ``Tag(tag,
-    ndarray)`` for extension tags): the fast-path encoder writes the array
-    buffer straight into the preallocated output, so the payload is copied
-    exactly once end to end.
+    buffer)`` for pre-quantized payloads and extension tags): the fast-path
+    encoder writes the array buffer straight into the preallocated output
+    (one copy), and the vectored encoder splices it as a *borrowed*
+    segment (zero copies).  ``payload`` accepts any buffer — ``bytes`` or
+    a ``memoryview`` handed straight out of a Pallas kernel
+    (``params_to_f16_view``), which the vectored path sends un-copied.
     """
     if encoding in _TA_TAGS:
-        if payload is not None:  # pre-quantized bytes (Pallas kernel output)
-            return Raw(encode_typed_array_from_payload(payload, _TA_TAGS[encoding]))
+        if payload is not None:  # pre-quantized payload (Pallas kernel output)
+            return Tag(_TA_TAGS[encoding], payload)
         if encoding is ParamsEncoding.TA_BF16:
             bits = _f32_to_bf16_bits(np.asarray(params, dtype=np.float32))
             return Tag(TAG_BF16LE, bits)
         return np.asarray(params, dtype=_TA_DTYPES[encoding]).reshape(-1)
     if encoding is ParamsEncoding.Q8:
-        from repro.core.params_codec import encode_q8
-        item, _ = encode_q8(np.asarray(params, dtype=np.float32).reshape(-1))
-        return Raw(item)
+        from repro.core.params_codec import q8_item
+        item, _ = q8_item(np.asarray(params, dtype=np.float32).reshape(-1))
+        return item
     if encoding is ParamsEncoding.DYNAMIC:
         return [float(v) for v in np.asarray(params).reshape(-1)]
     if encoding is ParamsEncoding.ARRAY_F64:
@@ -128,6 +130,14 @@ def _encode_obj(obj: object, *, worst: bool = False,
     if fast:
         return fastpath.encode(obj, worst=worst)
     return _encode_obj_oracle(obj, worst=worst)
+
+
+def _encode_obj_segments(obj: object, *, worst: bool = False
+                         ) -> list[memoryview]:
+    """Vectored encode of a message object tree: owned header segments +
+    borrowed payload views; ``b"".join`` of the result equals
+    ``_encode_obj(obj)`` byte-exactly (differential tests assert it)."""
+    return fastpath.encode_vectored(obj, worst=worst)
 
 
 def _encode_obj_oracle(obj: object, *, worst: bool = False) -> bytes:
@@ -231,16 +241,28 @@ class FLGlobalModelUpdate:
     params: np.ndarray
     continue_training: bool
 
-    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16, *,
-                worst: bool = False, params_payload: bytes | None = None,
-                fast: bool = True) -> bytes:
-        obj = [
+    def _cbor_obj(self, encoding: ParamsEncoding,
+                  params_payload=None) -> list:
+        return [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
             _encode_params(self.params, encoding, params_payload),
             bool(self.continue_training),
         ]
-        return _encode_obj(obj, worst=worst, fast=fast)
+
+    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16, *,
+                worst: bool = False, params_payload=None,
+                fast: bool = True) -> bytes:
+        return _encode_obj(self._cbor_obj(encoding, params_payload),
+                           worst=worst, fast=fast)
+
+    def to_cbor_segments(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16,
+                         *, worst: bool = False,
+                         params_payload=None) -> list[memoryview]:
+        """Scatter-gather wire form: the params payload is a borrowed view
+        of the live array (or kernel output), never copied."""
+        return _encode_obj_segments(self._cbor_obj(encoding, params_payload),
+                                    worst=worst)
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLGlobalModelUpdate":
@@ -276,11 +298,17 @@ class FLLocalDataSetUpdate:
     dataset_size: int
     metadata: ModelMetadata | None = None
 
-    def to_cbor(self, *, worst: bool = False, fast: bool = True) -> bytes:
+    def _cbor_obj(self) -> list:
         obj: list = [int(self.dataset_size)]
         if self.metadata is not None:  # group: spliced, not nested
             obj += [float(self.metadata.train_loss), float(self.metadata.val_loss)]
-        return _encode_obj(obj, worst=worst, fast=fast)
+        return obj
+
+    def to_cbor(self, *, worst: bool = False, fast: bool = True) -> bytes:
+        return _encode_obj(self._cbor_obj(), worst=worst, fast=fast)
+
+    def to_cbor_segments(self, *, worst: bool = False) -> list[memoryview]:
+        return _encode_obj_segments(self._cbor_obj(), worst=worst)
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLLocalDataSetUpdate":
@@ -316,17 +344,27 @@ class FLLocalModelUpdate:
     params: np.ndarray
     metadata: ModelMetadata
 
-    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16, *,
-                worst: bool = False, params_payload: bytes | None = None,
-                fast: bool = True) -> bytes:
-        obj = [
+    def _cbor_obj(self, encoding: ParamsEncoding,
+                  params_payload=None) -> list:
+        return [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
             _encode_params(self.params, encoding, params_payload),
             float(self.metadata.train_loss),
             float(self.metadata.val_loss),
         ]
-        return _encode_obj(obj, worst=worst, fast=fast)
+
+    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16, *,
+                worst: bool = False, params_payload=None,
+                fast: bool = True) -> bytes:
+        return _encode_obj(self._cbor_obj(encoding, params_payload),
+                           worst=worst, fast=fast)
+
+    def to_cbor_segments(self, encoding: ParamsEncoding = ParamsEncoding.TA_F16,
+                         *, worst: bool = False,
+                         params_payload=None) -> list[memoryview]:
+        return _encode_obj_segments(self._cbor_obj(encoding, params_payload),
+                                    worst=worst)
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLLocalModelUpdate":
@@ -375,10 +413,9 @@ class FLModelChunk:
     crc32: int
     params: np.ndarray
 
-    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F32, *,
-                params_payload: bytes | None = None,
-                fast: bool = True) -> bytes:
-        obj = [
+    def _cbor_obj(self, encoding: ParamsEncoding,
+                  params_payload=None) -> list:
+        return [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
             int(self.chunk_index),
@@ -386,7 +423,18 @@ class FLModelChunk:
             int(self.crc32),
             _encode_params(self.params, encoding, params_payload),
         ]
-        return _encode_obj(obj, fast=fast)
+
+    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F32, *,
+                params_payload=None,
+                fast: bool = True) -> bytes:
+        return _encode_obj(self._cbor_obj(encoding, params_payload), fast=fast)
+
+    def to_cbor_segments(self, encoding: ParamsEncoding = ParamsEncoding.TA_F32,
+                         *, params_payload=None) -> list[memoryview]:
+        """Chunk wire form as segments: the chunk payload is a borrowed
+        view of the live parameter slice — a whole-model chunk stream
+        holds only headers beyond the model itself."""
+        return _encode_obj_segments(self._cbor_obj(encoding, params_payload))
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLModelChunk":
@@ -398,16 +446,75 @@ class FLModelChunk:
                    _expect_uint(crc, "crc32"), params_from_cbor(params))
 
 
+def missing_to_ranges(missing) -> list[int]:
+    """Compress a set of chunk indices into flat ``[start, count, ...]``
+    range pairs (sorted, deduplicated, maximal runs).
+
+    Bursty losses on wide streams — the common case under fading links —
+    collapse to a handful of pairs, so NACK control traffic scales with
+    the number of loss *bursts* instead of the number of lost chunks."""
+    out: list[int] = []
+    for i in sorted(set(int(i) for i in missing)):
+        if out and i == out[-2] + out[-1]:
+            out[-1] += 1
+        else:
+            out += [i, 1]
+    return out
+
+
+# Largest generation size a NACK decode will expand without the caller
+# vouching for it (``expect_num_chunks``): a hostile 30-byte wire NACK can
+# claim any num-chunks, and the expansion is O(num-chunks) memory, so an
+# unvouched claim must be bounded.  2^20 chunks ≈ a 4-GB model at the
+# default 1024-element chunking — far beyond anything a constrained link
+# carries in one generation.
+MAX_NACK_CHUNKS = 1 << 20
+
+
+def ranges_to_missing(ranges, *, limit: int | None = None) -> tuple[int, ...]:
+    """Expand flat ``[start, count, ...]`` range pairs back to indices.
+
+    ``limit`` bounds every expanded index (exclusive) — decode paths MUST
+    pass the generation size so a malformed or hostile NACK (e.g.
+    ``[0, 2**60]``, 26 bytes on the wire) is rejected before any
+    multi-GB tuple is materialized."""
+    if not isinstance(ranges, list) or not ranges or len(ranges) % 2:
+        raise ValueError("fl-chunk-missing must be non-empty (start, count) "
+                         "range pairs")
+    idx: list[int] = []
+    prev_end = 0
+    for start, count in zip(ranges[::2], ranges[1::2]):
+        _expect_uint(start, "range-start")
+        if not isinstance(count, int) or isinstance(count, bool) or count < 1:
+            raise ValueError("range-count must be a positive uint")
+        if start < prev_end:
+            # sorted + non-overlapping is what makes `limit` an actual
+            # bound on the expansion: with overlap allowed, repeating one
+            # in-bounds range inflates the output without bound.
+            raise ValueError(
+                "missing ranges must be sorted and non-overlapping")
+        if limit is not None and start + count > limit:
+            raise ValueError(
+                f"missing range [{start}, {start + count}) exceeds "
+                f"num-chunks {limit}")
+        idx.extend(range(start, start + count))
+        prev_end = start + count
+    return tuple(idx)
+
+
 @dataclass
 class FLChunkNack:
     """Selective-repeat NACK: receiver -> sender, after a transfer window.
 
-    [model-uuid, round, num-chunks: uint, [+ missing-index: uint]]
+    [model-uuid, round, num-chunks: uint, [+ (start: uint, count: uint)]]
 
     ``missing`` is the set of chunk indices of the (model_id, round)
     generation the receiver has not assembled; the sender re-sends only
-    those.  An empty set is not a valid NACK — complete receivers send
-    ``FLChunkAck`` instead (the CDDL schema enforces ``[+ uint]``).
+    those.  On the wire the set travels as flat maximal ``(start, count)``
+    range pairs — bursty losses cost two uints per burst instead of one
+    per chunk.  An empty set is not a valid NACK — complete receivers
+    send ``FLChunkAck`` instead (the CDDL schema enforces ``[+ (uint,
+    uint)]``).
     """
 
     model_id: uuid_module.UUID
@@ -415,29 +522,55 @@ class FLChunkNack:
     num_chunks: int
     missing: tuple[int, ...]
 
-    def to_cbor(self, *, fast: bool = True) -> bytes:
+    def __post_init__(self) -> None:
+        # wire form is sorted/deduplicated ranges; normalize eagerly so
+        # roundtrips are exact and `missing` compares canonically.
+        self.missing = tuple(sorted(set(int(i) for i in self.missing)))
+
+    def _cbor_obj(self) -> list:
         if not self.missing:
             raise ValueError("empty NACK: send FLChunkAck instead")
-        obj = [
+        return [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
             int(self.num_chunks),
-            [int(i) for i in self.missing],
+            missing_to_ranges(self.missing),
         ]
-        return _encode_obj(obj, fast=fast)
+
+    def to_cbor(self, *, fast: bool = True) -> bytes:
+        return _encode_obj(self._cbor_obj(), fast=fast)
+
+    def to_cbor_segments(self) -> list[memoryview]:
+        return _encode_obj_segments(self._cbor_obj())
 
     @classmethod
-    def from_cbor(cls, data: bytes) -> "FLChunkNack":
+    def from_cbor(cls, data: bytes, *,
+                  expect_num_chunks: int | None = None) -> "FLChunkNack":
+        """Decode a NACK.  ``expect_num_chunks`` is the receiver's own
+        generation size (the selective-repeat sender always knows it):
+        a NACK claiming any other size is rejected outright.  Without a
+        caller expectation the claimed size is capped at
+        ``MAX_NACK_CHUNKS`` — the size field comes from the same
+        (untrusted) wire bytes as the ranges it bounds, so it cannot be
+        the only guard on the O(num-chunks) expansion."""
         item = fastpath.decode(data)
         _expect_array(item, 4, "FL_Chunk_Nack")
-        ident, rnd, total, missing = item
-        if not isinstance(missing, list) or not missing:
-            raise ValueError("fl-chunk-missing must be a non-empty array")
+        ident, rnd, total, ranges = item
+        total = _expect_uint(total, "num-chunks")
+        if expect_num_chunks is not None:
+            if total != expect_num_chunks:
+                raise ValueError(
+                    f"NACK num-chunks {total} != this generation's "
+                    f"{expect_num_chunks}")
+        elif total > MAX_NACK_CHUNKS:
+            raise ValueError(
+                f"NACK num-chunks {total} exceeds MAX_NACK_CHUNKS "
+                f"({MAX_NACK_CHUNKS}) and no expected size was given")
         return cls(
             model_id=_decode_uuid(ident),
             round=_expect_uint(rnd, "fl-model-round"),
-            num_chunks=_expect_uint(total, "num-chunks"),
-            missing=tuple(_expect_uint(i, "missing-index") for i in missing),
+            num_chunks=total,
+            missing=ranges_to_missing(ranges, limit=total),
         )
 
 
@@ -452,13 +585,18 @@ class FLChunkAck:
     round: int
     num_chunks: int
 
-    def to_cbor(self, *, fast: bool = True) -> bytes:
-        obj = [
+    def _cbor_obj(self) -> list:
+        return [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
             int(self.num_chunks),
         ]
-        return _encode_obj(obj, fast=fast)
+
+    def to_cbor(self, *, fast: bool = True) -> bytes:
+        return _encode_obj(self._cbor_obj(), fast=fast)
+
+    def to_cbor_segments(self) -> list[memoryview]:
+        return _encode_obj_segments(self._cbor_obj())
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLChunkAck":

@@ -97,6 +97,27 @@ def encode_q8(flat: np.ndarray, block: int = 256) -> tuple[bytes, np.ndarray]:
     return item, flat - deq
 
 
+def q8_item_from_arrays(q: np.ndarray, scales: np.ndarray, count: int,
+                        block: int = 256) -> Tag:
+    """The single definition of the q8 wire item shape:
+    ``Tag(TAG_Q8_BLOCK, [block, count, q: ndarray, scales: ndarray])``
+    with ``q`` the block-padded int8 stream.  Both the numpy quantizer
+    (``q8_item``) and the Pallas kernel path (``q8_block.ops.q8_wire_item``)
+    build their items here so the layouts cannot diverge."""
+    return Tag(TAG_Q8_BLOCK, [int(block), int(count), q, scales])
+
+
+def q8_item(flat: np.ndarray, block: int = 256) -> tuple[Tag, np.ndarray]:
+    """The q8 payload as a CBOR object tree instead of pre-encoded bytes.
+
+    Encodes byte-identically to ``encode_q8`` through every codec, but the
+    quantized arrays stay live numpy buffers, so the vectored encoder
+    splices them as borrowed segments with zero copies.  Returns
+    (item, quantization error for error feedback)."""
+    q, scales, deq = quantize_q8(flat, block)
+    return q8_item_from_arrays(q, scales, flat.size, block), flat - deq
+
+
 def decode_q8(item: Tag, total: int | None = None) -> np.ndarray:
     if not isinstance(item, Tag) or item.tag != TAG_Q8_BLOCK:
         raise TypeError("not a q8 payload")

@@ -12,8 +12,9 @@ One protocol engine serves both directions of the FL round:
 The pieces:
 
   * ``chunk_stream``      — slice a flat f32 parameter vector into CRC'd
-    ``FLModelChunk`` messages (numpy views of the live vector; each chunk is
-    copied exactly once, into the encoder's output buffer);
+    ``FLModelChunk`` messages (numpy views of the live vector; the vectored
+    encoder splices each slice onto the wire as a borrowed segment — zero
+    payload copies between the parameter vector and the link);
   * ``ChunkAssembler``    — per-receiver reassembly state: CRC verification,
     duplicate suppression, stale-round rejection, missing-set queries;
   * ``run_selective_repeat`` — the windowed NACK round-trip over a
@@ -35,6 +36,7 @@ from typing import Callable, Iterator, Sequence
 import numpy as np
 
 from repro.core import cddl, fastpath
+from repro.core.fastpath import ScatterPayload
 from repro.core.messages import FLChunkAck, FLChunkNack, FLModelChunk
 from repro.transport.coap import Code, TransferStats
 from repro.transport.network import LossyLink
@@ -51,7 +53,8 @@ def chunk_stream(model_id: uuid.UUID, round_: int, params: np.ndarray,
     Each chunk's ``crc32`` covers its little-endian f32 payload, so
     receivers verify integrity per chunk instead of per model.  Chunks are
     numpy views of ``params`` — peak memory is one chunk regardless of
-    model size.
+    model size, and ``to_cbor_segments`` puts the view on the wire without
+    copying it.
     """
     if chunk_elems <= 0:
         raise ValueError("chunk_elems must be positive")
@@ -103,6 +106,12 @@ class ChunkAssembler:
                 f"chunk index {msg.chunk_index} out of range "
                 f"for {msg.num_chunks} chunks")
         part = np.ascontiguousarray(msg.params, dtype="<f4")
+        if np.may_share_memory(part, msg.params):
+            # the receiver owns what it buffers: an already-<f4-contiguous
+            # chunk is a view of the *sender's* live vector (zero-copy fan
+            # out), so this copy is the receive-side buffer — the one copy
+            # the wire hop costs (docs/zero_copy_pipeline.md).
+            part = part.copy()
         if zlib.crc32(memoryview(part).cast("B")) != msg.crc32:
             raise ValueError(
                 f"chunk {msg.chunk_index}/{msg.num_chunks}: CRC mismatch")
@@ -212,10 +221,16 @@ def run_selective_repeat(
     if not chunks:
         raise ValueError("empty chunk stream")
     mid, rnd, n = chunks[0].model_id, chunks[0].round, chunks[0].num_chunks
-    wires = [c.to_cbor() for c in chunks]
+    # Scatter-gather wire forms: each chunk is small owned header segments
+    # plus a *borrowed* view of the live parameter slice.  Peak memory for
+    # the whole transfer — repair windows included — is the model plus
+    # O(headers), not the model plus a full encoded copy.
+    wires = [ScatterPayload(c.to_cbor_segments()) for c in chunks]
     if validate:
         for w in wires:
-            _validate(w, "FL_Model_Chunk")
+            # the one transient join per chunk: the decode side of the
+            # validator needs contiguous bytes, discarded immediately.
+            _validate(w.tobytes(), "FL_Model_Chunk")
     report = ChunkTransferReport(
         num_chunks=n, initial_payload_bytes=sum(len(w) for w in wires))
 
@@ -235,7 +250,10 @@ def run_selective_repeat(
             report.chunk_sends += len(to_send)
             report.payload_bytes += delivery.stats.payload_bytes
             for i in sorted(set().union(*delivery.delivered)):
-                msg = FLModelChunk.from_cbor(wires[i])  # decode once, fan out
+                # fan out the sender-side message object: the wire bytes
+                # were already validated against it, and the assembler
+                # CRC-checks every chunk, so no per-delivery decode copy.
+                msg = chunks[i]
                 for ridx, rcv in enumerate(receivers):
                     if i in delivery.delivered[ridx]:
                         rcv.receive_chunk(msg)
@@ -265,7 +283,7 @@ def run_selective_repeat(
             if is_ack:
                 acked.add(ridx)
             else:
-                back = FLChunkNack.from_cbor(payload)
+                back = FLChunkNack.from_cbor(payload, expect_num_chunks=n)
                 missing_union |= set(back.missing)
         to_send = sorted(missing_union)
         window += 1

@@ -21,7 +21,7 @@ from repro.fl.chunking import ChunkTransferReport, run_selective_repeat
 from repro.fl.client import FLClient
 from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
 from repro.transport.coap import Code, TransferStats
-from repro.transport.network import LossyLink
+from repro.transport.network import LossyLink, as_wire_payload
 
 
 @dataclass
@@ -69,15 +69,28 @@ class FLSimulation:
 
     # -- wire helpers (validate every message against its CDDL schema) -------
 
-    def _send(self, payload: bytes, mtype: str, uri: str,
-              code: Code) -> bytes | None:
-        """Validate against CDDL, push over the lossy link.  Returns None if
-        the transfer failed after max retransmissions (treated upstream as a
-        dropout — the FL round continues without this message)."""
-        cddl.validate(fastpath.decode(payload), cddl.SCHEMAS[mtype])
+    def _send(self, payload, mtype: str, uri: str, code: Code, *,
+              wire: bytes | None = None) -> bytes | None:
+        """Validate against CDDL, push over the lossy link.
+
+        ``payload`` is contiguous bytes or a vectored segment list /
+        ``ScatterPayload`` from ``to_cbor_segments`` — the link counts and
+        frames segments without joining them; the single join below *is*
+        the receiver's buffer (the one copy the wire hop costs), returned
+        for ``from_cbor``.  Multi-send loops (unicast dissemination) pass
+        the already-joined-and-validated ``wire`` so the join and the
+        validation decode happen once per message, not once per send.
+        Returns None if the transfer failed after max retransmissions
+        (treated upstream as a dropout — the FL round continues without
+        this message)."""
+        payload = as_wire_payload(payload)
+        if wire is None:
+            wire = payload.tobytes() \
+                if isinstance(payload, fastpath.ScatterPayload) else payload
+            cddl.validate(fastpath.decode(wire), cddl.SCHEMAS[mtype])
         stats = self.link.send_payload(payload, uri=uri, code=code)
         self.accounting.record(mtype, stats)
-        return None if stats.failed_messages else payload
+        return None if stats.failed_messages else wire
 
     def _disseminate_chunked(self, receivers: list[int]) -> list[int]:
         """Stream the global model as FL_Model_Chunk messages with
@@ -137,17 +150,23 @@ class FLSimulation:
             receivers = self._disseminate_chunked(selected)
         else:
             msg = server.global_update_message()
-            payload = msg.to_cbor(enc)
+            # vectored wire form: the params payload crosses the link as a
+            # borrowed view of the live global vector (zero encode copies);
+            # joined and validated once, however many unicast sends follow
+            payload = fastpath.ScatterPayload(msg.to_cbor_segments(enc))
+            wire = payload.tobytes()
+            cddl.validate(fastpath.decode(wire),
+                          cddl.SCHEMAS["FL_Global_Model_Update"])
             sends = 1 if self.multicast_global else len(selected)
             delivered_global = True
             for _ in range(sends):
                 if self._send(payload, "FL_Global_Model_Update", "fl/model",
-                              Code.POST) is None:
+                              Code.POST, wire=wire) is None:
                     delivered_global = False
             receivers = selected if delivered_global else []
             for cid in receivers:
                 self.clients[cid].handle_global_model(
-                    FLGlobalModelUpdate.from_cbor(payload))
+                    FLGlobalModelUpdate.from_cbor(wire))
 
         # (2) local training + observe notifications
         reporters, dropped, stopped = [], [], []
@@ -158,7 +177,7 @@ class FLSimulation:
                 dropped.append(cid)       # node failure this round
                 continue
             upd = client.train_locally()
-            wire = self._send(upd.to_cbor(), "FL_Local_DataSet_Update",
+            wire = self._send(upd.to_cbor_segments(), "FL_Local_DataSet_Update",
                               "fl/progress", Code.CONTENT)
             if wire is None:
                 dropped.append(cid)       # report lost on the link
@@ -210,9 +229,9 @@ class FLSimulation:
                         params=flat.astype(np.float64), metadata=meta)
                     sizes[cid] = self.clients[cid].dataset_size()
                     continue
-                raw = self.clients[cid].local_model_update().to_cbor(enc)
-                raw = self._send(raw, "FL_Local_Model_Update", "fl/model",
-                                 Code.CONTENT)
+                raw = self._send(
+                    self.clients[cid].local_model_update().to_cbor_segments(enc),
+                    "FL_Local_Model_Update", "fl/model", Code.CONTENT)
                 if raw is None:
                     dropped.append(cid)   # model transfer lost
                     continue

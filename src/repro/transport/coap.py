@@ -133,24 +133,37 @@ def szx_for(block_size: int) -> int:
     return int(math.log2(block_size)) - 4
 
 
-def blockwise_messages(payload: bytes, *, uri: str, code: Code = Code.POST,
-                       block_size: int = COAP_MAX_PAYLOAD,
-                       mid0: int = 0, token: bytes = b"\x01") -> list[CoapMessage]:
-    """Split a payload into Block1 CoAP messages, each fitting the MTU."""
+def iter_blockwise_messages(payload, *, uri: str, code: Code = Code.POST,
+                            block_size: int = COAP_MAX_PAYLOAD,
+                            mid0: int = 0, token: bytes = b"\x01"):
+    """Lazily split a payload into Block1 CoAP messages fitting the MTU.
+
+    ``payload`` is anything with ``len()`` and contiguous slicing —
+    ``bytes``, a buffer, or a ``ScatterPayload`` over vectored segments.
+    One block exists at a time: a multi-MB vectored payload is sliced
+    ≤``block_size`` per step and never joined, so the wire path costs
+    O(block) transient memory."""
     szx = szx_for(block_size)
     path_opts = [(Option.URI_PATH, seg.encode())
                  for seg in uri.strip("/").split("/")]
     fmt_opt = (Option.CONTENT_FORMAT, bytes([CONTENT_CBOR]))
     n_blocks = max(1, math.ceil(len(payload) / block_size))
-    msgs = []
     for i in range(n_blocks):
         chunk = payload[i * block_size:(i + 1) * block_size]
         more = i < n_blocks - 1
         opts = list(path_opts) + [fmt_opt]
         if n_blocks > 1:
             opts.append((Option.BLOCK1, block_option_value(i, more, szx)))
-        msgs.append(CoapMessage(Type.CON, code, mid0 + i, token, opts, chunk))
-    return msgs
+        yield CoapMessage(Type.CON, code, mid0 + i, token, opts, chunk)
+
+
+def blockwise_messages(payload, *, uri: str, code: Code = Code.POST,
+                       block_size: int = COAP_MAX_PAYLOAD,
+                       mid0: int = 0, token: bytes = b"\x01") -> list[CoapMessage]:
+    """Eager form of ``iter_blockwise_messages`` (materializes the list)."""
+    return list(iter_blockwise_messages(payload, uri=uri, code=code,
+                                        block_size=block_size, mid0=mid0,
+                                        token=token))
 
 
 @dataclass

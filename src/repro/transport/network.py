@@ -24,12 +24,13 @@ from typing import Callable, Iterable, Sequence
 
 import numpy as np
 
+from repro.core.fastpath import ScatterPayload
 from repro.transport.coap import (
     IEEE802154_MTU,
     LOWPAN_OVERHEAD,
     Code,
     TransferStats,
-    blockwise_messages,
+    iter_blockwise_messages,
 )
 
 LINK_BPS = 250_000
@@ -37,6 +38,16 @@ MAX_RETRANSMIT = 4
 
 # Test hook signature: (uri, window, chunk_index, receiver) -> drop whole chunk?
 ChunkDropFn = Callable[[str, int, int, int], bool]
+
+
+def as_wire_payload(payload):
+    """Normalize a payload for the link: bytes and buffers pass through; a
+    vectored segment list (``encode_vectored`` output) is wrapped in a
+    ``ScatterPayload`` so byte counting and blockwise framing work without
+    ever joining the segments."""
+    if isinstance(payload, (list, tuple)):
+        return ScatterPayload(payload)
+    return payload
 
 
 @dataclass
@@ -61,15 +72,20 @@ class LossyLink:
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
 
-    def send_payload(self, payload: bytes, *, uri: str,
+    def send_payload(self, payload, *, uri: str,
                      code: Code = Code.POST) -> TransferStats:
         """Blockwise transfer with per-frame ack + retransmission.
 
-        A frame still lost after MAX_RETRANSMIT marks the whole payload
-        undelivered (``failed_messages`` = 1); the FL layer treats that as a
-        client dropout for the round — no exception, training continues."""
+        ``payload`` is ``bytes``, any buffer, or a vectored segment list /
+        ``ScatterPayload`` — the scatter-gather forms are framed by slicing
+        ≤64 B blocks out of the segment chain, so a multi-MB vectored
+        message is never joined.  A frame still lost after MAX_RETRANSMIT
+        marks the whole payload undelivered (``failed_messages`` = 1); the
+        FL layer treats that as a client dropout for the round — no
+        exception, training continues."""
+        payload = as_wire_payload(payload)
         stats = TransferStats(messages=1, payload_bytes=len(payload))
-        for msg in blockwise_messages(payload, uri=uri, code=code):
+        for msg in iter_blockwise_messages(payload, uri=uri, code=code):
             wire = len(msg.encode())
             frame = wire + LOWPAN_OVERHEAD
             assert frame <= IEEE802154_MTU, frame
@@ -88,13 +104,14 @@ class LossyLink:
                 stats.retransmissions += 1
         return stats
 
-    def send_stream(self, payloads: Iterable[bytes], *, uri: str,
+    def send_stream(self, payloads: Iterable, *, uri: str,
                     code: Code = Code.POST,
                     stop_on_failure: bool = True) -> TransferStats:
         """Send a stream of application payloads (e.g. FL model chunks).
 
-        Payloads may be ``bytes`` or any buffer (``memoryview`` slices from
-        the zero-copy encoder are sent without conversion).  Aggregated
+        Payloads may be ``bytes``, any buffer, or vectored segment lists
+        (``memoryview`` slices and scatter-gather output from the zero-copy
+        encoder are sent without conversion or joining).  Aggregated
         ``TransferStats`` across the stream; with ``stop_on_failure`` the
         stream aborts at the first undeliverable payload — the receiver
         cannot assemble a model with a hole in it, so the remaining chunks
@@ -133,6 +150,7 @@ class LossyLink:
         for delivery decisions (frames are still counted once for byte
         accounting), making chunk loss exactly reproducible in tests.
         """
+        payloads = [as_wire_payload(p) for p in payloads]
         if indices is None:
             indices = range(len(payloads))
         delivered: list[set[int]] = [set() for _ in range(num_receivers)]
@@ -159,7 +177,7 @@ class LossyLink:
                            code: Code) -> TransferStats:
         """Byte/frame accounting for a payload framed once (no retries)."""
         stats = TransferStats(messages=1, payload_bytes=len(payload))
-        for msg in blockwise_messages(payload, uri=uri, code=code):
+        for msg in iter_blockwise_messages(payload, uri=uri, code=code):
             wire = len(msg.encode())
             assert wire + LOWPAN_OVERHEAD <= IEEE802154_MTU
             stats.blocks += 1

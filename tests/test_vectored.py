@@ -1,0 +1,435 @@
+"""Scatter-gather (vectored) encode pipeline tests.
+
+Differential guarantees: ``b"".join(encode_vectored(x))`` must equal the
+oracle encoding byte-exactly for every message type and every random value
+the contiguous fast path accepts; ``ScatterPayload`` must behave like the
+joined bytes under len/indexing/slicing; borrowed segments must alias
+their source buffers (the zero-copy property itself); and the wire /
+checkpoint layers must accept vectored payloads end to end.
+"""
+import io
+import tracemalloc
+import uuid
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import cbor, cddl, fastpath
+from repro.core.cbor import Tag
+from repro.core.fastpath import ScatterPayload
+from repro.core.messages import (
+    FLChunkAck,
+    FLChunkNack,
+    FLGlobalModelUpdate,
+    FLLocalDataSetUpdate,
+    FLLocalModelUpdate,
+    FLModelChunk,
+    ModelMetadata,
+    ParamsEncoding,
+    missing_to_ranges,
+    ranges_to_missing,
+)
+from repro.fl.chunking import AssemblerReceiver, chunk_stream, run_selective_repeat
+from repro.transport.coap import Code
+from repro.transport.network import LossyLink, as_wire_payload
+
+from test_fastpath import _random_value
+
+MID = uuid.UUID(bytes=bytes(range(16)))
+
+
+# -- differential: joined segments == oracle bytes -----------------------------
+
+
+def test_vectored_differential_fuzz():
+    rng = np.random.default_rng(4321)
+    for _ in range(300):
+        value = _random_value(rng)
+        oracle = cbor.encode(value)
+        assert b"".join(fastpath.encode_vectored(value)) == oracle, value
+
+
+def test_vectored_differential_all_message_types_all_encodings():
+    rng = np.random.default_rng(7)
+    params = rng.standard_normal(257).astype(np.float32)
+    g = FLGlobalModelUpdate(MID, 5, params, True)
+    l = FLLocalModelUpdate(MID, 5, params, ModelMetadata(0.5, 0.25))
+    d = FLLocalDataSetUpdate(640, ModelMetadata(0.5, 0.25))
+    c = FLModelChunk(MID, 5, 1, 3, 0xDEADBEEF, params)
+    encodings = [ParamsEncoding.TA_F16, ParamsEncoding.TA_F32,
+                 ParamsEncoding.TA_F64, ParamsEncoding.TA_BF16,
+                 ParamsEncoding.Q8, ParamsEncoding.DYNAMIC]
+    for enc in encodings:
+        for m in (g, l, c):
+            assert b"".join(m.to_cbor_segments(enc)) == \
+                m.to_cbor(enc, fast=False), (type(m).__name__, enc)
+    assert b"".join(d.to_cbor_segments()) == d.to_cbor(fast=False)
+    assert b"".join(d.to_cbor_segments(worst=True)) == \
+        d.to_cbor(worst=True, fast=False)
+    assert b"".join(g.to_cbor_segments(ParamsEncoding.ARRAY_F64, worst=True)) \
+        == g.to_cbor(ParamsEncoding.ARRAY_F64, worst=True, fast=False)
+    nack = FLChunkNack(MID, 3, 64, (1, 2, 3, 9))
+    ack = FLChunkAck(MID, 3, 64)
+    assert b"".join(nack.to_cbor_segments()) == nack.to_cbor(fast=False)
+    assert b"".join(ack.to_cbor_segments()) == ack.to_cbor(fast=False)
+
+
+def test_vectored_kernel_payload_splice():
+    """Pallas kernel output -> message with zero intermediate bytes."""
+    import jax.numpy as jnp
+    from repro.kernels.quantize_f16.ops import (
+        params_to_f16_payload,
+        params_to_f16_payload_into,
+        params_to_f16_view,
+    )
+
+    flat = np.random.default_rng(0).standard_normal(2048).astype(np.float32)
+    jflat = jnp.asarray(flat)
+    msg = FLGlobalModelUpdate(MID, 1, flat, True)
+    view = params_to_f16_view(jflat)
+    owned = params_to_f16_payload(jflat)
+    assert bytes(view) == owned
+    assert b"".join(msg.to_cbor_segments(ParamsEncoding.TA_F16,
+                                         params_payload=view)) == \
+        msg.to_cbor(ParamsEncoding.TA_F16, params_payload=owned, fast=False)
+    # *_into: same payload, caller-owned memory
+    buf = bytearray(len(owned) + 8)
+    n = params_to_f16_payload_into(jflat, buf)
+    assert n == len(owned) and bytes(buf[:n]) == owned
+    with pytest.raises(ValueError):
+        params_to_f16_payload_into(jflat, bytearray(3))
+
+
+def test_vectored_q8_kernel_wire_item():
+    import jax.numpy as jnp
+    from repro.core.params_codec import decode_q8
+    from repro.kernels.q8_block.ops import (
+        BLOCK,
+        compress_update,
+        compress_update_into,
+        q8_wire_item,
+    )
+
+    n = 1000
+    flat = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    jflat = jnp.asarray(flat)
+    item = q8_wire_item(jflat)
+    wire = b"".join(fastpath.encode_vectored(item))
+    out = decode_q8(fastpath.decode(wire))
+    q, scales, err = compress_update(jflat)
+    np.testing.assert_allclose(out, np.asarray(flat) - np.asarray(err),
+                               rtol=1e-6, atol=1e-6)
+    # compress_update_into writes the padded wire layout into caller buffers
+    nblocks = -(-n // BLOCK)
+    qb, sb = bytearray(nblocks * BLOCK), bytearray(nblocks * 4)
+    qn, sn = compress_update_into(jflat, qb, sb)
+    assert (qn, sn) == (nblocks * BLOCK, nblocks * 4)
+    np.testing.assert_array_equal(np.frombuffer(qb, np.int8)[:n],
+                                  np.asarray(q))
+    np.testing.assert_array_equal(np.frombuffer(sb, "<f4"),
+                                  np.asarray(scales))
+
+
+# -- the zero-copy property itself ---------------------------------------------
+
+
+def test_payload_segments_borrow_source_buffers():
+    arr = np.arange(100_000, dtype=np.float32)
+    segs = fastpath.encode_vectored(arr)
+    assert len(segs) == 2                       # heads + borrowed payload
+    assert all(isinstance(s, memoryview) and s.readonly for s in segs)
+    assert np.shares_memory(np.frombuffer(segs[1], np.float32), arr)
+    # message-level: the params payload aliases the live vector
+    msg = FLGlobalModelUpdate(MID, 1, arr, True)
+    segs = msg.to_cbor_segments(ParamsEncoding.TA_F32)
+    payload = max(segs, key=lambda s: s.nbytes)
+    assert np.shares_memory(np.frombuffer(payload, np.float32), arr)
+
+
+def test_small_payloads_coalesce_into_scratch():
+    # sub-threshold payloads ride in the owned header segment: one segment
+    segs = fastpath.encode_vectored([1, b"tiny", "abc", 2.5])
+    assert len(segs) == 1
+
+
+def test_vectored_encode_peak_alloc_is_headers_only():
+    flat = np.zeros(1_000_000, np.float32)
+    msg = FLGlobalModelUpdate(MID, 1, flat, True)
+    msg.to_cbor_segments(ParamsEncoding.TA_F32)   # warm caches
+    tracemalloc.start()
+    msg.to_cbor_segments(ParamsEncoding.TA_F32)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak <= 64 * 1024, f"vectored encode allocated {peak} bytes"
+
+
+# -- ScatterPayload semantics --------------------------------------------------
+
+
+def test_scatter_payload_matches_joined_bytes():
+    rng = np.random.default_rng(17)
+    value = [rng.bytes(700), 1, "x" * 600, np.arange(333, dtype=np.int16),
+             {"k": rng.bytes(5)}]
+    ref = fastpath.encode(value)
+    sp = ScatterPayload(fastpath.encode_vectored(value))
+    assert len(sp) == len(ref)
+    assert sp.tobytes() == ref
+    assert bytes(fastpath.vectored_bytes(fastpath.encode_vectored(value))) \
+        == ref
+    assert fastpath.vectored_nbytes(fastpath.encode_vectored(value)) == \
+        len(ref)
+    for start, stop in [(0, 0), (0, 1), (0, 64), (3, 77), (699, 705),
+                        (len(ref) - 5, len(ref) + 10), (0, len(ref))]:
+        assert sp[start:stop] == ref[start:stop], (start, stop)
+    for i in (0, 1, 699, 700, len(ref) - 1, -1):
+        assert sp[i] == ref[i], i
+    with pytest.raises(IndexError):
+        sp[len(ref)]
+    with pytest.raises(ValueError):
+        sp[0:10:2]
+
+
+def test_scatter_payload_blockwise_framing_without_join():
+    """The CoAP framer slices a ScatterPayload in ≤64 B blocks; frame
+    accounting must equal the contiguous-bytes framing exactly."""
+    from repro.transport.coap import blockwise_messages
+
+    value = [np.arange(5000, dtype=np.float32), b"z" * 1000]
+    ref = fastpath.encode(value)
+    sp = ScatterPayload(fastpath.encode_vectored(value))
+    msgs_ref = blockwise_messages(ref, uri="fl/model")
+    msgs_sp = blockwise_messages(sp, uri="fl/model")
+    assert len(msgs_ref) == len(msgs_sp)
+    for a, b in zip(msgs_ref, msgs_sp):
+        assert a.encode() == b.encode()
+
+
+def test_link_accepts_vectored_payloads():
+    value = [np.arange(2000, dtype=np.float32)]
+    ref = fastpath.encode(value)
+    segs = fastpath.encode_vectored(value)
+    link_a = LossyLink(drop_prob=0.2, seed=42)
+    link_b = LossyLink(drop_prob=0.2, seed=42)
+    sa = link_a.send_payload(ref, uri="fl/model")
+    sb = link_b.send_payload(segs, uri="fl/model")   # raw segment list
+    assert vars(sa) == vars(sb)
+    assert as_wire_payload(segs).tobytes() == ref
+    stream = LossyLink(drop_prob=0.0).send_stream(
+        [segs, ScatterPayload(segs), ref], uri="fl/model")
+    assert stream.payload_bytes == 3 * len(ref)
+
+
+def test_selective_repeat_over_vectored_wires():
+    """End-to-end: chunk stream -> vectored wires -> link -> reassembly,
+    byte-identical under loss, with repair accounting intact."""
+    params = np.random.default_rng(5).standard_normal(20_000).astype(
+        np.float32)
+    chunks = list(chunk_stream(MID, 1, params, 1024))
+
+    def drop(uri, window, index, receiver):
+        return window == 0 and index in (3, 7)
+
+    link = LossyLink(drop_prob=0.0, seed=1, chunk_drop=drop)
+    receivers = [AssemblerReceiver()]
+    report = run_selective_repeat(
+        link, chunks, receivers, uri="fl/model/chunk",
+        feedback_uri="fl/model/chunk/fb", multicast=True)
+    assert report.completed == [0]
+    assert receivers[0].assembled.tobytes() == params.tobytes()
+    assert report.retransmitted_chunks == 2
+    assert report.retransmitted_payload_bytes == \
+        len(chunks[3].to_cbor()) + len(chunks[7].to_cbor())
+
+
+def test_sequence_writer_segments_file_and_buffer_sinks(tmp_path):
+    value = {"h": 1}
+    arr = np.arange(4096, dtype=np.float64)
+    segs = fastpath.encode_vectored(value) + fastpath.encode_vectored(arr)
+    ref = b"".join(segs)
+    # real file: os.writev gather path
+    p = tmp_path / "seq.cbor"
+    with open(p, "wb") as f:
+        w = fastpath.CBORSequenceWriter(f)
+        assert w.write_segments(segs) == len(ref)
+        assert w.bytes_written == len(ref)
+    assert p.read_bytes() == ref
+    # BytesIO: sequential fallback
+    sink = io.BytesIO()
+    fastpath.CBORSequenceWriter(sink).write_segments(segs)
+    assert sink.getvalue() == ref
+
+
+# -- compact NACK ranges -------------------------------------------------------
+
+
+def test_missing_ranges_roundtrip_and_compression():
+    cases = [
+        ((0,), [0, 1]),
+        ((3, 4, 5), [3, 3]),
+        ((1, 3, 5), [1, 1, 3, 1, 5, 1]),
+        (tuple(range(100, 600)), [100, 500]),
+        ((7, 7, 7, 8), [7, 2]),               # duplicates collapse
+    ]
+    for missing, ranges in cases:
+        assert missing_to_ranges(missing) == ranges
+        assert ranges_to_missing(ranges) == \
+            tuple(sorted(set(int(i) for i in missing)))
+
+
+def test_nack_wire_is_range_pairs_and_shrinks_bursty_losses():
+    burst = FLChunkNack(MID, 2, 4096, tuple(range(1000, 1512)))
+    wire = burst.to_cbor()
+    # 512 missing indices travel as one (start, count) pair
+    item = fastpath.decode(wire)
+    assert item[3] == [1000, 512]
+    assert len(wire) < 40
+    cddl.validate(item, cddl.SCHEMAS["FL_Chunk_Nack"])
+    assert FLChunkNack.from_cbor(wire) == burst
+    # scattered losses still roundtrip exactly
+    sparse = FLChunkNack(MID, 2, 4096, (5, 100, 101, 4000))
+    assert FLChunkNack.from_cbor(sparse.to_cbor()) == sparse
+    cddl.validate(fastpath.decode(sparse.to_cbor()),
+                  cddl.SCHEMAS["FL_Chunk_Nack"])
+
+
+def test_nack_rejects_malformed_ranges():
+    good = FLChunkNack(MID, 1, 16, (2, 3)).to_cbor()
+    item = fastpath.decode(good)
+    # odd-length pair list
+    bad = fastpath.encode([item[0], item[1], item[2], [2, 1, 5]])
+    with pytest.raises(ValueError):
+        FLChunkNack.from_cbor(bad)
+    # zero-count range
+    bad = fastpath.encode([item[0], item[1], item[2], [2, 0]])
+    with pytest.raises(ValueError):
+        FLChunkNack.from_cbor(bad)
+    # empty pair list
+    bad = fastpath.encode([item[0], item[1], item[2], []])
+    with pytest.raises(ValueError):
+        FLChunkNack.from_cbor(bad)
+    with pytest.raises(Exception):
+        cddl.validate(fastpath.decode(bad), cddl.SCHEMAS["FL_Chunk_Nack"])
+
+
+def test_nack_range_expansion_is_bounded_by_num_chunks():
+    """A hostile ~30-byte NACK must not materialize a multi-GB index tuple:
+    ranges beyond num-chunks are rejected before expansion, and a claimed
+    num-chunks is itself untrusted — the decode caps it unless the caller
+    vouches for the generation size."""
+    from repro.core.messages import MAX_NACK_CHUNKS
+
+    item = fastpath.decode(FLChunkNack(MID, 1, 16, (2,)).to_cbor())
+    for evil in ([0, 10_000_000], [15, 2], [16, 1]):
+        wire = fastpath.encode([item[0], item[1], item[2], evil])
+        with pytest.raises(ValueError, match="exceeds num-chunks"):
+            FLChunkNack.from_cbor(wire, expect_num_chunks=16)
+    # num-chunks comes from the same untrusted wire: a self-consistent
+    # huge claim is rejected by the cap (no expansion)...
+    huge = fastpath.encode([item[0], item[1], 2**40, [0, 2**40]])
+    with pytest.raises(ValueError, match="MAX_NACK_CHUNKS"):
+        FLChunkNack.from_cbor(huge)
+    big = fastpath.encode([item[0], item[1], MAX_NACK_CHUNKS + 1,
+                           [0, MAX_NACK_CHUNKS + 1]])
+    with pytest.raises(ValueError, match="MAX_NACK_CHUNKS"):
+        FLChunkNack.from_cbor(big)
+    # ...and by the generation-size mismatch when the caller knows it
+    with pytest.raises(ValueError, match="!= this generation"):
+        FLChunkNack.from_cbor(huge, expect_num_chunks=16)
+    # overlapping / unsorted pairs would defeat the bound (repeat one
+    # in-range pair to inflate the expansion) — rejected before expanding
+    for evil in ([0, 16, 0, 16], [4, 4, 2, 4], [8, 2, 0, 2]):
+        wire = fastpath.encode([item[0], item[1], item[2], evil])
+        with pytest.raises(ValueError, match="non-overlapping"):
+            FLChunkNack.from_cbor(wire, expect_num_chunks=16)
+    # the full in-range set is still fine
+    full = fastpath.encode([item[0], item[1], item[2], [0, 16]])
+    assert FLChunkNack.from_cbor(full).missing == tuple(range(16))
+    assert FLChunkNack.from_cbor(full, expect_num_chunks=16).num_chunks == 16
+
+
+def test_contiguous_and_vectored_agree_on_multidim_payload_views():
+    """A 2-D byte view as params_payload must encode identically through
+    the contiguous, vectored and oracle paths (byte length, not rows)."""
+    view = memoryview(np.arange(2048, dtype=np.uint8).reshape(2, 1024))
+    msg = FLGlobalModelUpdate(MID, 1, np.zeros(1024, np.float16), True)
+    contiguous = msg.to_cbor(ParamsEncoding.TA_F16, params_payload=view)
+    assert contiguous == b"".join(
+        msg.to_cbor_segments(ParamsEncoding.TA_F16, params_payload=view))
+    assert contiguous == msg.to_cbor(ParamsEncoding.TA_F16,
+                                     params_payload=view, fast=False)
+
+
+def test_assembler_buffers_are_owned_not_sender_aliases():
+    """Receivers must own what they buffer: mutating the sender's live
+    vector mid-transfer cannot corrupt buffered (or assembled) chunks."""
+    params = np.arange(4096, dtype="<f4")
+    chunks = list(chunk_stream(MID, 1, params, 1024))
+    from repro.fl.chunking import ChunkAssembler
+    asm = ChunkAssembler()
+    asm.add(chunks[0])
+    params[:] = -1.0   # sender mutates after partial delivery
+    assert not np.may_share_memory(asm._parts[0], params)
+    np.testing.assert_array_equal(asm._parts[0],
+                                  np.arange(1024, dtype="<f4"))
+
+
+def test_write_segments_beyond_iov_max(tmp_path):
+    """More segments than the kernel's IOV_MAX must still write whole."""
+    piece = bytes(range(256)) * 3   # 768 B, above BORROW_MIN -> borrowed
+    value = [piece] * 3000          # ~3001 segments
+    ref = fastpath.encode(value)
+    p = tmp_path / "many.cbor"
+    with open(p, "wb") as f:
+        w = fastpath.CBORSequenceWriter(f)
+        segs = fastpath.encode_vectored(value)
+        assert len(segs) > 1024
+        assert w.write_segments(segs) == len(ref)
+    assert p.read_bytes() == ref
+
+
+# -- hypothesis property (optional dev dep) ------------------------------------
+
+
+try:
+    import hypothesis
+except ImportError:
+    hypothesis = None
+
+if hypothesis is not None:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    _scalars = st.one_of(
+        st.integers(min_value=-2**63, max_value=2**64 - 1),
+        st.floats(allow_nan=False),
+        st.booleans(), st.none(), st.binary(max_size=2048),
+        st.text(max_size=64),
+    )
+    _values = st.recursive(
+        _scalars,
+        lambda children: st.one_of(
+            st.lists(children, max_size=6),
+            st.dictionaries(st.integers(0, 1000), children, max_size=6),
+            st.builds(Tag, st.integers(0, 2**32), children),
+        ),
+        max_leaves=25,
+    )
+
+    @settings(deadline=None, max_examples=150)
+    @given(_values)
+    def test_property_vectored_matches_oracle_and_roundtrips(value):
+        oracle = cbor.encode(value)
+        segs = fastpath.encode_vectored(value)
+        assert b"".join(segs) == oracle
+        sp = ScatterPayload(segs)
+        assert len(sp) == len(oracle) and sp.tobytes() == oracle
+        assert cbor.decode(sp.tobytes()) == cbor.decode(oracle)
+
+    @settings(deadline=None, max_examples=100)
+    @given(st.lists(st.integers(0, 10_000), min_size=1, max_size=200))
+    def test_property_nack_ranges_roundtrip(indices):
+        canonical = tuple(sorted(set(indices)))
+        assert ranges_to_missing(missing_to_ranges(indices)) == canonical
+        nack = FLChunkNack(MID, 1, 10_001, tuple(indices))
+        assert FLChunkNack.from_cbor(nack.to_cbor()).missing == canonical
