@@ -19,7 +19,8 @@ if str(_REPO) not in sys.path:   # `python benchmarks/run.py` from anywhere
     sys.path.insert(0, str(_REPO))
 
 BENCH_JSON = _REPO / "BENCH_codec.json"
-DECODE_PATHS = ("decode_fastpath_f32", "decode_seed_f32")
+DECODE_PATHS = ("decode_fastpath_f32", "decode_segments_f32",
+                "decode_ring_f32", "decode_seed_f32")
 ENCODE_PATHS = ("encode_vectored_f32", "numpy_ta_f32")
 REGRESSION_FACTOR = 2.0
 

@@ -135,10 +135,26 @@ def restore_checkpoint(path: str | Path, tree_like: Any, *,
     else:
         with open(Path(path), "rb") as f:
             buf = _map_or_read(f, use_mmap)
-        # an mmap stays valid after its file is closed; all views of it
-        # are transient inside this call (every restored leaf is an owned
-        # copy), so the map is reclaimed when `buf` goes out of scope.
-    return _restore_from_buffer(buf, tree_like)
+        # an mmap stays valid after its file is closed
+    try:
+        result = _restore_from_buffer(buf, tree_like)
+    except BaseException:
+        if isinstance(buf, mmap.mmap):
+            # a propagating exception's traceback still pins decode views
+            # of the map in its frame locals: a strict close would raise
+            # BufferError and mask the real error, so close leniently and
+            # let the refcount reclaim the map with the traceback.
+            try:
+                buf.close()
+            except BufferError:
+                pass
+        raise
+    # success: every restored leaf is an owned copy by now, so the map —
+    # and the file descriptor it holds — is released deterministically
+    # here instead of whenever GC gets to it.
+    if isinstance(buf, mmap.mmap):
+        buf.close()
+    return result
 
 
 def _restore_from_buffer(data, tree_like: Any) -> tuple[Any, dict]:

@@ -24,6 +24,14 @@ Why it is fast:
     ``memoryview``.  Definite-length byte strings decode to views, so a
     4 MB typed-array payload costs zero copies — ``np.frombuffer`` on the
     view yields the parameter vector directly.
+  * **Segmented decoding** is the receive-side mirror of vectored
+    encoding: ``decode`` / ``decode_prefix`` accept a ``ScatterPayload``,
+    a CoAP block receive ring, or a raw segment list and walk the chain
+    with a cursor (``_SegmentSource``) — the segments are never joined.
+    A read that lands inside one segment (the common case: a typed-array
+    payload that arrived contiguous) comes back as a *borrowed* zero-copy
+    view of that segment; only reads that cross a segment boundary gather
+    exactly those bytes into a small owned buffer.
   * **Sequences** (RFC 8742, the checkpoint file format) are read with a
     cursor (``CBORSequenceReader``) instead of re-slicing the remaining tail
     per item, turning checkpoint restore from O(n²) into O(n); written with
@@ -95,6 +103,7 @@ __all__ = [
     "vectored_bytes",
     "decode",
     "decode_prefix",
+    "decode_segments",
     "CBORSequenceReader",
     "CBORSequenceWriter",
 ]
@@ -526,17 +535,18 @@ class ScatterPayload:
             raise ValueError("ScatterPayload slices must be contiguous")
         if start >= stop:
             return b""
-        out = bytearray(stop - start)
+        n = stop - start
+        parts = []
         pos = 0
         i = bisect_right(self._starts, start) - 1
-        while pos < len(out):
+        while pos < n:
             seg = self._segments[i]
             lo = start + pos - self._starts[i]
-            take = min(seg.nbytes - lo, len(out) - pos)
-            out[pos : pos + take] = seg[lo : lo + take]
+            take = min(seg.nbytes - lo, n - pos)
+            parts.append(seg[lo : lo + take])
             pos += take
             i += 1
-        return bytes(out)
+        return parts[0].tobytes() if len(parts) == 1 else b"".join(parts)
 
     def tobytes(self) -> bytes:
         return b"".join(self._segments)
@@ -584,6 +594,125 @@ class _BufferSource:
         v = self.mv[self.pos : self.pos + n]
         self.pos += n
         return v
+
+    def remaining(self) -> int:
+        return self.end - self.pos
+
+    def tell(self) -> int:
+        return self.pos
+
+
+class _SegmentSource:
+    """Cursor over a chain of byte segments — the receive-side mirror of
+    ``encode_vectored``.
+
+    The chain (a ``ScatterPayload``, a CoAP block receive ring, or a raw
+    segment list) is never joined: ``view(n)`` returns a zero-copy
+    borrowed slice whenever the ``n`` bytes land inside one segment (the
+    common case — a typed-array payload that arrived contiguous), and
+    gathers exactly the requested bytes into a small owned buffer only
+    when the read crosses a segment boundary.  Peak transient memory is
+    therefore O(largest boundary-crossing item), not O(message).
+    """
+
+    __slots__ = ("segs", "i", "off", "consumed", "total")
+
+    def __init__(self, segments, pos: int = 0) -> None:
+        segs = []
+        for s in segments:
+            v = s if isinstance(s, memoryview) else memoryview(s)
+            if not v.readonly:
+                v = v.toreadonly()  # decoded bstr map keys stay hashable
+            if v.ndim != 1 or v.itemsize != 1:
+                v = v.cast("B")
+            if v.nbytes:
+                segs.append(v)
+        self.segs = segs
+        self.i = 0
+        self.off = 0
+        self.consumed = 0
+        self.total = sum(s.nbytes for s in segs)
+        if pos:
+            self._skip(pos)
+
+    def _skip(self, n: int) -> None:
+        while n:
+            if self.i >= len(self.segs):
+                raise CBORDecodeError("truncated CBOR input")
+            step = min(self.segs[self.i].nbytes - self.off, n)
+            self.off += step
+            self.consumed += step
+            n -= step
+            if self.off == self.segs[self.i].nbytes:
+                self.i += 1
+                self.off = 0
+
+    def byte(self) -> int:
+        if self.i >= len(self.segs):
+            raise CBORDecodeError("truncated CBOR input")
+        seg = self.segs[self.i]
+        b = seg[self.off]
+        self.off += 1
+        self.consumed += 1
+        if self.off == seg.nbytes:
+            self.i += 1
+            self.off = 0
+        return b
+
+    def first_byte(self) -> int | None:
+        if self.i >= len(self.segs):
+            return None
+        return self.byte()
+
+    def view(self, n: int):
+        if n == 0:
+            return b""
+        if self.i < len(self.segs) and \
+                self.segs[self.i].nbytes - self.off >= n:
+            seg = self.segs[self.i]
+            v = seg[self.off : self.off + n]       # borrowed, zero-copy
+            self.off += n
+            self.consumed += n
+            if self.off == seg.nbytes:
+                self.i += 1
+                self.off = 0
+            return v
+        parts = []                                 # boundary-crossing gather
+        pos = 0
+        while pos < n:
+            if self.i >= len(self.segs):
+                raise CBORDecodeError("truncated CBOR input")
+            seg = self.segs[self.i]
+            take = min(seg.nbytes - self.off, n - pos)
+            parts.append(seg[self.off : self.off + take])
+            pos += take
+            self.off += take
+            if self.off == seg.nbytes:
+                self.i += 1
+                self.off = 0
+        self.consumed += n
+        # b"".join copies each gathered slice exactly once into the owned
+        # (hashable) result — no bytearray-then-freeze double copy.
+        return b"".join(parts)
+
+    def remaining(self) -> int:
+        return self.total - self.consumed
+
+    def tell(self) -> int:
+        return self.consumed
+
+
+def _source_for(data, pos: int = 0):
+    """Pick the decode cursor for ``data``: segment chains (raw lists,
+    ``ScatterPayload``, CoAP receive rings — anything with ``segments()``)
+    get the never-joining ``_SegmentSource``; contiguous buffers get
+    ``_BufferSource``."""
+    if isinstance(data, (list, tuple)):
+        return _SegmentSource(data, pos)
+    seg_fn = getattr(data, "segments", None)
+    if seg_fn is not None:
+        return _SegmentSource(seg_fn(), pos)
+    return _BufferSource(data, pos)
 
 
 class _FileSource:
@@ -789,29 +918,47 @@ def _finalize(frame: list) -> Any:
 def decode(data, *, copy: bool = False) -> Any:
     """Decode a single CBOR item; equal to ``cbor.decode`` on valid input.
 
-    Byte strings come back as zero-copy ``memoryview`` slices unless
-    ``copy=True``.  Raises ``CBORDecodeError`` on trailing bytes.
+    ``data`` is a contiguous buffer *or* a segmented source — a
+    ``ScatterPayload``, a CoAP block receive ring, or a raw segment list —
+    decoded in place without joining the segments.  Byte strings come back
+    as zero-copy ``memoryview`` slices unless ``copy=True`` (from a
+    segmented source, a payload that crosses a segment boundary is
+    gathered into owned bytes; one that landed contiguous stays a borrowed
+    view).  Raises ``CBORDecodeError`` on trailing bytes.
     """
-    src = _BufferSource(data)
+    src = _source_for(data)
     item = _decode_item(src, copy=copy)
     if item is BREAK:
         raise CBORDecodeError("unexpected break code")
-    if src.pos != src.end:
-        raise CBORDecodeError(f"{src.end - src.pos} trailing bytes")
+    if src.remaining():
+        raise CBORDecodeError(f"{src.remaining()} trailing bytes")
     return item
+
+
+def decode_segments(segments, *, copy: bool = False) -> Any:
+    """Decode one CBOR item from an iterable of byte segments (explicit
+    entry point for receive rings / vectored payloads; ``decode`` accepts
+    the same inputs)."""
+    if not isinstance(segments, (list, tuple)) \
+            and not hasattr(segments, "segments"):
+        segments = list(segments)
+    return decode(segments, copy=copy)
 
 
 def decode_prefix(data, pos: int = 0, *, copy: bool = False) -> tuple[Any, int]:
     """Decode one item starting at ``pos``; returns (item, next_pos).
 
     Unlike ``cbor.decode_prefix`` this takes an offset instead of a sliced
-    tail, which is what makes O(n) sequence scans possible.
+    tail, which is what makes O(n) sequence scans possible.  Like
+    ``decode`` it accepts contiguous buffers and segmented sources; for a
+    segmented source ``pos``/``next_pos`` are offsets into the logical
+    concatenation (which is never materialized).
     """
-    src = _BufferSource(data, pos)
+    src = _source_for(data, pos)
     item = _decode_item(src, copy=copy)
     if item is BREAK:
         raise CBORDecodeError("unexpected break code")
-    return item, src.pos
+    return item, src.tell()
 
 
 # ---------------------------------------------------------------------------

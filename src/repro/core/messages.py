@@ -265,8 +265,7 @@ class FLGlobalModelUpdate:
                                     worst=worst)
 
     @classmethod
-    def from_cbor(cls, data: bytes) -> "FLGlobalModelUpdate":
-        item = fastpath.decode(data)
+    def _from_item(cls, item: object) -> "FLGlobalModelUpdate":
         _expect_array(item, 4, "FL_Global_Model_Update")
         ident, rnd, params, cont = item
         return cls(
@@ -275,6 +274,16 @@ class FLGlobalModelUpdate:
             params=params_from_cbor(params),
             continue_training=_expect_bool(cont, "fl-continue-training"),
         )
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLGlobalModelUpdate":
+        return cls._from_item(fastpath.decode(data))
+
+    @classmethod
+    def from_cbor_segments(cls, segments) -> "FLGlobalModelUpdate":
+        """Decode from a segmented receive buffer (``BlockReceiveRing``,
+        ``ScatterPayload`` or raw segment list) without joining it."""
+        return cls._from_item(fastpath.decode(segments))
 
     def to_json(self) -> bytes:
         obj = [str(self.model_id), int(self.round),
@@ -311,8 +320,7 @@ class FLLocalDataSetUpdate:
         return _encode_obj_segments(self._cbor_obj(), worst=worst)
 
     @classmethod
-    def from_cbor(cls, data: bytes) -> "FLLocalDataSetUpdate":
-        item = fastpath.decode(data)
+    def _from_item(cls, item: object) -> "FLLocalDataSetUpdate":
         if not isinstance(item, list) or len(item) not in (1, 3):
             raise ValueError("FL_Local_DataSet_Update must be [size] or [size, tl, vl]")
         meta = None
@@ -320,6 +328,14 @@ class FLLocalDataSetUpdate:
             meta = ModelMetadata(float(item[1]), float(item[2]))
         return cls(dataset_size=_expect_uint(item[0], "fl-local-dataset-size"),
                    metadata=meta)
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLLocalDataSetUpdate":
+        return cls._from_item(fastpath.decode(data))
+
+    @classmethod
+    def from_cbor_segments(cls, segments) -> "FLLocalDataSetUpdate":
+        return cls._from_item(fastpath.decode(segments))
 
     def to_json(self) -> bytes:
         obj: list = [int(self.dataset_size)]
@@ -367,8 +383,7 @@ class FLLocalModelUpdate:
                                     worst=worst)
 
     @classmethod
-    def from_cbor(cls, data: bytes) -> "FLLocalModelUpdate":
-        item = fastpath.decode(data)
+    def _from_item(cls, item: object) -> "FLLocalModelUpdate":
         _expect_array(item, 5, "FL_Local_Model_Update")
         ident, rnd, params, tl, vl = item
         return cls(
@@ -377,6 +392,14 @@ class FLLocalModelUpdate:
             params=params_from_cbor(params),
             metadata=ModelMetadata(float(tl), float(vl)),
         )
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLLocalModelUpdate":
+        return cls._from_item(fastpath.decode(data))
+
+    @classmethod
+    def from_cbor_segments(cls, segments) -> "FLLocalModelUpdate":
+        return cls._from_item(fastpath.decode(segments))
 
     def to_json(self) -> bytes:
         obj = [str(self.model_id), int(self.round),
@@ -437,13 +460,23 @@ class FLModelChunk:
         return _encode_obj_segments(self._cbor_obj(encoding, params_payload))
 
     @classmethod
-    def from_cbor(cls, data: bytes) -> "FLModelChunk":
-        item = fastpath.decode(data)
+    def _from_item(cls, item: object) -> "FLModelChunk":
         _expect_array(item, 6, "FL_Model_Chunk")
         ident, rnd, idx, total, crc, params = item
         return cls(_decode_uuid(ident), _expect_uint(rnd, "round"),
                    _expect_uint(idx, "chunk-index"), _expect_uint(total, "num-chunks"),
                    _expect_uint(crc, "crc32"), params_from_cbor(params))
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLModelChunk":
+        return cls._from_item(fastpath.decode(data))
+
+    @classmethod
+    def from_cbor_segments(cls, segments) -> "FLModelChunk":
+        """Decode one chunk from a per-block receive ring / segment list;
+        a payload that arrived contiguous in one segment is decoded as a
+        borrowed view (``params_from_cbor`` then owns it via astype)."""
+        return cls._from_item(fastpath.decode(segments))
 
 
 def missing_to_ranges(missing) -> list[int]:
@@ -544,16 +577,8 @@ class FLChunkNack:
         return _encode_obj_segments(self._cbor_obj())
 
     @classmethod
-    def from_cbor(cls, data: bytes, *,
-                  expect_num_chunks: int | None = None) -> "FLChunkNack":
-        """Decode a NACK.  ``expect_num_chunks`` is the receiver's own
-        generation size (the selective-repeat sender always knows it):
-        a NACK claiming any other size is rejected outright.  Without a
-        caller expectation the claimed size is capped at
-        ``MAX_NACK_CHUNKS`` — the size field comes from the same
-        (untrusted) wire bytes as the ranges it bounds, so it cannot be
-        the only guard on the O(num-chunks) expansion."""
-        item = fastpath.decode(data)
+    def _from_item(cls, item: object, *,
+                   expect_num_chunks: int | None = None) -> "FLChunkNack":
         _expect_array(item, 4, "FL_Chunk_Nack")
         ident, rnd, total, ranges = item
         total = _expect_uint(total, "num-chunks")
@@ -572,6 +597,26 @@ class FLChunkNack:
             num_chunks=total,
             missing=ranges_to_missing(ranges, limit=total),
         )
+
+    @classmethod
+    def from_cbor(cls, data: bytes, *,
+                  expect_num_chunks: int | None = None) -> "FLChunkNack":
+        """Decode a NACK.  ``expect_num_chunks`` is the receiver's own
+        generation size (the selective-repeat sender always knows it):
+        a NACK claiming any other size is rejected outright.  Without a
+        caller expectation the claimed size is capped at
+        ``MAX_NACK_CHUNKS`` — the size field comes from the same
+        (untrusted) wire bytes as the ranges it bounds, so it cannot be
+        the only guard on the O(num-chunks) expansion."""
+        return cls._from_item(fastpath.decode(data),
+                              expect_num_chunks=expect_num_chunks)
+
+    @classmethod
+    def from_cbor_segments(cls, segments, *,
+                           expect_num_chunks: int | None = None
+                           ) -> "FLChunkNack":
+        return cls._from_item(fastpath.decode(segments),
+                              expect_num_chunks=expect_num_chunks)
 
 
 @dataclass
@@ -599,8 +644,7 @@ class FLChunkAck:
         return _encode_obj_segments(self._cbor_obj())
 
     @classmethod
-    def from_cbor(cls, data: bytes) -> "FLChunkAck":
-        item = fastpath.decode(data)
+    def _from_item(cls, item: object) -> "FLChunkAck":
         _expect_array(item, 3, "FL_Chunk_Ack")
         ident, rnd, total = item
         return cls(
@@ -608,6 +652,14 @@ class FLChunkAck:
             round=_expect_uint(rnd, "fl-model-round"),
             num_chunks=_expect_uint(total, "num-chunks"),
         )
+
+    @classmethod
+    def from_cbor(cls, data: bytes) -> "FLChunkAck":
+        return cls._from_item(fastpath.decode(data))
+
+    @classmethod
+    def from_cbor_segments(cls, segments) -> "FLChunkAck":
+        return cls._from_item(fastpath.decode(segments))
 
 
 # ---------------------------------------------------------------------------

@@ -57,10 +57,14 @@ def flatten_params(params: Pytree) -> tuple[np.ndarray, ParamsSpec]:
 
 
 def unflatten_params(flat: np.ndarray, spec: ParamsSpec) -> Pytree:
+    # copy=False: when the leaf dtype already matches (the chunk-assembled
+    # f32 gather buffer), leaves are disjoint views of ``flat`` — installing
+    # a received model costs zero extra copies.  All consumers treat params
+    # functionally (optimizers return new trees), so aliasing is safe.
     out, pos = [], 0
     for shape, dtype in zip(spec.shapes, spec.dtypes):
         n = int(np.prod(shape))
-        out.append(flat[pos:pos + n].reshape(shape).astype(dtype))
+        out.append(flat[pos:pos + n].reshape(shape).astype(dtype, copy=False))
         pos += n
     if pos != flat.size:
         raise ValueError(f"flat vector has {flat.size - pos} extra values")

@@ -17,6 +17,8 @@ The pieces:
     payload copies between the parameter vector and the link);
   * ``ChunkAssembler``    — per-receiver reassembly state: CRC verification,
     duplicate suppression, stale-round rejection, missing-set queries;
+    verified payloads gather straight into one preallocated flat model
+    buffer, so receiver peak memory is model + O(chunk), not 2× model;
   * ``run_selective_repeat`` — the windowed NACK round-trip over a
     ``LossyLink``, with exact byte accounting (``ChunkTransferReport``) so
     tests can assert retransmitted bytes stay below a full-stream re-send.
@@ -37,13 +39,28 @@ import numpy as np
 
 from repro.core import cddl, fastpath
 from repro.core.fastpath import ScatterPayload
-from repro.core.messages import FLChunkAck, FLChunkNack, FLModelChunk
+from repro.core.messages import (
+    MAX_NACK_CHUNKS,
+    FLChunkAck,
+    FLChunkNack,
+    FLModelChunk,
+)
 from repro.transport.coap import Code, TransferStats
 from repro.transport.network import LossyLink
 
 # Window budget: the initial full-stream window plus up to this many repair
 # windows before incomplete receivers are treated as dropouts for the round.
 MAX_REPAIR_WINDOWS = 10
+
+# Largest gather buffer (in f32 elements) the assembler will preallocate
+# from *wire-claimed* geometry when the caller did not vouch for a model
+# size (``expected_elems``).  The claimed ``num_chunks × chunk_elems``
+# capacity comes from the same untrusted bytes as the payload it sizes —
+# exactly the amplification ``MAX_NACK_CHUNKS`` guards in the NACK decoder
+# — so a single forged 4 KB chunk must not be able to trigger a multi-TB
+# ``np.empty``.  2^27 elements = a 512 MiB f32 buffer, far beyond any
+# model a constrained link carries in one generation.
+MAX_ASSEMBLY_ELEMS = 1 << 27
 
 
 def chunk_stream(model_id: uuid.UUID, round_: int, params: np.ndarray,
@@ -68,20 +85,50 @@ def chunk_stream(model_id: uuid.UUID, round_: int, params: np.ndarray,
 
 
 class ChunkAssembler:
-    """Reassembles one generation (model_id, round, num_chunks) of chunks.
+    """Reassembles one generation (model_id, round, num_chunks) of chunks
+    by gathering each verified payload straight into one preallocated flat
+    model buffer.
 
-    * CRC32 of every chunk is verified before it is buffered (``ValueError``
-      on mismatch — a corrupt chunk can never reach the assembled model);
+    * CRC32 of every chunk is verified before it touches the buffer
+      (``ValueError`` on mismatch — a corrupt chunk can never reach the
+      assembled model);
     * duplicates (retransmits of an already-buffered or already-completed
       chunk) are counted and dropped;
     * a chunk from an *older* round than the assembler has seen is rejected
       as stale, while a newer round discards the stale partial state and
       resynchronizes.
+
+    Memory: the old assembler buffered one owned copy per chunk and
+    ``np.concatenate``-d them at completion — peak 2× model.  Now chunk
+    geometry is inferred from the first chunk seen (every non-final chunk
+    of a generation carries ``chunk_elems`` elements; the final one
+    carries the remainder), a single ``num_chunks × chunk_elems`` f32
+    buffer is allocated, and each chunk payload is written into its slot
+    directly — the one receive-side copy the wire hop costs.  Peak
+    receiver memory is one model buffer plus O(chunk) transients, in any
+    arrival order.  If the *final* (short) chunk arrives before any
+    geometry-bearing one, it is parked as a single owned copy and placed
+    when the first full chunk fixes the slot width.  A sender whose chunk
+    sizes are inconsistent with the generation geometry (or whose payload
+    dtype inflates the slice) raises ``ValueError`` instead of silently
+    growing the allocation.
+
+    The gather buffer is sized from *wire-claimed* geometry, so the claim
+    is bounded before any allocation: ``expected_elems`` (the model size
+    the receiver already knows — its own parameter count) rejects any
+    generation that could not be that model, and without it the capacity
+    is capped at ``MAX_ASSEMBLY_ELEMS`` — a forged ``num_chunks`` cannot
+    conjure a multi-TB ``np.empty`` out of one small chunk.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, *, expected_elems: int | None = None) -> None:
+        self._expected_elems = expected_elems
         self._key: tuple | None = None           # (model_id, round, n)
-        self._parts: dict[int, np.ndarray] = {}
+        self._buf: np.ndarray | None = None      # gather target, <f4 flat
+        self._received: set[int] = set()
+        self._chunk_elems: int | None = None     # slot width (non-final)
+        self._final_size: int | None = None      # final chunk's element count
+        self._pending_final: np.ndarray | None = None
         self._completed_key: tuple | None = None
         self.duplicates = 0
         self.stale_rejected = 0
@@ -98,24 +145,73 @@ class ChunkAssembler:
             latest = max(latest, self._completed_key[1])
         return round_ < latest
 
+    def _reset_generation(self, key: tuple | None) -> None:
+        self._key = key
+        self._buf = None
+        self._received = set()
+        self._chunk_elems = None
+        self._final_size = None
+        self._pending_final = None
+
+    def _alloc(self, num_chunks: int) -> None:
+        """Allocate the gather buffer once the slot width is known, and
+        place a parked final chunk if one arrived first.  The claimed
+        capacity is bounded *before* the allocation (see class docstring):
+        memory here must scale with the model the receiver expects, never
+        with what a wire message asserts."""
+        elems = self._chunk_elems
+        capacity = num_chunks * elems
+        if self._expected_elems is not None:
+            # exact-fit bound: num_chunks = ceil(expected / elems) implies
+            # capacity < expected + elems for any legitimate chunking
+            if capacity >= self._expected_elems + elems:
+                raise ValueError(
+                    f"generation capacity {capacity} elements cannot be a "
+                    f"{self._expected_elems}-element model in {elems}-wide "
+                    f"chunks")
+        elif capacity > MAX_ASSEMBLY_ELEMS:
+            raise ValueError(
+                f"generation capacity {capacity} elements exceeds "
+                f"MAX_ASSEMBLY_ELEMS ({MAX_ASSEMBLY_ELEMS}) and no "
+                f"expected model size was given")
+        self._buf = np.empty(capacity, dtype="<f4")
+        if self._pending_final is not None:
+            fs = self._pending_final.size
+            if not 1 <= fs <= elems:
+                raise ValueError(
+                    f"final chunk carries {fs} elements, expected 1..{elems}")
+            start = (num_chunks - 1) * elems
+            self._buf[start : start + fs] = self._pending_final
+            self._pending_final = None
+
+    @staticmethod
+    def _payload(msg: FLModelChunk) -> np.ndarray:
+        """The chunk payload as a flat ``<f4`` view — zero-copy when the
+        sender's array already is one (the fan-out hot path); a
+        dtype-mismatched sender costs exactly one conversion copy of one
+        chunk, never a second buffered copy."""
+        part = np.asarray(msg.params)
+        if part.dtype != np.dtype("<f4") or not part.flags.c_contiguous:
+            part = np.ascontiguousarray(part, dtype="<f4")
+        return part.reshape(-1)
+
     def add(self, msg: FLModelChunk) -> np.ndarray | None:
-        """Verify + buffer one chunk; returns the assembled flat f32 vector
-        once every chunk of the generation has arrived, else None."""
-        if msg.num_chunks < 1 or not 0 <= msg.chunk_index < msg.num_chunks:
+        """Verify one chunk and gather it into the model buffer; returns
+        the assembled flat f32 vector once every chunk of the generation
+        has arrived, else None."""
+        n, idx = msg.num_chunks, msg.chunk_index
+        if n < 1 or not 0 <= idx < n:
             raise ValueError(
-                f"chunk index {msg.chunk_index} out of range "
-                f"for {msg.num_chunks} chunks")
-        part = np.ascontiguousarray(msg.params, dtype="<f4")
-        if np.may_share_memory(part, msg.params):
-            # the receiver owns what it buffers: an already-<f4-contiguous
-            # chunk is a view of the *sender's* live vector (zero-copy fan
-            # out), so this copy is the receive-side buffer — the one copy
-            # the wire hop costs (docs/zero_copy_pipeline.md).
-            part = part.copy()
+                f"chunk index {idx} out of range for {n} chunks")
+        if n > MAX_NACK_CHUNKS:
+            # same untrusted-size guard as the NACK decoder: num-chunks
+            # fans out into O(n) state (missing sets, range expansion)
+            raise ValueError(
+                f"num-chunks {n} exceeds MAX_NACK_CHUNKS ({MAX_NACK_CHUNKS})")
+        part = self._payload(msg)
         if zlib.crc32(memoryview(part).cast("B")) != msg.crc32:
-            raise ValueError(
-                f"chunk {msg.chunk_index}/{msg.num_chunks}: CRC mismatch")
-        key = (msg.model_id, msg.round, msg.num_chunks)
+            raise ValueError(f"chunk {idx}/{n}: CRC mismatch")
+        key = (msg.model_id, msg.round, n)
         if key == self._completed_key:
             self.duplicates += 1      # late retransmit of a finished round
             return None
@@ -123,18 +219,60 @@ class ChunkAssembler:
             if self._is_stale(msg.round):
                 self.stale_rejected += 1
                 return None
-            self._parts = {}
-            self._key = key
-        if msg.chunk_index in self._parts:
+            self._reset_generation(key)
+        if idx in self._received:
             self.duplicates += 1
             return None
-        self._parts[msg.chunk_index] = part
-        if len(self._parts) < msg.num_chunks:
+        final = idx == n - 1
+        if final and n > 1 and part.size == 0:
+            raise ValueError("empty final chunk")
+        if not final:
+            if part.size == 0:
+                raise ValueError("empty non-final chunk")
+            if self._chunk_elems is None:
+                self._chunk_elems = part.size
+                try:
+                    self._alloc(n)
+                except (ValueError, MemoryError):
+                    # hostile capacity, a parked final chunk inconsistent
+                    # with this width, or a failed allocation: the
+                    # generation is garbage — drop it whole so a clean
+                    # retransmit can restart assembly from scratch
+                    self._reset_generation(None)
+                    raise
+            elif part.size != self._chunk_elems:
+                raise ValueError(
+                    f"chunk {idx} carries {part.size} elements, generation "
+                    f"width is {self._chunk_elems}")
+            start = idx * self._chunk_elems
+            self._buf[start : start + part.size] = part
+        elif n == 1:
+            # degenerate single-chunk generation: the payload is the model
+            self._final_size = part.size
+            self._buf = (part if not np.may_share_memory(part, msg.params)
+                         else part.copy())
+        elif self._chunk_elems is None:
+            # final chunk before geometry is known: park one owned copy
+            self._pending_final = (
+                part if not np.may_share_memory(part, msg.params)
+                else part.copy())
+            self._final_size = part.size
+        else:
+            if not 1 <= part.size <= self._chunk_elems:
+                raise ValueError(
+                    f"final chunk carries {part.size} elements, expected "
+                    f"1..{self._chunk_elems}")
+            self._final_size = part.size
+            start = idx * self._chunk_elems
+            self._buf[start : start + part.size] = part
+        self._received.add(idx)
+        if len(self._received) < n:
             return None
-        flat = np.concatenate([self._parts[i] for i in range(msg.num_chunks)])
+        total = (self._final_size if n == 1
+                 else (n - 1) * self._chunk_elems + self._final_size)
+        flat = self._buf[:total]
         self._completed_key = key
-        self._key = None
-        self._parts = {}
+        self._reset_generation(None)
         return flat
 
     def is_complete(self, model_id: uuid.UUID, round_: int) -> bool:
@@ -149,7 +287,7 @@ class ChunkAssembler:
             return []
         if key != self._key:    # nothing buffered for this generation yet
             return list(range(num_chunks))
-        return [i for i in range(num_chunks) if i not in self._parts]
+        return [i for i in range(num_chunks) if i not in self._received]
 
     def feedback(self, model_id: uuid.UUID, round_: int,
                  num_chunks: int) -> FLChunkAck | FLChunkNack:
@@ -185,6 +323,8 @@ class ChunkTransferReport:
 
 
 def _validate(payload, mtype: str) -> None:
+    # fastpath.decode consumes ScatterPayloads / segment lists directly,
+    # so validating a vectored wire form never joins it.
     cddl.validate(fastpath.decode(payload), cddl.SCHEMAS[mtype])
 
 
@@ -228,9 +368,9 @@ def run_selective_repeat(
     wires = [ScatterPayload(c.to_cbor_segments()) for c in chunks]
     if validate:
         for w in wires:
-            # the one transient join per chunk: the decode side of the
-            # validator needs contiguous bytes, discarded immediately.
-            _validate(w.tobytes(), "FL_Model_Chunk")
+            # segment-aware decode: the validator walks the scatter
+            # segments in place — no transient per-chunk join.
+            _validate(w, "FL_Model_Chunk")
     report = ChunkTransferReport(
         num_chunks=n, initial_payload_bytes=sum(len(w) for w in wires))
 
@@ -295,10 +435,11 @@ def run_selective_repeat(
 class AssemblerReceiver:
     """Minimal receiver endpoint: a bare ``ChunkAssembler`` plus the
     assembled result — what the loss-sweep harness and the server's uplink
-    reassembly use."""
+    reassembly use.  ``expected_elems`` is the model size the receiver
+    vouches for (bounds the gather allocation against forged geometry)."""
 
-    def __init__(self) -> None:
-        self.assembler = ChunkAssembler()
+    def __init__(self, *, expected_elems: int | None = None) -> None:
+        self.assembler = ChunkAssembler(expected_elems=expected_elems)
         self.assembled: np.ndarray | None = None
 
     def receive_chunk(self, msg: FLModelChunk) -> bool:

@@ -61,6 +61,10 @@ class FLClient:
                                        default_factory=ChunkAssembler)
 
     def __post_init__(self) -> None:
+        # the client knows its own model size: bound chunk-reassembly
+        # allocations to it (a forged num-chunks cannot inflate the
+        # gather buffer past one model)
+        self._assembler = ChunkAssembler(expected_elems=self.spec.total)
         n = len(self.data["labels"])
         rng = np.random.default_rng((self.seed, self.client_id))
         perm = rng.permutation(n)
@@ -73,8 +77,14 @@ class FLClient:
     # -- message handlers (server-driven CoAP semantics) ---------------------
 
     def handle_global_model(self, msg: FLGlobalModelUpdate) -> None:
-        """POST /fl/model — install the new global model."""
-        self.params = unflatten_params(msg.params.astype(np.float32),
+        """POST /fl/model — install the new global model.
+
+        ``np.asarray`` instead of ``astype``: a chunk-assembled model is
+        already the receiver-owned f32 gather buffer, so installing it
+        costs only the per-leaf unflatten casts, not an extra whole-model
+        copy."""
+        self.params = unflatten_params(np.asarray(msg.params,
+                                                  dtype=np.float32),
                                        self.spec)
         self.round = msg.round
         self.model_id = msg.model_id

@@ -163,8 +163,11 @@ class FLServer:
             if upd.model_id != self.model_id:
                 raise ValueError(f"client {cid}: wrong model id")
         clients = sorted(updates)
+        # np.asarray: chunked uplinks arrive as gathered f32 buffers —
+        # aggregate them in place instead of re-copying every model
         self.global_params = fedavg(
-            [updates[c].params.astype(np.float32) for c in clients],
+            [np.asarray(updates[c].params, dtype=np.float32)
+             for c in clients],
             [dataset_sizes[c] for c in clients])
         return self.global_params
 
@@ -194,7 +197,10 @@ class UplinkEndpoint(AssemblerReceiver):
     """
 
     def __init__(self, server: FLServer) -> None:
-        super().__init__()
+        # uplink models are the same shape as the global model: vouch for
+        # that size so forged chunk geometry cannot inflate the gather
+        # buffer
+        super().__init__(expected_elems=server.global_params.size)
         self._server = server
         self.rejected_stale = 0
 

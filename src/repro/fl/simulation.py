@@ -70,27 +70,27 @@ class FLSimulation:
     # -- wire helpers (validate every message against its CDDL schema) -------
 
     def _send(self, payload, mtype: str, uri: str, code: Code, *,
-              wire: bytes | None = None) -> bytes | None:
-        """Validate against CDDL, push over the lossy link.
+              validated: bool = False):
+        """Validate against CDDL, push over the lossy link, deliver.
 
         ``payload`` is contiguous bytes or a vectored segment list /
-        ``ScatterPayload`` from ``to_cbor_segments`` — the link counts and
-        frames segments without joining them; the single join below *is*
-        the receiver's buffer (the one copy the wire hop costs), returned
-        for ``from_cbor``.  Multi-send loops (unicast dissemination) pass
-        the already-joined-and-validated ``wire`` so the join and the
-        validation decode happen once per message, not once per send.
-        Returns None if the transfer failed after max retransmissions
-        (treated upstream as a dropout — the FL round continues without
-        this message)."""
+        ``ScatterPayload`` from ``to_cbor_segments`` — validation decodes
+        the segments in place (no join), the link counts and frames them
+        without joining, and delivery comes back as a ``BlockReceiveRing``
+        whose arena is the receiver's *single* owned copy of the wire
+        bytes; ``from_cbor_segments`` decodes it as borrowed views, so no
+        second (join) copy is ever layered on top.  Multi-send loops
+        (unicast dissemination) pass ``validated=True`` so the validation
+        decode happens once per message, not once per send.
+        Returns the ring, or None if the transfer failed after max
+        retransmissions (treated upstream as a dropout — the FL round
+        continues without this message)."""
         payload = as_wire_payload(payload)
-        if wire is None:
-            wire = payload.tobytes() \
-                if isinstance(payload, fastpath.ScatterPayload) else payload
-            cddl.validate(fastpath.decode(wire), cddl.SCHEMAS[mtype])
-        stats = self.link.send_payload(payload, uri=uri, code=code)
+        if not validated:
+            cddl.validate(fastpath.decode(payload), cddl.SCHEMAS[mtype])
+        stats, ring = self.link.deliver_payload(payload, uri=uri, code=code)
         self.accounting.record(mtype, stats)
-        return None if stats.failed_messages else wire
+        return ring
 
     def _disseminate_chunked(self, receivers: list[int]) -> list[int]:
         """Stream the global model as FL_Model_Chunk messages with
@@ -152,21 +152,37 @@ class FLSimulation:
             msg = server.global_update_message()
             # vectored wire form: the params payload crosses the link as a
             # borrowed view of the live global vector (zero encode copies);
-            # joined and validated once, however many unicast sends follow
+            # validated once over the segments, however many sends follow
             payload = fastpath.ScatterPayload(msg.to_cbor_segments(enc))
-            wire = payload.tobytes()
-            cddl.validate(fastpath.decode(wire),
+            cddl.validate(fastpath.decode(payload),
                           cddl.SCHEMAS["FL_Global_Model_Update"])
-            sends = 1 if self.multicast_global else len(selected)
             delivered_global = True
-            for _ in range(sends):
-                if self._send(payload, "FL_Global_Model_Update", "fl/model",
-                              Code.POST, wire=wire) is None:
+            if self.multicast_global:
+                # one wire transfer reaches everyone; every client decodes
+                # the same delivered ring (its arena is the receiver-side
+                # owned copy, decoded as views)
+                ring = self._send(payload, "FL_Global_Model_Update",
+                                  "fl/model", Code.POST, validated=True)
+                if ring is None:
                     delivered_global = False
+                else:
+                    for cid in selected:
+                        self.clients[cid].handle_global_model(
+                            FLGlobalModelUpdate.from_cbor_segments(ring))
+            else:
+                # unicast: deliver + decode per client so only ONE ring is
+                # alive at a time (N simultaneous arenas would put peak
+                # memory back at N× model); a failed send still voids the
+                # whole round's dissemination, as before
+                for cid in selected:
+                    ring = self._send(payload, "FL_Global_Model_Update",
+                                      "fl/model", Code.POST, validated=True)
+                    if ring is None:
+                        delivered_global = False
+                    else:
+                        self.clients[cid].handle_global_model(
+                            FLGlobalModelUpdate.from_cbor_segments(ring))
             receivers = selected if delivered_global else []
-            for cid in receivers:
-                self.clients[cid].handle_global_model(
-                    FLGlobalModelUpdate.from_cbor(wire))
 
         # (2) local training + observe notifications
         reporters, dropped, stopped = [], [], []
@@ -177,12 +193,12 @@ class FLSimulation:
                 dropped.append(cid)       # node failure this round
                 continue
             upd = client.train_locally()
-            wire = self._send(upd.to_cbor_segments(), "FL_Local_DataSet_Update",
+            ring = self._send(upd.to_cbor_segments(), "FL_Local_DataSet_Update",
                               "fl/progress", Code.CONTENT)
-            if wire is None:
+            if ring is None:
                 dropped.append(cid)       # report lost on the link
                 continue
-            upd = FLLocalDataSetUpdate.from_cbor(wire)
+            upd = FLLocalDataSetUpdate.from_cbor_segments(ring)
             progress[cid] = upd
             if not server.observe_ready(upd):
                 continue
@@ -224,18 +240,21 @@ class FLSimulation:
                         continue
                     meta = progress[cid].metadata or ModelMetadata(
                         float("nan"), float("nan"))
+                    # the gathered f32 buffer is handed on as-is: widening
+                    # it to f64 only to narrow again at aggregation would
+                    # re-introduce a whole-model copy on the receive side
                     updates[cid] = FLLocalModelUpdate(
                         model_id=server.model_id, round=server.round,
-                        params=flat.astype(np.float64), metadata=meta)
+                        params=flat, metadata=meta)
                     sizes[cid] = self.clients[cid].dataset_size()
                     continue
-                raw = self._send(
+                ring = self._send(
                     self.clients[cid].local_model_update().to_cbor_segments(enc),
                     "FL_Local_Model_Update", "fl/model", Code.CONTENT)
-                if raw is None:
+                if ring is None:
                     dropped.append(cid)   # model transfer lost
                     continue
-                updates[cid] = FLLocalModelUpdate.from_cbor(raw)
+                updates[cid] = FLLocalModelUpdate.from_cbor_segments(ring)
                 sizes[cid] = self.clients[cid].dataset_size()
             if updates:
                 server.aggregate(updates, sizes)

@@ -166,6 +166,75 @@ def blockwise_messages(payload, *, uri: str, code: Code = Code.POST,
                                         token=token))
 
 
+class BlockReceiveRing:
+    """Receive-side segment ring: blockwise payloads reassembled into
+    *arena segments*, never joined on top of.
+
+    The receiver appends each delivered ≤64 B block's payload in arrival
+    order (the simulated link is in-order; real reorder would slot by the
+    Block1 NUM).  Consecutive blocks coalesce into a growing ``bytearray``
+    arena — copying each block into the arena *is* the receiver-ownership
+    copy the wire hop costs, paid once per byte, block-granular.  The ring
+    then hands the decode layer its arena segments as-is:
+    ``fastpath.decode`` / ``from_cbor_segments`` walk them with a segment
+    cursor, and a payload that landed inside one arena (the common case —
+    an uninterrupted block run) decodes as a *borrowed* zero-copy view of
+    the ring's own memory.  No contiguous join is ever layered on top.
+
+    Reading ``segments()`` seals the current arena (a ``bytearray`` with
+    exported views must not grow), so appends after a read simply start a
+    new arena segment.
+    """
+
+    __slots__ = ("_segments", "_arena", "_num_blocks", "_nbytes")
+
+    def __init__(self) -> None:
+        self._segments: list = []
+        self._arena: bytearray | None = None
+        self._num_blocks = 0
+        self._nbytes = 0
+
+    def add_block(self, payload) -> None:
+        """Append one delivered block's payload (``bytes`` or any buffer)."""
+        n = payload.nbytes if isinstance(payload, memoryview) else len(payload)
+        if not n:
+            return
+        if self._arena is None:
+            self._arena = bytearray()
+            self._segments.append(self._arena)
+        self._arena += payload
+        self._num_blocks += 1
+        self._nbytes += n
+
+    def feed(self, msg: "CoapMessage") -> None:
+        """Append the payload of one received blockwise CoAP message."""
+        self.add_block(msg.payload)
+
+    def segments(self) -> list:
+        segs = [memoryview(s).toreadonly() if isinstance(s, bytearray) else s
+                for s in self._segments]
+        self._arena = None  # seal: exported views pin the arena's size
+        return segs
+
+    @property
+    def num_blocks(self) -> int:
+        return self._num_blocks
+
+    def __len__(self) -> int:
+        return self._nbytes
+
+    def tobytes(self) -> bytes:
+        """Explicit contiguous join — for tests/diagnostics, not the hot
+        path (decode consumes the ring segment-wise)."""
+        return b"".join(bytes(b) for b in self._segments)
+
+    def clear(self) -> None:
+        self._segments.clear()
+        self._arena = None
+        self._num_blocks = 0
+        self._nbytes = 0
+
+
 @dataclass
 class TransferStats:
     messages: int = 0          # application payloads

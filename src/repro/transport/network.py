@@ -10,7 +10,9 @@ Two delivery models coexist (docs/chunk_protocol.md):
   * ``send_payload`` — CON unicast: every frame is acknowledged and
     retransmitted up to MAX_RETRANSMIT; a payload either arrives whole or is
     declared failed.  Used for small control messages and monolithic model
-    transfers.
+    transfers.  ``deliver_payload`` is the same transfer with the receive
+    side attached: delivered blocks land in a ``BlockReceiveRing`` the
+    decode layer consumes segment-wise (never joined).
   * ``request_stream`` — one selective-repeat *window*: a batch of chunk
     payloads pushed NON-style with per-payload delivery tracking instead of
     an all-or-nothing verdict.  Losing a chunk never aborts the window; the
@@ -28,6 +30,7 @@ from repro.core.fastpath import ScatterPayload
 from repro.transport.coap import (
     IEEE802154_MTU,
     LOWPAN_OVERHEAD,
+    BlockReceiveRing,
     Code,
     TransferStats,
     iter_blockwise_messages,
@@ -83,6 +86,26 @@ class LossyLink:
         marks the whole payload undelivered (``failed_messages`` = 1); the
         FL layer treats that as a client dropout for the round — no
         exception, training continues."""
+        return self._blockwise_transfer(payload, uri=uri, code=code,
+                                        ring=None)
+
+    def deliver_payload(self, payload, *, uri: str, code: Code = Code.POST
+                        ) -> tuple[TransferStats, BlockReceiveRing | None]:
+        """``send_payload`` plus the receive side: every block that
+        survives the link lands in a ``BlockReceiveRing``, the segmented
+        receiver buffer the decode layer consumes directly (no contiguous
+        join).  Vectored payloads thus cross end to end — sender segments
+        are sliced per block (the block slice *is* the simulated wire-hop
+        copy, O(block) at a time) and the receiver decodes straight out of
+        its per-block buffers.  Returns ``(stats, ring)``; ``ring`` is
+        None when the transfer failed after MAX_RETRANSMIT."""
+        ring = BlockReceiveRing()
+        stats = self._blockwise_transfer(payload, uri=uri, code=code,
+                                         ring=ring)
+        return stats, (None if stats.failed_messages else ring)
+
+    def _blockwise_transfer(self, payload, *, uri: str, code: Code,
+                            ring: BlockReceiveRing | None) -> TransferStats:
         payload = as_wire_payload(payload)
         stats = TransferStats(messages=1, payload_bytes=len(payload))
         for msg in iter_blockwise_messages(payload, uri=uri, code=code):
@@ -102,6 +125,8 @@ class LossyLink:
                     stats.failed_messages = 1
                     return stats
                 stats.retransmissions += 1
+            if ring is not None:
+                ring.feed(msg)
         return stats
 
     def send_stream(self, payloads: Iterable, *, uri: str,

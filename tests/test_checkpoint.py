@@ -252,3 +252,75 @@ def test_mmap_restore_multi_gb_shaped_checkpoint(tmp_path):
     result_bytes = n_leaves * leaf_elems * 4
     transient = peak - result_bytes
     assert transient < 3 * leaf_elems * 4, (peak, transient)
+
+
+# -- deterministic mmap lifetime ----------------------------------------------
+
+
+def test_restore_closes_mmap_deterministically(tmp_path, monkeypatch):
+    """The map (and the descriptor it holds) must be closed by the time
+    restore returns, not whenever GC gets to it — a still-referenced map
+    object would otherwise pin the fd for its whole lifetime."""
+    import mmap as mmap_module
+
+    created = []
+    real_mmap = mmap_module.mmap
+
+    class TrackingMmap(real_mmap):
+        def __new__(cls, *args, **kwargs):
+            m = super().__new__(cls, *args, **kwargs)
+            created.append(m)
+            return m
+
+    monkeypatch.setattr(mmap_module, "mmap", TrackingMmap)
+    tree = _tree()
+    p = save_checkpoint(tmp_path / "ck.cbor", tree, step=6)
+    restored, header = restore_checkpoint(p, tree)
+    assert len(created) == 1
+    assert created[0].closed, "mmap left open after successful restore"
+    # the restored leaves are owned — fully usable after the map is gone
+    assert header["step"] == 6
+    np.testing.assert_array_equal(np.asarray(restored["layer"]["w"]),
+                                  tree["layer"]["w"])
+
+
+def test_restore_corrupt_file_still_raises_checkpoint_corrupt(tmp_path,
+                                                              monkeypatch):
+    """The deterministic close must never mask a corruption error with a
+    BufferError (decode views of the map survive in the propagating
+    traceback's frames; the close is lenient on that path)."""
+    import mmap as mmap_module
+
+    created = []
+    real_mmap = mmap_module.mmap
+
+    class TrackingMmap(real_mmap):
+        def __new__(cls, *args, **kwargs):
+            m = super().__new__(cls, *args, **kwargs)
+            created.append(m)
+            return m
+
+    monkeypatch.setattr(mmap_module, "mmap", TrackingMmap)
+    tree = _tree()
+    p = save_checkpoint(tmp_path / "ck.cbor", tree)
+    raw = bytearray(p.read_bytes())
+    raw[-2] ^= 0xFF            # final leaf payload bit flip -> CRC mismatch
+    p.write_bytes(bytes(raw))
+    with pytest.raises(CheckpointCorrupt, match="CRC"):
+        restore_checkpoint(p, tree)
+    assert len(created) == 1   # the map was created (and not left mid-state)
+
+
+def test_restore_does_not_leak_fds(tmp_path):
+    import os
+
+    if not os.path.isdir("/proc/self/fd"):
+        pytest.skip("needs /proc")
+    tree = _tree()
+    p = save_checkpoint(tmp_path / "ck.cbor", tree)
+    restore_checkpoint(p, tree)               # warm caches/imports
+    before = len(os.listdir("/proc/self/fd"))
+    keep = [restore_checkpoint(p, tree) for _ in range(32)]
+    after = len(os.listdir("/proc/self/fd"))
+    assert after <= before + 2, (before, after)
+    assert len(keep) == 32

@@ -265,8 +265,10 @@ def test_feedback_transitions_nack_to_ack():
 
 
 def test_uplink_endpoint_rejects_stale_generation():
+    # uplink models are the same size as the global model (the endpoint
+    # vouches for that size to bound the gather allocation)
     server = FLServer(OrchestrationConfig(num_clients=1, clients_per_round=1),
-                      _params(n=256))
+                      _params(n=1000))
     flat = _params(n=1000, seed=3)
     stale_round = list(chunk_stream(server.model_id, server.round + 1, flat,
                                     256))
@@ -398,3 +400,76 @@ def test_nack_ack_wire_roundtrip_and_schema():
     with pytest.raises(Exception):
         cddl.validate(fastpath.decode(
             FLChunkAck(MID, 4, 10).to_cbor()), cddl.SCHEMAS["FL_Chunk_Nack"])
+
+
+# -- duplicate-delivery byte accounting ---------------------------------------
+
+
+def test_duplicate_delivered_chunks_not_double_counted():
+    """A repair multicast reaches *every* receiver, so a re-sent chunk can
+    arrive twice (at a receiver that already held it, or one that already
+    completed).  The wire accounting must count the repair send once —
+    ``retransmitted_payload_bytes`` is bytes on the air, never bytes
+    delivered."""
+    params = _params(n=10_000)
+    chunks = _chunks(params)
+    wire_len = {i: len(c.to_cbor()) for i, c in enumerate(chunks)}
+
+    # window 0: receiver 0 misses {3}, receiver 1 misses {7}.  The repair
+    # window re-multicasts {3, 7}: chunk 3 arrives a second time at
+    # receiver 1 and chunk 7 a second time at receiver 0.
+    def drop(uri, window, index, receiver):
+        return window == 0 and ((index == 3 and receiver == 0)
+                                or (index == 7 and receiver == 1))
+
+    receivers = [AssemblerReceiver(), AssemblerReceiver()]
+    report = _run(chunks, receivers, drop)
+    assert report.completed == [0, 1]
+    for r in receivers:
+        assert r.assembled.tobytes() == params.tobytes()
+    # both receivers saw exactly one duplicate arrival
+    assert receivers[0].assembler.duplicates == 1
+    assert receivers[1].assembler.duplicates == 1
+    # ...but each repaired chunk is counted exactly once on the wire
+    assert report.windows == 2
+    assert report.retransmitted_chunks == 2
+    assert report.retransmitted_payload_bytes == wire_len[3] + wire_len[7]
+
+
+def test_resend_into_completed_receiver_counts_once():
+    """Seeded schedule where a chunk is repaired for one receiver while the
+    other already ACKed the generation: the late duplicate at the completed
+    assembler is suppressed, and the repair bytes appear once."""
+    params = _params(n=8192)
+    chunks = _chunks(params)
+
+    def drop(uri, window, index, receiver):
+        return window == 0 and index == 3 and receiver == 0
+
+    receivers = [AssemblerReceiver(), AssemblerReceiver()]
+    report = _run(chunks, receivers, drop)
+    assert report.completed == [0, 1]
+    assert receivers[1].assembler.duplicates == 1   # late repair, completed
+    assert report.retransmitted_chunks == 1
+    assert report.retransmitted_payload_bytes == len(chunks[3].to_cbor())
+    # invariant: payload bytes = the initial full stream + the repairs
+    assert report.payload_bytes == \
+        report.initial_payload_bytes + report.retransmitted_payload_bytes
+
+
+def test_repeated_loss_of_same_chunk_counts_each_wire_send():
+    """The dual bound: a chunk lost in two consecutive windows costs two
+    repair sends — the accounting reports real airtime, not unique chunk
+    identities."""
+    params = _params(n=8192)
+    chunks = _chunks(params)
+
+    def drop(uri, window, index, receiver):
+        return window < 2 and index == 5
+
+    receivers = [AssemblerReceiver()]
+    report = _run(chunks, receivers, drop)
+    assert report.completed == [0]
+    assert report.windows == 3
+    assert report.retransmitted_chunks == 2         # same chunk, two sends
+    assert report.retransmitted_payload_bytes == 2 * len(chunks[5].to_cbor())

@@ -169,3 +169,20 @@ def test_fl_q8_compressed_updates_converge():
     report = _make_sim(rounds=4, encoding=ParamsEncoding.Q8).run()
     losses = [r.mean_train_loss for r in report.rounds]
     assert losses[-1] < losses[0] * 0.95, losses
+
+
+def test_unicast_dissemination_matches_multicast_training():
+    """multicast_global=False delivers one ring per client, decoded and
+    installed one at a time (a single arena alive at once); training is
+    identical to multicast on a lossless link."""
+    sim_m = _make_sim(rounds=1)
+    sim_u = _make_sim(rounds=1)
+    sim_u.multicast_global = False
+    rm, ru = sim_m.run(), sim_u.run()
+    assert [r.mean_train_loss for r in rm.rounds] == \
+        [r.mean_train_loss for r in ru.rounds]
+    # unicast puts one copy of the global update on the wire per client
+    mb = rm.accounting.by_type["FL_Global_Model_Update"]
+    ub = ru.accounting.by_type["FL_Global_Model_Update"]
+    assert mb.messages == 1 and ub.messages == 4
+    assert ub.payload_bytes == 4 * mb.payload_bytes

@@ -1,0 +1,529 @@
+"""Segment-aware decode: the receive-side mirror of the vectored encoder.
+
+Differential guarantees: decoding a message from *any* segmentation of its
+wire bytes — the sender's own scatter segments, 1-byte splits, cuts that
+land mid-CBOR-head or inside a typed-array payload, and ≤64 B CoAP block
+receive rings — must equal decoding the contiguous oracle bytes (the
+oracle codec stays the reference).  Payloads that arrive contiguous in a
+single segment must come back as *borrowed* zero-copy views; only
+boundary-crossing reads may gather.  The gather assembler must keep
+receiver peak memory at one model buffer + O(chunk), in any arrival
+order, and a geometry-inconsistent or dtype-mismatched sender must not be
+able to inflate the allocation silently.
+"""
+import tracemalloc
+import uuid
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import cbor, fastpath
+from repro.core.cbor import Tag
+from repro.core.fastpath import ScatterPayload
+from repro.core.messages import (
+    FLChunkAck,
+    FLChunkNack,
+    FLGlobalModelUpdate,
+    FLLocalDataSetUpdate,
+    FLLocalModelUpdate,
+    FLModelChunk,
+    ModelMetadata,
+    ParamsEncoding,
+)
+from repro.fl.chunking import ChunkAssembler, chunk_stream
+from repro.transport.coap import BlockReceiveRing, iter_blockwise_messages
+from repro.transport.network import LossyLink
+
+from test_fastpath import _normalize, _random_value
+
+MID = uuid.UUID(bytes=bytes(range(16)))
+
+
+def _ring(wire: bytes, block: int = 64) -> BlockReceiveRing:
+    """Chop contiguous wire bytes into a block receive ring."""
+    ring = BlockReceiveRing()
+    for i in range(0, max(len(wire), 1), block):
+        ring.add_block(wire[i : i + block])
+    return ring
+
+
+def _segmentations(wire: bytes, rng):
+    """Adversarial segment layouts of one wire message."""
+    yield [wire]                                        # single segment
+    yield [wire[i : i + 1] for i in range(len(wire))]   # 1-byte segments
+    # cuts through the leading heads (tag/array/bstr head bytes)
+    for pos in range(1, min(len(wire), 14)):
+        yield [wire[:pos], wire[pos:]]
+    # cut inside the (dominant) payload region
+    yield [wire[: len(wire) // 2], wire[len(wire) // 2 :]]
+    yield [wire[:-3], wire[-3:]]
+    # random multi-cuts, with empty segments sprinkled in
+    for _ in range(3):
+        cuts = sorted(rng.integers(0, len(wire) + 1, 6).tolist())
+        bounds = [0] + cuts + [len(wire)]
+        segs = [wire[a:b] for a, b in zip(bounds, bounds[1:])]
+        yield segs
+    yield [b""] + [wire] + [b""]
+    # a CoAP block ring is just another segmentation
+    yield _ring(wire).segments()
+
+
+# -- raw codec differential ----------------------------------------------------
+
+
+def test_decode_segments_matches_contiguous_fuzz():
+    rng = np.random.default_rng(99)
+    for _ in range(120):
+        value = _random_value(rng)
+        wire = fastpath.encode(value)
+        want = _normalize(fastpath.decode(wire))
+        assert _normalize(cbor.decode(wire)) == want   # oracle reference
+        for segs in _segmentations(wire, rng):
+            assert _normalize(fastpath.decode(segs)) == want, segs
+        sp = ScatterPayload(fastpath.encode_vectored(value))
+        assert _normalize(fastpath.decode(sp)) == want
+        assert _normalize(fastpath.decode_segments(
+            iter([wire[:7], wire[7:]]))) == want
+
+
+def test_decode_prefix_over_segments():
+    a, b = fastpath.encode([1, [2, b"xy"]]), fastpath.encode("tail")
+    seq = a + b
+    segs = [seq[i : i + 3] for i in range(0, len(seq), 3)]
+    item, pos = fastpath.decode_prefix(segs)
+    assert _normalize(item) == [1, [2, b"xy"]] and pos == len(a)
+    item, pos = fastpath.decode_prefix(segs, pos)
+    assert item == "tail" and pos == len(seq)
+
+
+def test_segment_decode_error_parity_with_contiguous():
+    wire = fastpath.encode({"k": b"abcdef"})
+    # trailing bytes are detected without joining
+    with pytest.raises(cbor.CBORDecodeError, match="trailing"):
+        fastpath.decode([wire, b"\x01"])
+    # truncation mid-head, mid-payload, across boundaries
+    for cut in (1, len(wire) // 2, len(wire) - 1):
+        truncated = wire[:cut]
+        with pytest.raises(cbor.CBORDecodeError):
+            fastpath.decode([truncated[: cut // 2], truncated[cut // 2 :]])
+    for bad in (b"\x01\x01", b"\x19\x03", b"\xff", b"\x9f\x01"):
+        with pytest.raises(cbor.CBORDecodeError):
+            fastpath.decode([bad[i : i + 1] for i in range(len(bad))])
+
+
+def test_contiguous_payload_is_borrowed_boundary_crossing_is_owned():
+    arr = np.arange(50_000, dtype=np.float32)
+    # sender's vectored segments: payload is one contiguous segment
+    item = fastpath.decode(fastpath.encode_vectored(arr))
+    assert isinstance(item.value, memoryview)
+    assert np.shares_memory(np.frombuffer(item.value, "<f4"), arr)
+    # the same payload cut in half: decode gathers exactly once, owned
+    wire = fastpath.encode(arr)
+    half = len(wire) // 2
+    item = fastpath.decode([wire[:half], wire[half:]])
+    assert isinstance(item.value, bytes)
+    np.testing.assert_array_equal(np.frombuffer(item.value, "<f4"), arr)
+
+
+# -- from_cbor_segments for every message type ---------------------------------
+
+
+def _params_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a, np.float64),
+                                  np.asarray(b, np.float64))
+
+
+def _assert_same_message(a, b):
+    assert type(a) is type(b)
+    for f in a.__dataclass_fields__:
+        va, vb = getattr(a, f), getattr(b, f)
+        if isinstance(va, np.ndarray):
+            _params_equal(va, vb)
+        else:
+            assert va == vb, f
+
+
+@pytest.mark.parametrize("enc", [ParamsEncoding.TA_F16, ParamsEncoding.TA_F32,
+                                 ParamsEncoding.TA_F64, ParamsEncoding.TA_BF16,
+                                 ParamsEncoding.Q8, ParamsEncoding.DYNAMIC])
+def test_from_cbor_segments_differential_all_message_types(enc):
+    rng = np.random.default_rng(11)
+    params = rng.standard_normal(321).astype(np.float32)
+    meta = ModelMetadata(0.5, 0.25)
+    messages = [
+        FLGlobalModelUpdate(MID, 5, params, True),
+        FLLocalModelUpdate(MID, 5, params, meta),
+        FLModelChunk(MID, 5, 1, 3, 0xDEADBEEF, params),
+    ]
+    for m in messages:
+        wire = m.to_cbor(enc, fast=False)            # oracle bytes
+        want = type(m).from_cbor(wire)
+        for segs in _segmentations(wire, rng):
+            _assert_same_message(type(m).from_cbor_segments(segs), want)
+        # the sender's own scatter segments decode identically
+        _assert_same_message(
+            type(m).from_cbor_segments(
+                ScatterPayload(m.to_cbor_segments(enc))), want)
+
+
+def test_from_cbor_segments_control_messages():
+    rng = np.random.default_rng(12)
+    d = FLLocalDataSetUpdate(640, ModelMetadata(0.5, 0.25))
+    nack = FLChunkNack(MID, 3, 64, (1, 2, 3, 9, 40))
+    ack = FLChunkAck(MID, 3, 64)
+    for m in (d, nack, ack):
+        wire = m.to_cbor(fast=False)
+        want = type(m).from_cbor(wire)
+        for segs in _segmentations(wire, rng):
+            assert type(m).from_cbor_segments(segs) == want
+    # expect_num_chunks is enforced on the segmented path too
+    wire = nack.to_cbor()
+    segs = [wire[i : i + 1] for i in range(len(wire))]
+    assert FLChunkNack.from_cbor_segments(
+        segs, expect_num_chunks=64).missing == nack.missing
+    with pytest.raises(ValueError, match="!= this generation"):
+        FLChunkNack.from_cbor_segments(segs, expect_num_chunks=63)
+
+
+def test_exhaustive_single_splits_small_message():
+    """Every possible single cut of a small message — covers every
+    mid-head and mid-payload boundary explicitly."""
+    msg = FLGlobalModelUpdate(MID, 7, np.arange(17, dtype=np.float32), False)
+    wire = msg.to_cbor(ParamsEncoding.TA_F32, fast=False)
+    want = FLGlobalModelUpdate.from_cbor(wire)
+    for pos in range(len(wire) + 1):
+        got = FLGlobalModelUpdate.from_cbor_segments([wire[:pos], wire[pos:]])
+        _assert_same_message(got, want)
+
+
+# -- the wire path: blocks -> receive ring -> decode ---------------------------
+
+
+def test_block_ring_reassembles_blockwise_framing():
+    value = [np.arange(3000, dtype=np.float32), b"z" * 500, {"k": 1}]
+    sp = ScatterPayload(fastpath.encode_vectored(value))
+    ring = BlockReceiveRing()
+    for msg in iter_blockwise_messages(sp, uri="fl/model"):
+        ring.feed(msg)
+    assert len(ring) == len(sp)
+    assert ring.num_blocks == -(-len(sp) // 64)
+    want = _normalize(fastpath.decode(sp.tobytes()))
+    assert _normalize(fastpath.decode(ring)) == want
+    assert ring.tobytes() == sp.tobytes()
+    ring.clear()
+    assert len(ring) == 0 and ring.num_blocks == 0
+
+
+def test_block_ring_coalesces_blocks_and_decode_borrows_arena():
+    """An uninterrupted block run coalesces into one arena segment, so the
+    multi-KB params payload decodes as a borrowed view of the ring's own
+    memory — no join, no gather."""
+    arr = np.arange(20_000, dtype=np.float32)
+    wire = fastpath.encode(arr)
+    ring = BlockReceiveRing()
+    for i in range(0, len(wire), 64):
+        ring.add_block(wire[i : i + 64])
+    segs = ring.segments()
+    assert len(segs) == 1                       # one arena, many blocks
+    item = fastpath.decode(ring)
+    assert isinstance(item.value, memoryview)   # borrowed, not gathered
+    np.testing.assert_array_equal(np.frombuffer(item.value, "<f4"), arr)
+    # appends after a read start a new arena (exported views pin the old
+    # one); the logical byte stream stays intact
+    tail = fastpath.encode(b"tail-item")
+    for i in range(0, len(tail), 64):
+        ring.add_block(tail[i : i + 64])
+    assert ring.tobytes() == wire + tail
+    item, pos = fastpath.decode_prefix(ring)
+    assert pos == len(wire)
+    assert bytes(fastpath.decode_prefix(ring, pos)[0]) == b"tail-item"
+
+
+def test_deliver_payload_end_to_end_ring_decode():
+    params = np.random.default_rng(3).standard_normal(5000).astype(np.float32)
+    msg = FLGlobalModelUpdate(MID, 2, params, True)
+    payload = ScatterPayload(msg.to_cbor_segments(ParamsEncoding.TA_F32))
+    link = LossyLink(drop_prob=0.2, seed=9)
+    stats, ring = link.deliver_payload(payload, uri="fl/model")
+    assert not stats.failed_messages and ring is not None
+    assert len(ring) == len(payload)
+    back = FLGlobalModelUpdate.from_cbor_segments(ring)
+    _assert_same_message(back, FLGlobalModelUpdate.from_cbor(
+        payload.tobytes()))
+    # stats are identical to the delivery-less send on the same seed
+    stats2 = LossyLink(drop_prob=0.2, seed=9).send_payload(
+        payload, uri="fl/model")
+    assert vars(stats) == vars(stats2)
+
+
+def test_deliver_payload_failure_returns_no_ring():
+    link = LossyLink(drop_prob=1.0, seed=0)
+    stats, ring = link.deliver_payload(b"\x01" * 500, uri="fl/x")
+    assert stats.failed_messages == 1 and ring is None
+
+
+# -- gather-into-model reassembly ----------------------------------------------
+
+
+def test_gather_assembler_any_arrival_order():
+    params = np.random.default_rng(21).standard_normal(10_000).astype(
+        np.float32)
+    chunks = list(chunk_stream(MID, 1, params, 1024))
+    n = len(chunks)
+    orders = [
+        list(range(n)),
+        list(reversed(range(n))),                     # final chunk first
+        [n - 1] + list(range(n - 1)),                 # parked-final path
+        np.random.default_rng(0).permutation(n).tolist(),
+    ]
+    for order in orders:
+        asm = ChunkAssembler()
+        done = None
+        for i in order:
+            out = asm.add(chunks[i])
+            done = out if out is not None else done
+        assert done is not None, order
+        assert done.dtype == np.dtype("<f4")
+        assert done.tobytes() == params.tobytes()
+
+
+def test_gather_assembler_receiver_peak_is_one_model_buffer():
+    """The acceptance property, tier-1 scale: receiver peak ≈ one model
+    buffer + O(chunk), not 2× model (the old buffer-then-concatenate)."""
+    n_params = 250_000
+    model_bytes = n_params * 4
+    params = np.zeros(n_params, dtype=np.float32)
+    chunks = list(chunk_stream(MID, 1, params, 4096))
+
+    def assemble():
+        asm = ChunkAssembler()
+        for c in chunks:
+            out = asm.add(c)
+        return out
+
+    assemble()  # warm allocators
+    tracemalloc.start()
+    assemble()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert peak < model_bytes + 256 * 1024, \
+        f"receiver peak {peak} is not one model buffer ({model_bytes})"
+
+
+def test_gather_assembler_dtype_mismatched_sender():
+    """A sender whose decoded chunks arrive as f64 (the from_cbor shape)
+    costs one per-chunk conversion, never a second model buffer."""
+    params = np.random.default_rng(5).standard_normal(6000).astype(np.float32)
+    chunks = list(chunk_stream(MID, 1, params, 1024))
+    wide = [FLModelChunk(c.model_id, c.round, c.chunk_index, c.num_chunks,
+                         c.crc32, c.params.astype(np.float64))
+            for c in chunks]
+    asm = ChunkAssembler()
+    done = None
+    for c in wide:
+        out = asm.add(c)
+        done = out if out is not None else done
+    assert done is not None
+    assert done.tobytes() == params.tobytes()
+
+    model_bytes = params.size * 4
+    big = np.zeros(200_000, dtype=np.float32)
+    big_wide = [FLModelChunk(c.model_id, c.round, c.chunk_index, c.num_chunks,
+                             c.crc32, np.asarray(c.params, np.float64))
+                for c in chunk_stream(MID, 1, big, 4096)]
+
+    def assemble():
+        asm = ChunkAssembler()
+        for c in big_wide:
+            out = asm.add(c)
+        return out
+
+    assemble()
+    tracemalloc.start()
+    assemble()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    # one model buffer + one chunk's conversion transients, not 2× model
+    assert peak < big.size * 4 + 256 * 1024
+
+
+def test_gather_assembler_rejects_inconsistent_geometry():
+    params = np.arange(5000, dtype=np.float32)
+    chunks = list(chunk_stream(MID, 1, params, 1024))
+    n = chunks[0].num_chunks
+
+    def forged(idx, arr):
+        arr = np.ascontiguousarray(arr, dtype="<f4")
+        return FLModelChunk(MID, 1, idx, n, zlib.crc32(
+            memoryview(arr).cast("B")), arr)
+
+    # non-final chunk with the wrong width
+    asm = ChunkAssembler()
+    asm.add(chunks[0])
+    with pytest.raises(ValueError, match="generation width"):
+        asm.add(forged(1, np.arange(77)))
+    # empty non-final / empty final chunks
+    with pytest.raises(ValueError, match="empty non-final"):
+        ChunkAssembler().add(forged(0, np.empty(0)))
+    with pytest.raises(ValueError, match="empty final"):
+        ChunkAssembler().add(forged(n - 1, np.empty(0)))
+    # final chunk wider than the slot
+    asm = ChunkAssembler()
+    asm.add(chunks[0])
+    with pytest.raises(ValueError, match="final chunk"):
+        asm.add(forged(n - 1, np.arange(2000)))
+    # parked final inconsistent with the width learned later: the poisoned
+    # generation is dropped whole and a clean retransmit reassembles
+    asm = ChunkAssembler()
+    asm.add(forged(n - 1, np.arange(2000)))      # parked, larger than slot
+    with pytest.raises(ValueError, match="final chunk"):
+        asm.add(chunks[0])
+    done = None
+    for c in chunks:
+        out = asm.add(c)
+        done = out if out is not None else done
+    assert done is not None and done.tobytes() == params.tobytes()
+
+
+def test_gather_assembler_bounds_wire_claimed_geometry():
+    """The gather buffer is sized from wire-claimed num_chunks ×
+    chunk_elems: a single forged chunk must not be able to trigger an
+    arbitrarily large allocation (the NACK decoder's untrusted-size rule,
+    applied to the assembler)."""
+    from repro.core.messages import MAX_NACK_CHUNKS
+    from repro.fl.chunking import MAX_ASSEMBLY_ELEMS
+
+    payload = np.zeros(1024, dtype="<f4")
+    crc = zlib.crc32(memoryview(payload).cast("B"))
+
+    def forged(num_chunks, idx=0):
+        return FLModelChunk(MID, 1, idx, num_chunks, crc, payload)
+
+    # unvouched: capacity capped at MAX_ASSEMBLY_ELEMS...
+    asm = ChunkAssembler()
+    with pytest.raises(ValueError, match="MAX_ASSEMBLY_ELEMS"):
+        asm.add(forged(MAX_ASSEMBLY_ELEMS // 1024 + 1))
+    # ...and num-chunks at the protocol cap (before any geometry math)
+    with pytest.raises(ValueError, match="MAX_NACK_CHUNKS"):
+        asm.add(forged(MAX_NACK_CHUNKS + 1))
+    # the poisoned claim leaves no state behind: a legit generation works
+    params = np.arange(5000, dtype=np.float32)
+    done = None
+    for c in chunk_stream(MID, 2, params, 1024):
+        out = asm.add(c)
+        done = out if out is not None else done
+    assert done is not None and done.tobytes() == params.tobytes()
+
+    # vouched model size: anything that could not be that model is refused
+    asm = ChunkAssembler(expected_elems=5000)
+    with pytest.raises(ValueError, match="cannot be a 5000-element model"):
+        asm.add(forged(100))                     # 100×1024 ≫ 5000
+    done = None
+    for c in chunk_stream(MID, 2, params, 1024):
+        out = asm.add(c)
+        done = out if out is not None else done
+    assert done is not None and done.tobytes() == params.tobytes()
+    # every legitimate chunking of the vouched size passes, including the
+    # exact-fit case (final chunk == full width)
+    for elems in (1, 7, 1000, 1024, 2500, 5000, 9999):
+        asm = ChunkAssembler(expected_elems=5000)
+        done = None
+        for c in chunk_stream(MID, 3, params, elems):
+            out = asm.add(c)
+            done = out if out is not None else done
+        assert done is not None and done.tobytes() == params.tobytes(), elems
+
+
+def test_fl_endpoints_vouch_their_model_size():
+    """FLClient and the server's uplink endpoint pass their own parameter
+    count to the assembler — forged geometry bounces off both."""
+    from repro.fl.server import FLServer, OrchestrationConfig
+
+    server = FLServer(OrchestrationConfig(num_clients=1, clients_per_round=1),
+                      np.zeros(2000, np.float32))
+    ep = server.uplink_endpoint(0)
+    assert ep.assembler._expected_elems == 2000
+    payload = np.zeros(1024, dtype="<f4")
+    forged = FLModelChunk(server.model_id, server.round, 0, 4096,
+                          zlib.crc32(memoryview(payload).cast("B")), payload)
+    with pytest.raises(ValueError, match="cannot be a 2000-element model"):
+        ep.receive_chunk(forged)
+    done = False
+    for c in chunk_stream(server.model_id, server.round,
+                          np.arange(2000, dtype=np.float32), 512):
+        done = ep.receive_chunk(c) or done
+    assert done
+
+
+def test_gather_assembler_result_outlives_assembler_state():
+    params = np.arange(3000, dtype=np.float32)
+    chunks = list(chunk_stream(MID, 1, params, 1024))
+    asm = ChunkAssembler()
+    done = None
+    for c in chunks:
+        out = asm.add(c)
+        done = out if out is not None else done
+    assert asm._buf is None          # assembler released its reference
+    assert done.tobytes() == params.tobytes()
+    # a following generation cannot touch the returned vector
+    next_params = params + 1.0
+    for c in chunk_stream(MID, 2, next_params, 1024):
+        asm.add(c)
+    assert done.tobytes() == params.tobytes()
+
+
+# -- hypothesis property (optional dev dep) ------------------------------------
+
+
+try:
+    import hypothesis
+except ImportError:
+    hypothesis = None
+
+if hypothesis is not None:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    _scalars = st.one_of(
+        st.integers(min_value=-2**63, max_value=2**64 - 1),
+        st.floats(allow_nan=False),
+        st.booleans(), st.none(), st.binary(max_size=512),
+        st.text(max_size=48),
+    )
+    _values = st.recursive(
+        _scalars,
+        lambda children: st.one_of(
+            st.lists(children, max_size=5),
+            st.dictionaries(st.integers(0, 1000), children, max_size=5),
+            st.builds(Tag, st.integers(0, 2**32), children),
+        ),
+        max_leaves=20,
+    )
+
+    @settings(deadline=None, max_examples=120)
+    @given(_values, st.data())
+    def test_property_any_segmentation_decodes_identically(value, data):
+        wire = fastpath.encode(value)
+        cuts = sorted(data.draw(st.lists(
+            st.integers(0, len(wire)), max_size=8), label="cuts"))
+        bounds = [0] + cuts + [len(wire)]
+        segs = [wire[a:b] for a, b in zip(bounds, bounds[1:])]
+        assert _normalize(fastpath.decode(segs)) == \
+            _normalize(fastpath.decode(wire))
+
+    @settings(deadline=None, max_examples=40)
+    @given(st.data())
+    def test_property_gather_assembly_order_invariant(data):
+        n_params = data.draw(st.integers(1, 3000), label="n_params")
+        elems = data.draw(st.integers(1, 800), label="chunk_elems")
+        params = np.arange(n_params, dtype=np.float32)
+        chunks = list(chunk_stream(MID, 1, params, elems))
+        order = data.draw(st.permutations(range(len(chunks))), label="order")
+        asm = ChunkAssembler()
+        done = None
+        for i in order:
+            out = asm.add(chunks[i])
+            done = out if out is not None else done
+        assert done is not None
+        assert done.tobytes() == params.tobytes()

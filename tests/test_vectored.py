@@ -369,9 +369,18 @@ def test_assembler_buffers_are_owned_not_sender_aliases():
     asm = ChunkAssembler()
     asm.add(chunks[0])
     params[:] = -1.0   # sender mutates after partial delivery
-    assert not np.may_share_memory(asm._parts[0], params)
-    np.testing.assert_array_equal(asm._parts[0],
+    assert not np.may_share_memory(asm._buf, params)
+    np.testing.assert_array_equal(asm._buf[:1024],
                                   np.arange(1024, dtype="<f4"))
+    # the final (short) chunk parked before geometry is known is owned too
+    params2 = np.arange(2500, dtype="<f4")
+    tail = list(chunk_stream(MID, 2, params2, 1024))[-1]
+    asm2 = ChunkAssembler()
+    asm2.add(tail)
+    params2[:] = -1.0
+    assert not np.may_share_memory(asm2._pending_final, params2)
+    np.testing.assert_array_equal(asm2._pending_final,
+                                  np.arange(2048, 2500, dtype="<f4"))
 
 
 def test_write_segments_beyond_iov_max(tmp_path):
