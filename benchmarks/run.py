@@ -25,12 +25,15 @@ ENCODE_PATHS = ("encode_vectored_f32", "numpy_ta_f32")
 REGRESSION_FACTOR = 2.0
 
 
-def check(factor: float = REGRESSION_FACTOR) -> int:
+def check(factor: float = REGRESSION_FACTOR,
+          out: str | None = None) -> int:
     """Fresh codec bench vs committed BENCH_codec.json.
 
     Returns 0 when every decode and encode path is within ``factor`` of
     the committed throughput, 1 on a regression (or a missing/malformed
-    committed record).
+    committed record).  ``out`` writes the fresh record to a file *before*
+    comparing — CI uploads it as an artifact whether the gate passes or
+    not, without paying for a second bench run.
     """
     from benchmarks import bench_codec_throughput
 
@@ -39,6 +42,9 @@ def check(factor: float = REGRESSION_FACTOR) -> int:
         return 1
     committed = json.loads(BENCH_JSON.read_text())
     _, fresh = bench_codec_throughput.run_json()
+    if out:
+        Path(out).write_text(json.dumps(fresh, indent=2) + "\n")
+        print(f"check: wrote fresh record to {out}")
     failures = {"decode": [], "encode": []}
     compared = 0
     for size, entry in committed.get("sizes", {}).items():
@@ -76,9 +82,19 @@ def main() -> int:
                         help="compare a fresh codec bench against the "
                              "committed BENCH_codec.json; exit 1 on >2x "
                              "decode-throughput regression")
+    parser.add_argument("--factor", type=float, default=REGRESSION_FACTOR,
+                        help="regression factor for --check (default "
+                             f"{REGRESSION_FACTOR}; CI uses a looser bound "
+                             "because the committed baseline was measured "
+                             "on different hardware)")
+    parser.add_argument("--out", default=None,
+                        help="with --check: also write the freshly "
+                             "measured record to this path (written before "
+                             "the comparison, so a failing gate still "
+                             "produces the artifact)")
     args = parser.parse_args()
     if args.check:
-        return check()
+        return check(args.factor, args.out)
 
     from benchmarks import (
         bench_codec_throughput,
@@ -98,6 +114,7 @@ def main() -> int:
         ("table2_lenet5", bench_lenet.run),
         ("codec_throughput", codec_run),
         ("fl_round_accounting", bench_fl_round.run),
+        ("uplink_airtime_shared_medium", bench_fl_round.run_uplink_airtime),
     ]
     for name, fn in sections:
         t0 = time.time()

@@ -1,0 +1,33 @@
+"""Repo-level pytest configuration.
+
+``--require-hypothesis`` (or ``REQUIRE_HYPOTHESIS=1`` in the environment)
+turns the property-test modules' optional-dependency guards into a hard
+error: locally the suite runs without ``hypothesis`` installed (the guarded
+modules skip), but CI installs ``requirements-dev.txt`` and passes this
+flag so those tests can never silently skip out of the run again.
+"""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+
+def pytest_addoption(parser: pytest.Parser) -> None:
+    parser.addoption(
+        "--require-hypothesis", action="store_true", default=False,
+        help="error out (instead of skipping the property-test modules) "
+             "when the optional 'hypothesis' dependency is not installed")
+
+
+def pytest_configure(config: pytest.Config) -> None:
+    required = (config.getoption("--require-hypothesis")
+                or os.environ.get("REQUIRE_HYPOTHESIS", "0") not in ("", "0"))
+    if not required:
+        return
+    try:
+        import hypothesis  # noqa: F401
+    except ImportError as exc:
+        raise pytest.UsageError(
+            "--require-hypothesis: the 'hypothesis' package is not "
+            "installed; run `pip install -r requirements-dev.txt`") from exc

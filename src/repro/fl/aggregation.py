@@ -1,5 +1,14 @@
 """Model aggregation: weighted FedAvg (paper §V / FedAvg [15]) on flat
-parameter vectors, plus compressed-update aggregation with error feedback."""
+parameter vectors, plus compressed-update aggregation with error feedback.
+
+``RunningFedAvg`` is the incremental form: clients' updates are folded
+into a fixed-size accumulator as each one finishes reassembly, so server
+peak memory is O(accumulator + one in-flight model) instead of
+all-clients-resident — and the accumulation is *order-independent* down
+to the final f32 bit, which is what lets the interleaved uplink scheduler
+(clients complete in medium-arbitration order) produce byte-identical
+global models to a sequential schedule.
+"""
 from __future__ import annotations
 
 from typing import Sequence
@@ -7,19 +16,72 @@ from typing import Sequence
 import numpy as np
 
 
+class RunningFedAvg:
+    """Incremental weighted FedAvg with an order-independent accumulator.
+
+    Each contribution ``dataset_size * params`` is folded into a
+    double-double (TwoSum-compensated) f64 accumulator.  TwoSum is an
+    error-free transformation, so the (hi, lo) pair tracks the running sum
+    to ~106 bits — far below half-ulp of the final f32 rounding for
+    FL-scale magnitudes — making the result independent of the order
+    clients complete in (pinned by a permutation test).
+
+    Memory: two f64 vectors (16 B/param) regardless of client count,
+    versus one resident f32 model per client (4 B/param each) for batch
+    aggregation — the incremental form wins for more than 4 reporters and
+    is O(1) in the client count either way.
+    """
+
+    def __init__(self, shape) -> None:
+        self._hi = np.zeros(shape, np.float64)
+        self._lo = np.zeros(shape, np.float64)
+        self._weight = 0.0
+        self.n_updates = 0
+
+    @property
+    def total_weight(self) -> float:
+        return self._weight
+
+    def add(self, params: np.ndarray, dataset_size: int) -> None:
+        """Fold one client's update in; ``params`` may be released (e.g.
+        back to a gather-buffer pool) as soon as this returns."""
+        if dataset_size <= 0:
+            raise ValueError("dataset sizes must be positive")
+        x = np.asarray(params)
+        if x.shape != self._hi.shape:
+            raise ValueError(
+                f"update shape {x.shape} != accumulator {self._hi.shape}")
+        # the product rounds per-client (deterministically, independent of
+        # completion order); only the *sum* ordering threatens bit-identity,
+        # and TwoSum keeps that exact
+        p = np.multiply(x, float(dataset_size), dtype=np.float64)
+        s = self._hi + p
+        z = s - self._hi
+        self._lo += (self._hi - (s - z)) + (p - z)
+        self._hi = s
+        # keep the exact weight (sizes are usually ints, but fractional
+        # weights must scale numerator and denominator consistently)
+        self._weight += dataset_size
+        self.n_updates += 1
+
+    def result(self) -> np.ndarray:
+        if not self.n_updates:
+            raise ValueError("no updates to aggregate")
+        return ((self._hi + self._lo) / self._weight).astype(np.float32)
+
+
 def fedavg(updates: Sequence[np.ndarray],
            dataset_sizes: Sequence[int]) -> np.ndarray:
-    """Weighted average of flat parameter vectors, weights = |D_k| (FedAvg)."""
+    """Weighted average of flat parameter vectors, weights = |D_k| (FedAvg).
+
+    Batch convenience over ``RunningFedAvg`` — one aggregation arithmetic
+    everywhere, so batch and incremental paths agree bit-for-bit."""
     if not updates:
         raise ValueError("no updates to aggregate")
-    w = np.asarray(dataset_sizes, np.float64)
-    if (w <= 0).any():
-        raise ValueError("dataset sizes must be positive")
-    w = w / w.sum()
-    out = np.zeros_like(updates[0], dtype=np.float64)
-    for u, wi in zip(updates, w):
-        out += wi * u.astype(np.float64)
-    return out.astype(np.float32)
+    agg = RunningFedAvg(np.asarray(updates[0]).shape)
+    for u, w in zip(updates, dataset_sizes):
+        agg.add(u, w)
+    return agg.result()
 
 
 def fedavg_delta(base: np.ndarray, deltas: Sequence[np.ndarray],

@@ -45,8 +45,9 @@ from repro.core.messages import (
     FLChunkNack,
     FLModelChunk,
 )
-from repro.transport.coap import Code, TransferStats
-from repro.transport.network import LossyLink
+from repro.transport.coap import BlockReceiveRing, Code, TransferStats
+from repro.transport.medium import MediumReport, SharedMedium
+from repro.transport.network import LossyLink, iter_tagged_frames
 
 # Window budget: the initial full-stream window plus up to this many repair
 # windows before incomplete receivers are treated as dropouts for the round.
@@ -61,6 +62,61 @@ MAX_REPAIR_WINDOWS = 10
 # ``np.empty``.  2^27 elements = a 512 MiB f32 buffer, far beyond any
 # model a constrained link carries in one generation.
 MAX_ASSEMBLY_ELEMS = 1 << 27
+
+
+class GatherBufferPool:
+    """Bounded free list of gather buffers, keyed by exact capacity.
+
+    The uplink gather buffer has a short life: the assembler fills it, the
+    incremental aggregator folds it into the running sum, and then it is
+    garbage — only for an identically-shaped buffer to be allocated for
+    the next client (and every client of every following round, since
+    model geometry never changes mid-run).  Routing the spent buffer back
+    through this pool drops steady-state allocation on the reassembly path
+    to zero (pinned by a tracemalloc test).
+
+    Safety: ``release`` must only be called once nothing reads the buffer
+    anymore — the next ``acquire`` hands it out for overwriting.  Buffers
+    are keyed by *exact* element capacity; a geometry change simply
+    misses and allocates fresh (stale capacities age out by displacement,
+    bounded by ``max_buffers``).
+    """
+
+    __slots__ = ("_free", "_count", "max_buffers", "hits", "misses")
+
+    def __init__(self, max_buffers: int = 8) -> None:
+        self._free: dict[int, list[np.ndarray]] = {}
+        self._count = 0
+        self.max_buffers = max_buffers
+        self.hits = 0
+        self.misses = 0
+
+    def acquire(self, capacity: int) -> np.ndarray | None:
+        """A pooled ``<f4`` buffer of exactly ``capacity`` elements
+        (contents undefined), or None on a miss."""
+        lst = self._free.get(capacity)
+        if lst:
+            self.hits += 1
+            self._count -= 1
+            return lst.pop()
+        self.misses += 1
+        return None
+
+    def release(self, arr: np.ndarray | None) -> None:
+        """Return a spent gather buffer (or a completed-generation view of
+        one — the base buffer is what gets pooled).  Arrays the pool
+        cannot re-issue (wrong dtype/layout, borrowed memory) are ignored."""
+        if arr is None:
+            return
+        buf = arr.base if isinstance(arr.base, np.ndarray) else arr
+        if (not isinstance(buf, np.ndarray) or buf.base is not None
+                or buf.dtype != np.dtype("<f4") or buf.ndim != 1
+                or not buf.flags.c_contiguous or not buf.flags.writeable):
+            return
+        if self._count >= self.max_buffers:
+            return
+        self._free.setdefault(buf.size, []).append(buf)
+        self._count += 1
 
 
 def chunk_stream(model_id: uuid.UUID, round_: int, params: np.ndarray,
@@ -121,8 +177,10 @@ class ChunkAssembler:
     conjure a multi-TB ``np.empty`` out of one small chunk.
     """
 
-    def __init__(self, *, expected_elems: int | None = None) -> None:
+    def __init__(self, *, expected_elems: int | None = None,
+                 pool: GatherBufferPool | None = None) -> None:
         self._expected_elems = expected_elems
+        self._pool = pool
         self._key: tuple | None = None           # (model_id, round, n)
         self._buf: np.ndarray | None = None      # gather target, <f4 flat
         self._received: set[int] = set()
@@ -174,7 +232,8 @@ class ChunkAssembler:
                 f"generation capacity {capacity} elements exceeds "
                 f"MAX_ASSEMBLY_ELEMS ({MAX_ASSEMBLY_ELEMS}) and no "
                 f"expected model size was given")
-        self._buf = np.empty(capacity, dtype="<f4")
+        buf = self._pool.acquire(capacity) if self._pool is not None else None
+        self._buf = buf if buf is not None else np.empty(capacity, dtype="<f4")
         if self._pending_final is not None:
             fs = self._pending_final.size
             if not 1 <= fs <= elems:
@@ -432,14 +491,257 @@ def run_selective_repeat(
     return report
 
 
+class UplinkSession:
+    """One client's selective-repeat uplink as an explicit state machine.
+
+    ``run_selective_repeat`` drives one transfer to completion inline;
+    this is the same window/NACK logic unrolled so a scheduler can step
+    *many* transfers frame-by-frame over one ``SharedMedium``
+    (``run_interleaved_uplinks``).  Differences from the inline engine,
+    both inherent to a real shared medium:
+
+    * loss is per *frame* (NON — no link-layer retry), so a chunk can
+      arrive with holes; its reorder-aware ``BlockReceiveRing`` persists
+      across repair windows, and the NACK-triggered re-send fills exactly
+      the missing block NUMs (already-held blocks count as duplicates and
+      are dropped) — a chunk completes once the union of its transmissions
+      covers every block;
+    * delivered chunks are decoded *from their rings*
+      (``from_cbor_segments`` over the arena — borrowed views, no join)
+      instead of fanning out sender-side objects: the receive path is the
+      production shape, wire bytes in, model slots out.
+
+    Frames are generated lazily (one in existence at a time), so a window
+    over a multi-MB model still costs O(block) transient sender memory.
+    """
+
+    def __init__(self, client_id: int, chunks: Sequence[FLModelChunk],
+                 receiver, *, uri: str = "fl/model/upload",
+                 feedback_uri: str = "fl/model/upload/fb",
+                 code: Code = Code.POST,
+                 max_windows: int = 1 + MAX_REPAIR_WINDOWS,
+                 validate: bool = True) -> None:
+        if not chunks:
+            raise ValueError("empty chunk stream")
+        self.client_id = client_id
+        self.chunks = list(chunks)
+        self.receiver = receiver
+        self.uri = uri
+        self.feedback_uri = feedback_uri
+        self.code = code
+        self.max_windows = max_windows
+        self.validate = validate
+        first = self.chunks[0]
+        self.model_id = first.model_id
+        self.round = first.round
+        self.num_chunks = first.num_chunks
+        self.wires = [ScatterPayload(c.to_cbor_segments())
+                      for c in self.chunks]
+        if validate:
+            for w in self.wires:
+                _validate(w, "FL_Model_Chunk")
+        self.report = ChunkTransferReport(
+            num_chunks=self.num_chunks,
+            initial_payload_bytes=sum(len(w) for w in self.wires))
+        self.window = 0
+        self.to_send: list[int] = list(range(self.num_chunks))
+        self.acked = False          # the sender saw the receiver's ACK
+        self.assembled = False      # the receiver completed reassembly
+        self.rings: dict[int, BlockReceiveRing] = {}   # in-flight chunks
+        self.delivered_chunks: set[int] = set()
+        self.ready_at = 0.0         # turnaround gate for the next window
+        self.done_at: float | None = None
+        self._frames = iter(())     # lazy frame source, current window
+        self._lookahead = None
+        self._window_stats = TransferStats()
+        self._forced: dict[int, bool] = {}   # chunk_drop verdicts, 1 window
+
+    @property
+    def finished(self) -> bool:
+        return self.acked or self.window >= self.max_windows
+
+    @property
+    def has_frame(self) -> bool:
+        return self._lookahead is not None
+
+    def _advance(self) -> None:
+        self._lookahead = next(self._frames, None)
+
+
+def _enqueue_window(medium: SharedMedium, s: UplinkSession) -> None:
+    """Stage the session's current window: chunk_drop verdicts, payload
+    accounting, and the lazy tagged-frame source."""
+    s._window_stats = TransferStats(
+        messages=len(s.to_send),
+        payload_bytes=sum(len(s.wires[i]) for i in s.to_send))
+    s._forced = {}
+    if s.to_send and medium.chunk_drop is not None:
+        s._forced = {i: bool(medium.chunk_drop(s.uri, s.window, i,
+                                               s.client_id))
+                     for i in s.to_send}
+    s.report.chunk_sends += len(s.to_send)
+    s.report.payload_bytes += s._window_stats.payload_bytes
+    s._frames = iter_tagged_frames(
+        [s.wires[i] for i in s.to_send], uri=s.uri, client=s.client_id,
+        window=s.window, indices=s.to_send, code=s.code)
+    s._advance()
+
+
+def _deliver(by_client: dict[int, UplinkSession], frame,
+             on_complete) -> None:
+    """Route one released frame into its session's per-chunk reorder-aware
+    ring; decode + hand the chunk to the receiver once the ring closes."""
+    sess = by_client.get(frame.client)
+    if sess is None or frame.chunk_index in sess.delivered_chunks:
+        return                       # late duplicate of a finished chunk
+    ring = sess.rings.get(frame.chunk_index)
+    if ring is None:
+        ring = sess.rings[frame.chunk_index] = BlockReceiveRing()
+    ring.feed(frame.msg)             # slots by Block1 NUM; dups dropped
+    if not ring.complete:
+        return                       # gap: wait for repair to fill it
+    msg = FLModelChunk.from_cbor_segments(ring.segments())
+    del sess.rings[frame.chunk_index]   # arena freed once msg is consumed
+    sess.delivered_chunks.add(frame.chunk_index)
+    done = sess.receiver.receive_chunk(msg)
+    if done and not sess.assembled:
+        sess.assembled = True
+        if on_complete is not None:
+            on_complete(sess)
+
+
+def _window_feedback(medium: SharedMedium, s: UplinkSession,
+                     record) -> None:
+    """Window boundary: account the data window, run the NACK/ACK
+    round-trip over the medium, and stage the next window (or finish)."""
+    w = s._window_stats
+    if record is not None and (w.frames or w.messages):
+        record("FL_Model_Chunk", w)
+    medium.stats.messages += w.messages
+    medium.stats.payload_bytes += w.payload_bytes
+    s.report.stats.add(w)
+    s._window_stats = TransferStats()
+    fb = s.receiver.chunk_feedback(s.model_id, s.round, s.num_chunks)
+    is_ack = isinstance(fb, FLChunkAck)
+    if is_ack and not s.report.completed:
+        s.report.completed = [0]     # ground truth: reassembly finished
+    payload = fb.to_cbor()
+    mtype = "FL_Chunk_Ack" if is_ack else "FL_Chunk_Nack"
+    if s.validate:
+        _validate(payload, mtype)
+    delivered, fstats = medium.transmit_payload(
+        payload, uri=s.feedback_uri, code=Code.CONTENT)
+    if record is not None:
+        record(mtype, fstats)
+    s.report.stats.add(fstats)
+    s.report.control_messages += 1
+    s.report.control_payload_bytes += len(payload)
+    s.window += 1
+    s.report.windows = s.window
+    if not delivered:
+        s.report.lost_feedback += 1
+        s.to_send = []               # learned nothing: poll again next window
+    elif is_ack:
+        s.acked = True
+    else:
+        back = FLChunkNack.from_cbor(payload, expect_num_chunks=s.num_chunks)
+        s.to_send = sorted(back.missing)
+    if s.finished:
+        s.done_at = medium.clock
+        s._frames = iter(())
+        s._lookahead = None
+    else:
+        _enqueue_window(medium, s)
+        # a repair window may transmit immediately (the feedback gap was
+        # already paid); an *empty* one (lost feedback) waits a poll
+        # interval before asking the receiver again
+        s.ready_at = (medium.clock if s.has_frame
+                      else medium.clock + medium.turnaround_s)
+
+
+def run_interleaved_uplinks(
+    medium: SharedMedium,
+    sessions: Sequence[UplinkSession],
+    *,
+    sequential: bool = False,
+    record: Callable[[str, TransferStats], None] | None = None,
+    on_complete: Callable[[UplinkSession], None] | None = None,
+) -> MediumReport:
+    """Drive many clients' selective-repeat uplinks over one shared medium.
+
+    ``sequential=False`` (the point of this scheduler): every session
+    whose turnaround gate has passed contends for each frame slot, so one
+    client's feedback gap is filled with another client's frames — round
+    airtime approaches the busy floor (total frames on air) instead of
+    busy + every gap serialized.  ``sequential=True`` runs the *same*
+    code path restricted to one session at a time (strict back-to-back),
+    which is the baseline the airtime win is measured against.
+
+    ``on_complete(session)`` fires the moment a session's receiver
+    finishes reassembly — mid-schedule — which is what lets the server
+    fold each model into the running aggregate and recycle the gather
+    buffer while other clients are still transmitting.
+    """
+    sessions = list(sessions)
+    by_client: dict[int, UplinkSession] = {}
+    for s in sessions:
+        if s.client_id in by_client:
+            raise ValueError(f"duplicate session client id {s.client_id}")
+        by_client[s.client_id] = s
+    for s in sessions:
+        s.ready_at = medium.clock
+        _enqueue_window(medium, s)
+    while True:
+        active = [s for s in sessions if not s.finished]
+        if not active:
+            break
+        if sequential:
+            cands = active[:1]
+            if cands[0].ready_at > medium.clock:
+                medium.advance_to(cands[0].ready_at)
+        else:
+            cands = [s for s in active if s.ready_at <= medium.clock]
+            if not cands:
+                medium.advance_to(min(s.ready_at for s in active))
+                continue
+        s = by_client[medium.arbitrate([c.client_id for c in cands])]
+        if s.has_frame:
+            frame = s._lookahead
+            s._advance()
+            for fr in medium.transmit(frame, s._window_stats,
+                                      drop=s._forced.get(frame.chunk_index)):
+                _deliver(by_client, fr, on_complete)
+            if not s.has_frame:
+                # window boundary: release this client's jittered
+                # stragglers (its feedback logically follows every frame
+                # of the window), then gate the feedback behind the
+                # receiver's turnaround — reassembly checks + response
+                # guard time.  THIS is the gap interleaving reclaims:
+                # sequential schedules idle through it, concurrent ones
+                # fill it with other clients' frames.
+                for fr in medium.flush(s.client_id):
+                    _deliver(by_client, fr, on_complete)
+                s.ready_at = medium.clock + medium.turnaround_s
+        else:
+            _window_feedback(medium, s, record)   # turnaround passed
+    for fr in medium.flush():      # post-ACK jitter releases: late dups
+        _deliver(by_client, fr, on_complete)
+    return MediumReport(
+        airtime_s=medium.clock, busy_s=medium.busy_s, idle_s=medium.idle_s,
+        per_client_done_s={s.client_id: s.done_at for s in sessions},
+        stats=medium.stats)
+
+
 class AssemblerReceiver:
     """Minimal receiver endpoint: a bare ``ChunkAssembler`` plus the
     assembled result — what the loss-sweep harness and the server's uplink
     reassembly use.  ``expected_elems`` is the model size the receiver
     vouches for (bounds the gather allocation against forged geometry)."""
 
-    def __init__(self, *, expected_elems: int | None = None) -> None:
-        self.assembler = ChunkAssembler(expected_elems=expected_elems)
+    def __init__(self, *, expected_elems: int | None = None,
+                 pool: GatherBufferPool | None = None) -> None:
+        self.assembler = ChunkAssembler(expected_elems=expected_elems,
+                                        pool=pool)
         self.assembled: np.ndarray | None = None
 
     def receive_chunk(self, msg: FLModelChunk) -> bool:

@@ -25,7 +25,7 @@ from repro.core.messages import (
     ModelMetadata,
     ParamsEncoding,
 )
-from repro.fl.chunking import ChunkAssembler, chunk_stream
+from repro.fl.chunking import ChunkAssembler, UplinkSession, chunk_stream
 from repro.core.params_codec import (
     ErrorFeedback,
     ParamsSpec,
@@ -129,6 +129,16 @@ class FLClient:
         flat, _ = flatten_params(self.params)
         return list(chunk_stream(self.model_id, self.round, flat,
                                  chunk_elems))
+
+    def uplink_session(self, chunk_elems: int, receiver,
+                       **kwargs) -> UplinkSession:
+        """This client's chunked upload as a schedulable state machine —
+        what the shared-medium scheduler interleaves across clients
+        (``fl.chunking.run_interleaved_uplinks``).  ``receiver`` is the
+        server-side reassembly endpoint for this client."""
+        return UplinkSession(self.client_id,
+                             self.local_model_chunks(chunk_elems),
+                             receiver, **kwargs)
 
     def dataset_size(self) -> int:
         return len(self._train_idx)

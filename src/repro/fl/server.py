@@ -24,8 +24,8 @@ from repro.core.messages import (
     FLModelChunk,
     ParamsEncoding,
 )
-from repro.fl.aggregation import fedavg
-from repro.fl.chunking import AssemblerReceiver, chunk_stream
+from repro.fl.aggregation import RunningFedAvg, fedavg
+from repro.fl.chunking import AssemblerReceiver, GatherBufferPool, chunk_stream
 
 
 @dataclass(frozen=True)
@@ -60,6 +60,12 @@ class FLServer:
         self.round = 0
         self.stopped_clients: set[int] = set()
         self._uplink: dict[int, "UplinkEndpoint"] = {}
+        # gather buffers cycle server-side: assembler fills one, the
+        # running aggregate consumes it, the pool re-issues it to the next
+        # upload — steady-state reassembly allocation is zero
+        self._gather_pool = GatherBufferPool()
+        self._agg: RunningFedAvg | None = None
+        self._agg_clients: list[int] = []
         self.history: list[RoundResult] = []
         self._rng = np.random.default_rng(cfg.seed)
         self.ckpt = (CheckpointManager(cfg.checkpoint_dir)
@@ -142,6 +148,43 @@ class FLServer:
         ep = self._uplink.pop(client_id, None)
         return ep.assembled if ep is not None else None
 
+    # -- incremental aggregation ---------------------------------------------
+    #
+    # The chunked-uplink rounds fold each client's reassembled model into a
+    # RunningFedAvg the moment reassembly completes (the interleaved
+    # scheduler's on_complete hook; the sequential chunked path calls it per
+    # client), so completed models never pile up: server peak memory is the
+    # accumulator plus the in-flight reassembly — one model sequentially, at
+    # most the concurrently-uploading clients when interleaved — never all
+    # reporters resident.  Because the accumulator is order-independent (see
+    # RunningFedAvg), a round aggregated in medium-arbitration completion
+    # order is byte-identical to the same round aggregated client-by-client.
+
+    def begin_aggregation(self) -> None:
+        self._agg = RunningFedAvg(self.global_params.shape)
+        self._agg_clients = []
+
+    def accumulate_update(self, client_id: int, params: np.ndarray,
+                          dataset_size: int) -> None:
+        """Fold one reassembled flat model into the running aggregate and
+        recycle its gather buffer (the accumulator owns the values now)."""
+        if self._agg is None:
+            raise RuntimeError("begin_aggregation() was not called")
+        if client_id in self._agg_clients:
+            raise ValueError(f"client {client_id} already aggregated")
+        self._agg.add(params, dataset_size)
+        self._agg_clients.append(client_id)
+        self._gather_pool.release(params)
+
+    def finalize_aggregation(self) -> np.ndarray | None:
+        """Install the aggregated model; None when no update arrived (the
+        round then keeps the previous global model, as before)."""
+        agg, self._agg = self._agg, None
+        if agg is None or agg.n_updates == 0:
+            return None
+        self.global_params = agg.result()
+        return self.global_params
+
     def observe_ready(self, update: FLLocalDataSetUpdate) -> bool:
         """Observe notification filter: has the client trained enough?"""
         return update.dataset_size >= self.cfg.min_local_samples
@@ -199,8 +242,10 @@ class UplinkEndpoint(AssemblerReceiver):
     def __init__(self, server: FLServer) -> None:
         # uplink models are the same shape as the global model: vouch for
         # that size so forged chunk geometry cannot inflate the gather
-        # buffer
-        super().__init__(expected_elems=server.global_params.size)
+        # buffer; draw that buffer from the server's pool so steady-state
+        # reassembly allocates nothing (geometry is stable round to round)
+        super().__init__(expected_elems=server.global_params.size,
+                         pool=server._gather_pool)
         self._server = server
         self.rejected_stale = 0
 

@@ -15,12 +15,16 @@ from repro.core.messages import (
     FLGlobalModelUpdate,
     FLLocalDataSetUpdate,
     FLLocalModelUpdate,
-    ModelMetadata,
 )
-from repro.fl.chunking import ChunkTransferReport, run_selective_repeat
+from repro.fl.chunking import (
+    ChunkTransferReport,
+    run_interleaved_uplinks,
+    run_selective_repeat,
+)
 from repro.fl.client import FLClient
 from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
 from repro.transport.coap import Code, TransferStats
+from repro.transport.medium import MediumReport, SharedMedium
 from repro.transport.network import LossyLink, as_wire_payload
 
 
@@ -48,7 +52,10 @@ class FLSimulation:
     def __init__(self, server: FLServer, clients: list[FLClient],
                  drop_prob: float = 0.0, seed: int = 0,
                  multicast_global: bool = True,
-                 chunk_elems: int | None = None) -> None:
+                 chunk_elems: int | None = None,
+                 uplink_mode: str = "sequential",
+                 uplink_reorder_prob: float = 0.0,
+                 uplink_turnaround_s: float = 0.05) -> None:
         self.server = server
         self.clients = {c.client_id: c for c in clients}
         self.link = LossyLink(drop_prob=drop_prob, seed=seed)
@@ -63,8 +70,23 @@ class FLSimulation:
         # inherently multicast (one transfer reaches all receivers), so
         # multicast_global does not apply to it either.
         self.chunk_elems = chunk_elems
+        # uplink_mode: "sequential" uploads chunked local models client by
+        # client over the CON unicast link (the legacy shape);
+        # "interleaved" schedules every reporter's selective-repeat windows
+        # concurrently over one SharedMedium contention domain
+        # (docs/concurrent_uplink.md) — frames arbitrate per-slot, blocks
+        # may reorder, and the server aggregates incrementally as each
+        # client's reassembly completes.
+        if uplink_mode not in ("sequential", "interleaved"):
+            raise ValueError(f"unknown uplink_mode {uplink_mode!r}")
+        self.uplink_mode = uplink_mode
+        self.uplink_reorder_prob = uplink_reorder_prob
+        self.uplink_turnaround_s = uplink_turnaround_s
         self.last_downlink_report: ChunkTransferReport | None = None
         self.last_uplink_report: ChunkTransferReport | None = None
+        self.last_uplink_reports: list[ChunkTransferReport] = []
+        self.last_medium_report: MediumReport | None = None
+        self._seed = seed
         self._rng = np.random.default_rng(seed)
 
     # -- wire helpers (validate every message against its CDDL schema) -------
@@ -128,6 +150,46 @@ class FLSimulation:
             multicast=False, record=self._record_uplink)
         self.last_uplink_report = report
         return self.server.pop_uplink(cid)
+
+    def _collect_interleaved(self, reporters: list[int]) -> list[int]:
+        """Concurrent multi-client uplink over one shared contention
+        domain: every reporter's selective-repeat windows interleave
+        frame-by-frame (docs/concurrent_uplink.md), and each reassembled
+        model folds into the server's running aggregate the moment it
+        completes — then its gather buffer is recycled for the next
+        client.  Returns the clients whose upload was aggregated."""
+        server = self.server
+        sessions = [
+            self.clients[cid].uplink_session(
+                self.chunk_elems, server.uplink_endpoint(cid),
+                uri="fl/model/upload", feedback_uri="fl/model/upload/fb")
+            for cid in reporters
+        ]
+        medium = SharedMedium(
+            seed=(self._seed, server.round),
+            frame_drop_prob=self.link.drop_prob,
+            reorder_prob=self.uplink_reorder_prob,
+            turnaround_s=self.uplink_turnaround_s,
+            chunk_drop=self.link.chunk_drop)
+        aggregated: list[int] = []
+
+        def fold(session) -> None:
+            flat = server.pop_uplink(session.client_id)
+            if flat is not None:
+                server.accumulate_update(
+                    session.client_id, flat,
+                    self.clients[session.client_id].dataset_size())
+                aggregated.append(session.client_id)
+
+        self.last_medium_report = run_interleaved_uplinks(
+            medium, sessions, record=self._record_uplink, on_complete=fold)
+        self.last_uplink_reports = [s.report for s in sessions]
+        self.last_uplink_report = (self.last_uplink_reports[-1]
+                                   if self.last_uplink_reports else None)
+        for cid in reporters:       # discard partial reassembly state
+            if cid not in aggregated:
+                server.pop_uplink(cid)
+        return aggregated
 
     def _record_uplink(self, mtype: str, stats: TransferStats) -> None:
         # chunk traffic is accounted per direction; control messages share
@@ -228,36 +290,41 @@ class FLSimulation:
             )) if progress else float("nan"),
         )
         if server.quorum_met(len(reporters), len(selected)):
-            updates, sizes = {}, {}
-            for cid in reporters:
-                if self.chunk_elems is not None:
-                    # symmetric chunked uplink: params travel as a
-                    # selective-repeat FL_Model_Chunk stream; the metadata
-                    # already arrived in this round's progress update.
-                    flat = self._collect_chunked(cid)
-                    if flat is None:
-                        dropped.append(cid)   # upload never completed
+            if self.chunk_elems is not None:
+                # symmetric chunked uplink: params travel as selective-
+                # repeat FL_Model_Chunk streams (metadata already arrived
+                # in this round's progress update), and aggregation is
+                # *incremental* — each reassembled model folds into the
+                # running FedAvg as it completes and its gather buffer is
+                # recycled, so server peak memory is the accumulator plus
+                # one in-flight model however many clients report.
+                server.begin_aggregation()
+                if self.uplink_mode == "interleaved":
+                    aggregated = self._collect_interleaved(reporters)
+                    dropped += [c for c in reporters if c not in aggregated]
+                else:
+                    for cid in reporters:
+                        flat = self._collect_chunked(cid)
+                        if flat is None:
+                            dropped.append(cid)   # upload never completed
+                            continue
+                        server.accumulate_update(
+                            cid, flat, self.clients[cid].dataset_size())
+                server.finalize_aggregation()
+            else:
+                updates, sizes = {}, {}
+                for cid in reporters:
+                    ring = self._send(
+                        self.clients[cid].local_model_update()
+                            .to_cbor_segments(enc),
+                        "FL_Local_Model_Update", "fl/model", Code.CONTENT)
+                    if ring is None:
+                        dropped.append(cid)   # model transfer lost
                         continue
-                    meta = progress[cid].metadata or ModelMetadata(
-                        float("nan"), float("nan"))
-                    # the gathered f32 buffer is handed on as-is: widening
-                    # it to f64 only to narrow again at aggregation would
-                    # re-introduce a whole-model copy on the receive side
-                    updates[cid] = FLLocalModelUpdate(
-                        model_id=server.model_id, round=server.round,
-                        params=flat, metadata=meta)
+                    updates[cid] = FLLocalModelUpdate.from_cbor_segments(ring)
                     sizes[cid] = self.clients[cid].dataset_size()
-                    continue
-                ring = self._send(
-                    self.clients[cid].local_model_update().to_cbor_segments(enc),
-                    "FL_Local_Model_Update", "fl/model", Code.CONTENT)
-                if ring is None:
-                    dropped.append(cid)   # model transfer lost
-                    continue
-                updates[cid] = FLLocalModelUpdate.from_cbor_segments(ring)
-                sizes[cid] = self.clients[cid].dataset_size()
-            if updates:
-                server.aggregate(updates, sizes)
+                if updates:
+                    server.aggregate(updates, sizes)
         server.finish_round(result)
         return result
 

@@ -1,4 +1,5 @@
 from repro.transport.coap import (
+    BlockReceiveRing,
     CoapMessage,
     Code,
     Option,
@@ -7,7 +8,10 @@ from repro.transport.coap import (
     blockwise_messages,
     transfer_stats,
 )
-from repro.transport.network import LossyLink
+from repro.transport.medium import MediumReport, SharedMedium
+from repro.transport.network import LossyLink, TaggedFrame, iter_tagged_frames
 
-__all__ = ["CoapMessage", "Code", "Option", "TransferStats", "Type",
-           "blockwise_messages", "transfer_stats", "LossyLink"]
+__all__ = ["BlockReceiveRing", "CoapMessage", "Code", "Option",
+           "TransferStats", "Type", "blockwise_messages", "transfer_stats",
+           "LossyLink", "TaggedFrame", "iter_tagged_frames",
+           "SharedMedium", "MediumReport"]

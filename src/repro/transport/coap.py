@@ -166,51 +166,183 @@ def blockwise_messages(payload, *, uri: str, code: Code = Code.POST,
                                         token=token))
 
 
+# RFC 7959 §2.2: the block NUM field is at most 20 bits wide.  A frame
+# claiming a larger NUM is malformed, and — since out-of-order NUMs size
+# receiver state — the bound also caps what a hostile frame can make the
+# ring hold.
+MAX_BLOCK_NUM = 1 << 20
+# Out-of-order blocks parked past the contiguous prefix.  Real reorder is
+# a few frames of jitter; thousands of parked blocks means the stream is
+# garbage (or hostile), not late.
+MAX_PENDING_BLOCKS = 1 << 14
+
+
 class BlockReceiveRing:
     """Receive-side segment ring: blockwise payloads reassembled into
     *arena segments*, never joined on top of.
 
-    The receiver appends each delivered ≤64 B block's payload in arrival
-    order (the simulated link is in-order; real reorder would slot by the
-    Block1 NUM).  Consecutive blocks coalesce into a growing ``bytearray``
-    arena — copying each block into the arena *is* the receiver-ownership
-    copy the wire hop costs, paid once per byte, block-granular.  The ring
-    then hands the decode layer its arena segments as-is:
+    Two arrival models share the ring:
+
+    * ``add_block(payload)`` — legacy in-order append: each delivered
+      ≤64 B block's payload is appended in arrival order.  Consecutive
+      blocks coalesce into a growing ``bytearray`` arena — copying each
+      block into the arena *is* the receiver-ownership copy the wire hop
+      costs, paid once per byte, block-granular.
+    * ``add_block(payload, num=...)`` / ``feed(msg)`` — *reorder-aware*
+      slotting by the Block1 NUM: blocks may arrive in any order, with
+      duplicates (counted and dropped — a NACK-repaired chunk re-sends
+      every block, including ones that already landed) and gaps (parked
+      out-of-order blocks wait in a bounded pending map until the missing
+      NUMs fill them in).  The contiguous prefix coalesces into the same
+      arena as the in-order path, so an in-order stream costs exactly
+      what it always did, and a reordered one pays only O(jitter window)
+      extra transient references.
+
+    Either way the ring hands the decode layer its arena segments as-is:
     ``fastpath.decode`` / ``from_cbor_segments`` walk them with a segment
     cursor, and a payload that landed inside one arena (the common case —
     an uninterrupted block run) decodes as a *borrowed* zero-copy view of
     the ring's own memory.  No contiguous join is ever layered on top.
 
     Reading ``segments()`` seals the current arena (a ``bytearray`` with
-    exported views must not grow), so appends after a read simply start a
-    new arena segment.
+    exported views must not grow), so in append mode later blocks simply
+    start a new arena segment.  In slotted mode ``segments()`` requires
+    the transfer to be ``complete`` — decoding around a gap would yield
+    garbage — and raises ``ValueError`` otherwise.
     """
 
-    __slots__ = ("_segments", "_arena", "_num_blocks", "_nbytes")
+    __slots__ = ("_segments", "_arena", "_num_blocks", "_nbytes",
+                 "_slotted", "_pending", "_next_num", "_last_num",
+                 "duplicates")
 
     def __init__(self) -> None:
         self._segments: list = []
         self._arena: bytearray | None = None
         self._num_blocks = 0
         self._nbytes = 0
+        self._slotted: bool | None = None   # None until the first block
+        self._pending: dict[int, bytes] = {}
+        self._next_num = 0                  # slotted: next NUM to coalesce
+        self._last_num: int | None = None   # slotted: NUM with more=False
+        self.duplicates = 0
 
-    def add_block(self, payload) -> None:
-        """Append one delivered block's payload (``bytes`` or any buffer)."""
-        n = payload.nbytes if isinstance(payload, memoryview) else len(payload)
-        if not n:
-            return
+    # -- shared arena append --------------------------------------------------
+
+    def _append(self, payload, nbytes: int) -> None:
         if self._arena is None:
             self._arena = bytearray()
             self._segments.append(self._arena)
         self._arena += payload
         self._num_blocks += 1
-        self._nbytes += n
+        self._nbytes += nbytes
+
+    def _set_mode(self, slotted: bool) -> None:
+        if self._slotted is None:
+            self._slotted = slotted
+        elif self._slotted != slotted:
+            raise ValueError(
+                "BlockReceiveRing cannot mix in-order appends and "
+                "NUM-slotted blocks in one transfer")
+
+    # -- arrival paths --------------------------------------------------------
+
+    def add_block(self, payload, num: int | None = None, *,
+                  last: bool = False) -> None:
+        """Deliver one block's payload (``bytes`` or any buffer).
+
+        ``num=None`` keeps the legacy append-in-arrival-order semantics.
+        With ``num`` the block is slotted by its Block1 NUM: duplicates are
+        dropped (counted), gaps are tolerated until later arrivals — e.g.
+        a NACK-repair re-send — fill them.  ``last=True`` marks the final
+        block of the transfer (Block1 ``M`` bit clear), fixing the total.
+        """
+        n = payload.nbytes if isinstance(payload, memoryview) else len(payload)
+        if num is None:
+            self._set_mode(False)
+            if not n:
+                return
+            self._append(payload, n)
+            return
+        self._set_mode(True)
+        if not 0 <= num < MAX_BLOCK_NUM:
+            raise ValueError(f"block NUM {num} out of range")
+        if self._last_num is not None:
+            if last and num != self._last_num:
+                raise ValueError(
+                    f"conflicting final block: NUM {num} after "
+                    f"{self._last_num}")
+            if num > self._last_num:
+                raise ValueError(
+                    f"block NUM {num} beyond final block {self._last_num}")
+        if last:
+            if (self._pending and max(self._pending) > num) or \
+                    self._next_num > num + 1:
+                raise ValueError(
+                    f"final block NUM {num} below an already-received block")
+            self._last_num = num
+        if num < self._next_num or num in self._pending:
+            self.duplicates += 1
+            return
+        if num == self._next_num:
+            if self._arena is None and self._segments:
+                # segments() sealed the arena; only possible once complete,
+                # so any further non-duplicate NUM is a protocol violation
+                raise ValueError("slotted ring grew after it was sealed")
+            self._append(payload, n)
+            self._next_num += 1
+            while self._next_num in self._pending:
+                nxt = self._pending.pop(self._next_num)
+                self._append(nxt, len(nxt))
+                self._next_num += 1
+        else:
+            if len(self._pending) >= MAX_PENDING_BLOCKS:
+                raise ValueError(
+                    f"more than {MAX_PENDING_BLOCKS} out-of-order blocks "
+                    "parked; dropping the transfer")
+            # park one owned copy: the frame buffer may be reused by the
+            # link once this call returns
+            self._pending[num] = bytes(payload)
 
     def feed(self, msg: "CoapMessage") -> None:
-        """Append the payload of one received blockwise CoAP message."""
-        self.add_block(msg.payload)
+        """Deliver one received blockwise CoAP message, slotting its
+        payload by the Block1 NUM (reorder-aware).  A message without a
+        Block1 option is a complete single-block transfer."""
+        num, more = 0, False
+        for onum, val in msg.options:
+            if onum == Option.BLOCK1:
+                v = int.from_bytes(val, "big")
+                num, more = v >> 4, bool(v & 0x08)
+                break
+        self.add_block(msg.payload, num=num, last=not more)
+
+    # -- reassembly state -----------------------------------------------------
+
+    @property
+    def complete(self) -> bool:
+        """True when every block of a slotted transfer has arrived (the
+        final block is known and the contiguous prefix covers it).  An
+        append-mode ring has no gap concept and is always complete."""
+        if not self._slotted:
+            return True
+        return self._last_num is not None and self._next_num > self._last_num
+
+    def missing_nums(self) -> list[int]:
+        """Block NUMs known to be missing: gaps below the highest block
+        seen (and below the final block, once known).  An unknown tail —
+        nothing received past the last contiguous block and no final block
+        yet — reports as no *known* gaps."""
+        if not self._slotted:
+            return []
+        upper = self._last_num
+        if upper is None:
+            upper = max(self._pending, default=self._next_num - 1)
+        return [n for n in range(self._next_num, upper + 1)
+                if n not in self._pending]
 
     def segments(self) -> list:
+        if self._slotted and not self.complete:
+            raise ValueError(
+                f"incomplete blockwise transfer: missing {self.missing_nums()}")
         segs = [memoryview(s).toreadonly() if isinstance(s, bytearray) else s
                 for s in self._segments]
         self._arena = None  # seal: exported views pin the arena's size
@@ -233,6 +365,11 @@ class BlockReceiveRing:
         self._arena = None
         self._num_blocks = 0
         self._nbytes = 0
+        self._slotted = None
+        self._pending.clear()
+        self._next_num = 0
+        self._last_num = None
+        self.duplicates = 0
 
 
 @dataclass

@@ -1,0 +1,202 @@
+"""Shared-medium airtime model: one contention domain, per-frame arbitration.
+
+The ``LossyLink`` accounts a single point-to-point transfer; real low-power
+deployments put *every* client on the same radio channel, where uplink
+airtime — not per-client serialization — dominates round latency.  This
+module models that shared medium:
+
+  * **single contention domain** — exactly one frame is on the air at a
+    time; the virtual clock advances by each frame's airtime, so total
+    *busy* time is identical however transmissions are ordered;
+  * **per-frame arbitration** — when several clients contend, a seeded RNG
+    picks who transmits next (deterministic interleaving);
+  * **turnaround gaps** — after a client finishes a selective-repeat
+    window it must wait for feedback processing (``turnaround_s``) before
+    its next window.  Sequential schedules pay every gap serially; an
+    interleaved schedule fills one client's gap with another client's
+    frames — that reclaimed idle time is the whole airtime win;
+  * **reorder / jitter** — a delivered frame may be held back and released
+    after up to ``max_reorder_lag`` later frames (seeded), exercising the
+    reorder-aware receive ring;
+  * **loss** — per-frame drops at ``frame_drop_prob``, or an exact
+    ``chunk_drop`` schedule (same shape as ``LossyLink.chunk_drop``) for
+    reproducible loss-sweep tests.
+
+The medium knows nothing about chunks or NACKs: it transmits tagged frames
+(``transport.network.TaggedFrame``) and control payloads, and accounts
+clock/busy/idle.  The selective-repeat scheduling on top lives in
+``fl.chunking.run_interleaved_uplinks``.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.transport.coap import LOWPAN_OVERHEAD, Code, TransferStats
+from repro.transport.network import (
+    LINK_BPS,
+    ChunkDropFn,
+    TaggedFrame,
+    con_blockwise_transfer,
+)
+
+
+@dataclass
+class MediumReport:
+    """Airtime accounting for one multi-client transfer over the medium."""
+
+    airtime_s: float = 0.0            # virtual clock at completion
+    busy_s: float = 0.0               # frames on the air
+    idle_s: float = 0.0               # gaps no contender could fill
+    per_client_done_s: dict[int, float] = field(default_factory=dict)
+    stats: TransferStats = field(default_factory=TransferStats)
+
+
+class SharedMedium:
+    """Deterministic (seeded) shared-medium simulation.
+
+    All state advances through three entry points: ``arbitrate`` picks the
+    next transmitter among contenders, ``transmit`` puts one tagged frame
+    on the air (returns the frames *released* to the receiver, which lag
+    behind transmissions when jitter reorders them), and
+    ``transmit_payload`` sends one CON control payload (feedback) with
+    link-layer retransmissions.  ``advance_to`` models time nobody could
+    use (every contender waiting on turnaround).
+    """
+
+    def __init__(self, *, seed: int = 0, link_bps: int = LINK_BPS,
+                 frame_drop_prob: float = 0.0,
+                 reorder_prob: float = 0.0, max_reorder_lag: int = 8,
+                 turnaround_s: float = 0.05,
+                 chunk_drop: ChunkDropFn | None = None) -> None:
+        if not 0.0 <= frame_drop_prob < 1.0:
+            raise ValueError("frame_drop_prob must be in [0, 1)")
+        if not 0.0 <= reorder_prob <= 1.0:
+            raise ValueError("reorder_prob must be in [0, 1]")
+        if max_reorder_lag < 1:
+            raise ValueError("max_reorder_lag must be >= 1")
+        self._rng = np.random.default_rng(seed)
+        self.link_bps = link_bps
+        self.frame_drop_prob = frame_drop_prob
+        self.reorder_prob = reorder_prob
+        self.max_reorder_lag = max_reorder_lag
+        self.turnaround_s = turnaround_s
+        # chunk_drop(uri, window, chunk_index, client) -> drop whole chunk?
+        # Replaces the frame-level RNG for *data* delivery decisions (bytes
+        # are still counted), mirroring LossyLink.chunk_drop — but keyed by
+        # the transmitting client, since the medium has one receiver (the
+        # server) and many senders.
+        self.chunk_drop = chunk_drop
+        self.clock = 0.0
+        self.busy_s = 0.0
+        self.idle_s = 0.0
+        self.stats = TransferStats()
+        self._seq = 0                      # frames transmitted (global order)
+        self._holdback: list = []          # heap of (release_seq, seq, frame)
+
+    # -- time ---------------------------------------------------------------
+
+    def frame_airtime(self, wire_bytes: int) -> float:
+        return (wire_bytes + LOWPAN_OVERHEAD) * 8 / self.link_bps
+
+    def advance_to(self, t: float) -> None:
+        """Advance the clock over a gap no contender could fill."""
+        if t > self.clock:
+            self.idle_s += t - self.clock
+            self.clock = t
+
+    # -- arbitration --------------------------------------------------------
+
+    def arbitrate(self, contenders: Sequence[int]) -> int:
+        """Pick the next transmitter among contending client ids (seeded,
+        deterministic).  One contender short-circuits without an RNG draw
+        so a lone client's schedule is identical at any concurrency."""
+        if len(contenders) == 1:
+            return contenders[0]
+        return contenders[int(self._rng.integers(len(contenders)))]
+
+    # -- data frames --------------------------------------------------------
+
+    def transmit(self, frame: TaggedFrame, stats: TransferStats,
+                 drop: bool | None = None) -> list[TaggedFrame]:
+        """Put one tagged frame on the air (NON — no link-layer retry; loss
+        recovery belongs to the chunk layer's NACK round-trip).
+
+        ``drop`` forces the delivery verdict (the chunk_drop schedule);
+        ``None`` draws from the frame-level RNG.  Returns the frames
+        released to the receiver at this step: a delivered frame may be
+        held back (jitter) and released after later frames, so the return
+        value lags transmissions when reordering strikes.
+        """
+        a = self.frame_airtime(frame.wire_bytes)
+        self.clock += a
+        self.busy_s += a
+        for s in (stats, self.stats):
+            s.frames += 1
+            s.blocks += 1
+            s.wire_bytes += frame.wire_bytes
+            s.link_bytes += frame.wire_bytes + LOWPAN_OVERHEAD
+        if drop is None:
+            drop = (self.frame_drop_prob > 0.0
+                    and float(self._rng.random()) < self.frame_drop_prob)
+        self._seq += 1
+        if not drop:
+            lag = 0
+            if self.reorder_prob and float(self._rng.random()) < self.reorder_prob:
+                lag = 1 + int(self._rng.integers(self.max_reorder_lag))
+            heapq.heappush(self._holdback, (self._seq + lag, self._seq, frame))
+        return self._release()
+
+    def _release(self) -> list[TaggedFrame]:
+        out = []
+        while self._holdback and self._holdback[0][0] <= self._seq:
+            out.append(heapq.heappop(self._holdback)[2])
+        return out
+
+    def flush(self, client: int | None = None) -> list[TaggedFrame]:
+        """Release held-back frames immediately — all of them, or one
+        client's (a window boundary: its feedback logically follows every
+        frame of the window, so any of its frames still 'in flight' have
+        arrived by then)."""
+        if client is None:
+            out = [f for _, _, f in sorted(self._holdback)]
+            self._holdback.clear()
+            return out
+        keep, out = [], []
+        for entry in sorted(self._holdback):
+            (out if entry[2].client == client else keep).append(entry)
+        self._holdback = keep
+        heapq.heapify(self._holdback)
+        return [e[2] for e in out]
+
+    # -- control payloads ---------------------------------------------------
+
+    def transmit_payload(self, payload, *, uri: str,
+                         code: Code = Code.CONTENT,
+                         stats: TransferStats | None = None
+                         ) -> tuple[bool, TransferStats]:
+        """One CON control transfer (NACK/ACK feedback) on the medium.
+
+        Per-frame ack + retransmission up to MAX_RETRANSMIT, every attempt
+        advancing the clock — control traffic competes for the same
+        airtime as data.  Returns ``(delivered, stats)``; an undelivered
+        feedback message costs the sender a window (it polls again), never
+        correctness.
+        """
+        def on_frame(wire: int) -> None:
+            a = self.frame_airtime(wire)
+            self.clock += a
+            self.busy_s += a
+
+        out = con_blockwise_transfer(
+            payload, uri=uri, code=code,
+            drop=lambda: (self.frame_drop_prob > 0.0
+                          and float(self._rng.random()) < self.frame_drop_prob),
+            on_frame=on_frame)
+        self.stats.add(out)
+        if stats is not None:
+            stats.add(out)
+        return not out.failed_messages, out

@@ -18,11 +18,19 @@ Two delivery models coexist (docs/chunk_protocol.md):
     an all-or-nothing verdict.  Losing a chunk never aborts the window; the
     caller learns exactly which indices each receiver got and drives the
     NACK round-trip (re-sending only the missing set) on top.
+  * ``iter_tagged_frames`` — the async-style *multiplexed* face of
+    ``request_stream``: instead of transmitting a window inline, its frames
+    are handed out one at a time, each tagged (client, window, chunk-index,
+    Block1 NUM), to a shared-medium scheduler
+    (``transport.medium.SharedMedium``) that owns *when* each frame goes on
+    the air.  Many clients' windows then interleave frame-by-frame in one
+    contention domain instead of running back-to-back, and the receive side
+    slots blocks by NUM (reorder-aware ``BlockReceiveRing``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, Sequence
+from typing import Callable, Iterable, Iterator, Sequence
 
 import numpy as np
 
@@ -53,12 +61,92 @@ def as_wire_payload(payload):
     return payload
 
 
+def con_blockwise_transfer(payload, *, uri: str, code: Code,
+                           drop: Callable[[], bool],
+                           on_frame: Callable[[int], None] | None = None,
+                           ring: "BlockReceiveRing | None" = None
+                           ) -> TransferStats:
+    """The one CON blockwise-transfer loop: per-frame ack + retransmission
+    up to MAX_RETRANSMIT, exact byte/frame accounting, optional delivery
+    into a receive ring.  ``drop()`` decides each attempt's fate (the
+    caller owns the RNG — ``LossyLink`` and ``SharedMedium`` share this
+    loop so their accounting can never diverge); ``on_frame(wire_bytes)``
+    fires once per attempt for callers that track airtime on a clock.
+    A frame still lost after MAX_RETRANSMIT marks the whole payload
+    undelivered (``failed_messages`` = 1) and aborts the transfer."""
+    payload = as_wire_payload(payload)
+    stats = TransferStats(messages=1, payload_bytes=len(payload))
+    for msg in iter_blockwise_messages(payload, uri=uri, code=code):
+        wire = len(msg.encode())
+        frame = wire + LOWPAN_OVERHEAD
+        assert frame <= IEEE802154_MTU, frame
+        stats.blocks += 1
+        attempts = 0
+        while True:
+            attempts += 1
+            stats.frames += 1
+            stats.wire_bytes += wire
+            stats.link_bytes += frame
+            if on_frame is not None:
+                on_frame(wire)
+            if not drop():
+                break
+            if attempts > MAX_RETRANSMIT:
+                stats.failed_messages = 1
+                return stats
+            stats.retransmissions += 1
+        if ring is not None:
+            ring.feed(msg)
+    return stats
+
+
 @dataclass
 class StreamDelivery:
     """Result of one ``request_stream`` window."""
 
     stats: TransferStats
     delivered: list[set[int]]    # per receiver: chunk indices that arrived
+
+
+@dataclass(frozen=True)
+class TaggedFrame:
+    """One link frame of a multiplexed chunk window.
+
+    The tag (client, window, chunk_index, block_num) is what lets frames
+    from many concurrent uplinks share one contention domain: the medium
+    arbitrates and reorders *frames*, and the receive side routes each one
+    to the right client's per-chunk reorder-aware ring by its tag — the
+    Block1 NUM inside ``msg`` slots it into the arena.
+    """
+
+    client: int
+    window: int
+    chunk_index: int
+    block_num: int
+    msg: CoapMessage
+    wire_bytes: int          # encoded CoAP size (MAC/6LoWPAN overhead extra)
+
+
+def iter_tagged_frames(payloads: Sequence, *, uri: str, client: int,
+                       window: int, indices: Sequence[int] | None = None,
+                       code: Code = Code.POST) -> Iterator[TaggedFrame]:
+    """Lazily frame one selective-repeat window for a shared medium.
+
+    Yields every blockwise CoAP frame of every chunk payload in order,
+    tagged (client, window, chunk-index, Block1 NUM).  One frame exists at
+    a time — a repair window over a multi-MB model costs O(block)
+    transient memory, exactly like the inline ``request_stream`` path.
+    """
+    payloads = [as_wire_payload(p) for p in payloads]
+    if indices is None:
+        indices = range(len(payloads))
+    for payload, idx in zip(payloads, indices):
+        for num, msg in enumerate(
+                iter_blockwise_messages(payload, uri=uri, code=code)):
+            wire = len(msg.encode())
+            assert wire + LOWPAN_OVERHEAD <= IEEE802154_MTU, wire
+            yield TaggedFrame(client=client, window=window, chunk_index=idx,
+                              block_num=num, msg=msg, wire_bytes=wire)
 
 
 @dataclass
@@ -106,28 +194,9 @@ class LossyLink:
 
     def _blockwise_transfer(self, payload, *, uri: str, code: Code,
                             ring: BlockReceiveRing | None) -> TransferStats:
-        payload = as_wire_payload(payload)
-        stats = TransferStats(messages=1, payload_bytes=len(payload))
-        for msg in iter_blockwise_messages(payload, uri=uri, code=code):
-            wire = len(msg.encode())
-            frame = wire + LOWPAN_OVERHEAD
-            assert frame <= IEEE802154_MTU, frame
-            stats.blocks += 1
-            attempts = 0
-            while True:
-                attempts += 1
-                stats.frames += 1
-                stats.wire_bytes += wire
-                stats.link_bytes += frame
-                if self._rng.random() >= self.drop_prob:
-                    break
-                if attempts > MAX_RETRANSMIT:
-                    stats.failed_messages = 1
-                    return stats
-                stats.retransmissions += 1
-            if ring is not None:
-                ring.feed(msg)
-        return stats
+        return con_blockwise_transfer(
+            payload, uri=uri, code=code,
+            drop=lambda: self._rng.random() < self.drop_prob, ring=ring)
 
     def send_stream(self, payloads: Iterable, *, uri: str,
                     code: Code = Code.POST,

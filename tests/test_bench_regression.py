@@ -5,6 +5,7 @@ Marked ``tier2`` — excluded from the default (tier-1) run by pytest.ini so
 timing noise on loaded CI boxes can't fail correctness runs; run locally via
 ``pytest -m tier2``.
 """
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -16,9 +17,15 @@ REPO = Path(__file__).resolve().parent.parent
 
 @pytest.mark.tier2
 def test_codec_throughput_within_2x_of_committed():
+    # BENCH_CHECK_FACTOR loosens the gate where the committed baseline was
+    # measured on different hardware (CI sets 4; locally the default 2
+    # applies)
+    cmd = [sys.executable, str(REPO / "benchmarks" / "run.py"), "--check"]
+    factor = os.environ.get("BENCH_CHECK_FACTOR")
+    if factor:
+        cmd += ["--factor", factor]
     proc = subprocess.run(
-        [sys.executable, str(REPO / "benchmarks" / "run.py"), "--check"],
-        cwd=REPO, capture_output=True, text=True, timeout=600,
+        cmd, cwd=REPO, capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
     )
     assert proc.returncode == 0, proc.stdout + proc.stderr

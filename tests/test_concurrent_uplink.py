@@ -1,0 +1,395 @@
+"""Concurrent multi-client uplink over one shared lossy medium.
+
+Sweeps loss schedules × reorder rates through the interleaved scheduler
+(`run_interleaved_uplinks`) and its sequential baseline, asserting:
+
+  * every completed upload reassembles byte-identically in any frame
+    order (the reorder-aware ring + NUM-slotted repair);
+  * the *aggregated* global model is byte-identical between sequential
+    and interleaved schedules — the incremental RunningFedAvg accumulator
+    is order-independent down to the last f32 bit;
+  * interleaved round airtime < sequential at ≥2 clients (one client's
+    feedback turnaround is filled with another's frames);
+  * the server's gather-buffer pool drops steady-state reassembly
+    allocation to ~zero when geometry repeats round over round.
+"""
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.fl.aggregation import RunningFedAvg, fedavg
+from repro.fl.chunking import (
+    MAX_REPAIR_WINDOWS,
+    AssemblerReceiver,
+    ChunkAssembler,
+    GatherBufferPool,
+    UplinkSession,
+    chunk_stream,
+    run_interleaved_uplinks,
+)
+from repro.fl.server import FLServer, OrchestrationConfig
+from repro.transport.medium import SharedMedium
+
+N_PARAMS = 6_000
+CHUNK_ELEMS = 512
+LOSS_RATES = [0.0, 0.05, 0.20]
+REORDER_RATES = [0.0, 0.3, 0.9]
+
+
+def _models(n_clients, n=N_PARAMS):
+    return {c: np.random.default_rng((5, c)).standard_normal(n)
+            .astype(np.float32) for c in range(n_clients)}
+
+
+def _sizes(n_clients):
+    return {c: 40 + 17 * c for c in range(n_clients)}
+
+
+def seeded_chunk_drop(rate, seed=42):
+    """Per-(window, chunk, client) verdicts — identical losses however the
+    frames are scheduled, so cross-mode comparisons are apples-to-apples."""
+    def drop(uri, window, index, client):
+        return bool(np.random.default_rng(
+            (seed, window, index, client)).random() < rate)
+    return drop
+
+
+def _run_round(n_clients, *, sequential, chunk_drop=None, frame_drop=0.0,
+               reorder=0.0, seed=0, turnaround=0.2):
+    """One uplink round into a real FLServer with incremental aggregation;
+    returns (server, sessions, medium_report, aggregated_params)."""
+    server = FLServer(
+        OrchestrationConfig(num_clients=n_clients,
+                            clients_per_round=n_clients),
+        np.zeros(N_PARAMS, np.float32))
+    models, sizes = _models(n_clients), _sizes(n_clients)
+    sessions = [
+        UplinkSession(c, list(chunk_stream(server.model_id, server.round,
+                                           models[c], CHUNK_ELEMS)),
+                      server.uplink_endpoint(c))
+        for c in range(n_clients)
+    ]
+    medium = SharedMedium(seed=seed, frame_drop_prob=frame_drop,
+                          reorder_prob=reorder, turnaround_s=turnaround,
+                          chunk_drop=chunk_drop)
+    server.begin_aggregation()
+
+    def fold(session):
+        flat = server.pop_uplink(session.client_id)
+        assert flat is not None
+        assert flat.tobytes() == models[session.client_id].tobytes()
+        server.accumulate_update(session.client_id, flat,
+                                 sizes[session.client_id])
+
+    report = run_interleaved_uplinks(medium, sessions,
+                                     sequential=sequential, on_complete=fold)
+    agg = server.finalize_aggregation()
+    return server, sessions, report, agg
+
+
+# -- loss-sweep × reorder-sweep: byte-identical across schedules --------------
+
+
+@pytest.mark.parametrize("rate", LOSS_RATES)
+@pytest.mark.parametrize("reorder", REORDER_RATES)
+def test_loss_reorder_sweep_modes_agree_bit_exact(rate, reorder):
+    drop = seeded_chunk_drop(rate) if rate else None
+    results = {}
+    for sequential in (True, False):
+        _, sessions, _, agg = _run_round(
+            3, sequential=sequential, chunk_drop=drop, reorder=reorder)
+        assert all(s.report.completed == [0] for s in sessions)
+        assert agg is not None
+        results[sequential] = agg
+    # clients complete in different orders under the two schedules, yet the
+    # aggregated global model is byte-identical
+    assert results[True].tobytes() == results[False].tobytes()
+    expected = fedavg([_models(3)[c] for c in range(3)],
+                      [_sizes(3)[c] for c in range(3)])
+    assert results[True].tobytes() == expected.tobytes()
+
+
+@pytest.mark.parametrize("frame_drop", [0.01, 0.05])
+def test_frame_loss_repairs_block_gaps_across_windows(frame_drop):
+    """Per-frame loss (no link-layer retry) punches holes *inside* chunks;
+    the per-chunk ring persists across repair windows and the re-send fills
+    exactly the missing NUMs — assembly still closes byte-identically."""
+    _, sessions, _, agg = _run_round(2, sequential=False,
+                                     frame_drop=frame_drop, reorder=0.4,
+                                     seed=11)
+    assert all(s.report.completed == [0] for s in sessions)
+    assert agg is not None
+    assert any(s.report.windows > 1 for s in sessions)   # repairs happened
+
+
+# -- airtime: the interleaving win --------------------------------------------
+
+
+@pytest.mark.parametrize("n_clients", [2, 4, 8])
+@pytest.mark.parametrize("rate", [0.0, 0.15])
+def test_interleaved_airtime_beats_sequential(n_clients, rate):
+    drop = seeded_chunk_drop(rate) if rate else None
+    _, _, seq_rep, seq_agg = _run_round(n_clients, sequential=True,
+                                        chunk_drop=drop)
+    _, _, ilv_rep, ilv_agg = _run_round(n_clients, sequential=False,
+                                        chunk_drop=drop)
+    # identical chunk losses => identical bytes on the air; the delta is
+    # purely the reclaimed turnaround idle
+    assert ilv_rep.busy_s == pytest.approx(seq_rep.busy_s)
+    assert ilv_rep.airtime_s < seq_rep.airtime_s
+    assert ilv_rep.idle_s < seq_rep.idle_s
+    assert seq_agg.tobytes() == ilv_agg.tobytes()
+
+
+def test_single_client_schedules_are_identical():
+    """With one client there is nothing to interleave: both modes must
+    produce the exact same schedule, airtime included."""
+    _, _, seq_rep, _ = _run_round(1, sequential=True)
+    _, _, ilv_rep, _ = _run_round(1, sequential=False)
+    assert seq_rep.airtime_s == ilv_rep.airtime_s
+    assert seq_rep.stats.frames == ilv_rep.stats.frames
+
+
+# -- accounting + degradation -------------------------------------------------
+
+
+def test_report_accounting_invariants():
+    rate_drop = seeded_chunk_drop(0.25)
+    _, sessions, rep, _ = _run_round(3, sequential=False,
+                                     chunk_drop=rate_drop)
+    for s in sessions:
+        r = s.report
+        assert r.payload_bytes == \
+            r.initial_payload_bytes + r.retransmitted_payload_bytes
+        assert r.retransmitted_chunks == r.chunk_sends - r.num_chunks
+        assert 1 <= r.windows <= 1 + MAX_REPAIR_WINDOWS
+        # selective repeat: repairs + control cost less than re-streaming
+        assert (r.retransmitted_payload_bytes + r.control_payload_bytes
+                < r.initial_payload_bytes)
+    assert rep.airtime_s == pytest.approx(rep.busy_s + rep.idle_s)
+
+
+def test_persistent_adversary_degrades_to_clean_dropout():
+    """A chunk dropped in every window exhausts the budget: that client
+    ends incomplete and unaggregated; the others aggregate normally."""
+    def drop(uri, window, index, client):
+        return client == 1 and index == 2
+    server, sessions, _, agg = _run_round(3, sequential=False,
+                                          chunk_drop=drop)
+    assert sessions[1].report.completed == []
+    assert sessions[1].report.windows == 1 + MAX_REPAIR_WINDOWS
+    assert not sessions[1].assembled
+    assert sessions[0].report.completed == [0]
+    assert sessions[2].report.completed == [0]
+    models, sizes = _models(3), _sizes(3)
+    expected = fedavg([models[0], models[2]], [sizes[0], sizes[2]])
+    assert agg.tobytes() == expected.tobytes()
+
+
+def test_lost_feedback_costs_windows_not_correctness():
+    """Heavy frame loss also hits NACK/ACK control frames on the medium:
+    a lost feedback message forces an empty re-poll window, never a
+    corrupt or deadlocked transfer."""
+    _, sessions, _, agg = _run_round(2, sequential=False, frame_drop=0.50,
+                                     seed=1)
+    assert sum(s.report.lost_feedback for s in sessions) > 0
+    completed = [s for s in sessions if s.report.completed == [0]]
+    assert completed, "seed 1 should complete at least one upload"
+    for s in completed:
+        assert s.assembled
+
+
+# -- incremental aggregation --------------------------------------------------
+
+
+def test_running_fedavg_order_independent_and_matches_batch():
+    import itertools
+    rng = np.random.default_rng(0)
+    ups = [rng.standard_normal(3000).astype(np.float32) for _ in range(5)]
+    sizes = [137, 64, 255, 31, 99]
+    ref = fedavg(ups, sizes)
+    for perm in itertools.permutations(range(5)):
+        agg = RunningFedAvg(ups[0].shape)
+        for i in perm:
+            agg.add(ups[i], sizes[i])
+        assert agg.result().tobytes() == ref.tobytes(), perm
+        assert agg.total_weight == sum(sizes)
+
+
+def test_running_fedavg_fractional_weights():
+    """Weights scale numerator and denominator consistently — fractional
+    dataset sizes (off the int annotation, but accepted) stay exact."""
+    u = np.arange(16, dtype=np.float32)
+    assert fedavg([u], [0.5]).tobytes() == u.tobytes()
+    out = fedavg([np.zeros(8, np.float32), np.ones(8, np.float32)],
+                 [1.5, 1.5])
+    np.testing.assert_allclose(out, 0.5)
+
+
+def test_running_fedavg_validates():
+    agg = RunningFedAvg((16,))
+    with pytest.raises(ValueError, match="no updates"):
+        agg.result()
+    with pytest.raises(ValueError, match="positive"):
+        agg.add(np.zeros(16, np.float32), 0)
+    with pytest.raises(ValueError, match="shape"):
+        agg.add(np.zeros(8, np.float32), 1)
+
+
+def test_server_incremental_api_guards():
+    server = FLServer(OrchestrationConfig(num_clients=2, clients_per_round=2),
+                      np.zeros(16, np.float32))
+    with pytest.raises(RuntimeError, match="begin_aggregation"):
+        server.accumulate_update(0, np.zeros(16, np.float32), 10)
+    server.begin_aggregation()
+    server.accumulate_update(0, np.ones(16, np.float32), 10)
+    with pytest.raises(ValueError, match="already aggregated"):
+        server.accumulate_update(0, np.ones(16, np.float32), 10)
+    assert server.finalize_aggregation() is not None
+    assert server.global_params.tobytes() == \
+        np.ones(16, np.float32).tobytes()
+    # an empty aggregation round keeps the previous model
+    server.begin_aggregation()
+    assert server.finalize_aggregation() is None
+    assert server.global_params.tobytes() == \
+        np.ones(16, np.float32).tobytes()
+
+
+# -- gather-buffer pool -------------------------------------------------------
+
+
+def _assemble_round(pool, params, mid, round_):
+    recv = AssemblerReceiver(expected_elems=params.size, pool=pool)
+    for c in chunk_stream(mid, round_, params, CHUNK_ELEMS):
+        recv.receive_chunk(c)
+    assert recv.assembled is not None
+    return recv.assembled
+
+
+def test_pool_reuses_buffers_across_rounds():
+    mid = uuid.UUID(int=7)
+    pool = GatherBufferPool()
+    params = _models(1)[0]
+    flat0 = _assemble_round(pool, params, mid, 0)
+    assert pool.hits == 0 and pool.misses == 1
+    base0 = flat0.base
+    pool.release(flat0)
+    flat1 = _assemble_round(pool, params, mid, 1)
+    assert pool.hits == 1
+    assert flat1.base is base0          # same buffer, recycled
+    assert flat1.tobytes() == params.tobytes()
+
+
+def test_pool_geometry_change_allocates_fresh():
+    mid = uuid.UUID(int=7)
+    pool = GatherBufferPool()
+    a = _assemble_round(pool, _models(1)[0], mid, 0)
+    pool.release(a)
+    b = _assemble_round(pool, np.ones(N_PARAMS // 2, np.float32), mid, 1)
+    assert pool.hits == 0 and pool.misses == 2
+    assert b.size == N_PARAMS // 2
+
+
+def test_pool_bounded_and_rejects_foreign_arrays():
+    pool = GatherBufferPool(max_buffers=2)
+    for _ in range(5):
+        pool.release(np.empty(64, "<f4"))
+    assert pool._count == 2
+    pool.release(np.empty((8, 8), "<f4"))        # not flat
+    pool.release(np.empty(64, ">f4"))            # wrong byte order
+    ro = np.empty(64, "<f4")
+    ro.setflags(write=False)
+    pool.release(ro)                             # not writable
+    assert pool._count == 2
+
+
+def test_pool_steady_state_allocation_is_zero():
+    """The ROADMAP item, pinned: with the pool, a steady-state reassembly
+    round (same geometry as the previous one) allocates O(chunk), not
+    O(model); without it, every round allocates the model afresh."""
+    import tracemalloc
+
+    mid = uuid.UUID(int=9)
+    params = _models(1)[0]
+    model_bytes = params.size * 4
+    chunks = list(chunk_stream(mid, 0, params, CHUNK_ELEMS))
+
+    def one_round(pool, round_):
+        asm = ChunkAssembler(expected_elems=params.size, pool=pool)
+        flat = None
+        for c in chunks:
+            out = asm.add(type(c)(c.model_id, round_, c.chunk_index,
+                                  c.num_chunks, c.crc32, c.params))
+            flat = out if out is not None else flat
+        if pool is not None:
+            pool.release(flat)
+        return flat
+
+    pool = GatherBufferPool()
+    one_round(pool, 0)                    # warm: first round must allocate
+    tracemalloc.start()
+    one_round(pool, 1)
+    _, peak_pooled = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    tracemalloc.start()
+    one_round(None, 1)
+    _, peak_fresh = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    assert peak_fresh >= model_bytes      # no pool: model allocated afresh
+    assert peak_pooled < CHUNK_ELEMS * 4 * 8, (peak_pooled, model_bytes)
+
+
+def test_pool_cycles_through_server_round():
+    """End-to-end: after one warm uplink round, a following round's
+    reassembly hits the pool for every client."""
+    server, _, _, _ = _run_round(3, sequential=False)
+    pool = server._gather_pool
+    assert pool.misses == 3 and pool.hits == 0
+    server.finish_round(_round_result())
+    models, sizes = _models(3), _sizes(3)
+    server.begin_aggregation()
+    for c in range(3):
+        ep = server.uplink_endpoint(c)
+        for ch in chunk_stream(server.model_id, server.round, models[c],
+                               CHUNK_ELEMS):
+            ep.receive_chunk(ch)
+        server.accumulate_update(c, server.pop_uplink(c), sizes[c])
+    assert server.finalize_aggregation() is not None
+    assert pool.hits == 3                 # every round-2 buffer recycled
+
+
+def _round_result():
+    from repro.fl.server import RoundResult
+    return RoundResult(round=0, participants=[], reporters=[], dropped=[],
+                       stopped=[], mean_train_loss=0.0, mean_val_loss=0.0)
+
+
+# -- hypothesis property tests (optional dev dep; mandatory in CI) ------------
+
+
+try:
+    import hypothesis
+except ImportError:
+    hypothesis = None
+
+if hypothesis is not None:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(deadline=None, max_examples=25)
+    @given(st.data())
+    def test_property_completion_order_never_changes_aggregate(data):
+        k = data.draw(st.integers(2, 6), label="clients")
+        n = data.draw(st.integers(1, 400), label="params")
+        rng = np.random.default_rng(k * 1000 + n)
+        ups = [rng.standard_normal(n).astype(np.float32) for _ in range(k)]
+        sizes = [int(s) for s in rng.integers(1, 500, k)]
+        order = data.draw(st.permutations(range(k)), label="order")
+        ref = fedavg(ups, sizes)
+        agg = RunningFedAvg(ups[0].shape)
+        for i in order:
+            agg.add(ups[i], sizes[i])
+        assert agg.result().tobytes() == ref.tobytes()

@@ -15,7 +15,8 @@ from repro.train.optim import SGDConfig
 
 def _make_sim(tmp_path=None, num_clients=4, rounds=3, drop_prob=0.0,
               dropout=0.0, straggler=None, encoding=ParamsEncoding.TA_F32,
-              seed=0, data=None, min_fraction=0.5, chunk_elems=None):
+              seed=0, data=None, min_fraction=0.5, chunk_elems=None,
+              uplink_mode="sequential", uplink_reorder_prob=0.0):
     params = lenet5.init_params(jax.random.PRNGKey(seed))
     flat, spec = flatten_params(params)
     data = data or synthetic_mnist(num_clients * 200, seed=seed)
@@ -36,7 +37,8 @@ def _make_sim(tmp_path=None, num_clients=4, rounds=3, drop_prob=0.0,
         checkpoint_dir=str(tmp_path) if tmp_path else None)
     server = FLServer(cfg, flat)
     return FLSimulation(server, clients, drop_prob=drop_prob, seed=seed,
-                        chunk_elems=chunk_elems)
+                        chunk_elems=chunk_elems, uplink_mode=uplink_mode,
+                        uplink_reorder_prob=uplink_reorder_prob)
 
 
 def test_fl_loss_decreases():
@@ -162,6 +164,30 @@ def test_fl_chunked_lossy_selective_repeat_converges():
     assert len(report.rounds) == 3
     losses = [r.mean_train_loss for r in report.rounds]
     assert losses[-1] < losses[0], losses
+
+
+def test_fl_interleaved_uplink_matches_sequential_bit_exact():
+    """Concurrent multi-client uplink (shared-medium interleaving with
+    reordered frames + incremental aggregation) trains byte-identically to
+    the sequential chunked uplink: completion order cannot leak into the
+    aggregated model (docs/concurrent_uplink.md)."""
+    sim_s = _make_sim(rounds=2, chunk_elems=8192)
+    sim_i = _make_sim(rounds=2, chunk_elems=8192, uplink_mode="interleaved",
+                      uplink_reorder_prob=0.3)
+    rs, ri = sim_s.run(), sim_i.run()
+    assert sim_s.server.global_params.tobytes() == \
+        sim_i.server.global_params.tobytes()
+    assert [r.mean_train_loss for r in rs.rounds] == \
+        [r.mean_train_loss for r in ri.rounds]
+    acc = ri.accounting.by_type
+    assert "FL_Model_Chunk_Uplink" in acc
+    assert "FL_Chunk_Ack" in acc
+    # the shared-medium round report is exposed for airtime analysis
+    assert sim_i.last_medium_report is not None
+    assert sim_i.last_medium_report.airtime_s > 0
+    assert len(sim_i.last_uplink_reports) > 1
+    # steady state: round 2 reassembly recycles round-1 gather buffers
+    assert sim_i.server._gather_pool.hits > 0
 
 
 def test_fl_q8_compressed_updates_converge():

@@ -1,0 +1,256 @@
+"""Reorder-aware BlockReceiveRing: differential tests vs the in-order oracle.
+
+A NUM-slotted ring fed any adversarial permutation of a blockwise transfer
+— reversed, seeded shuffles, duplicate-heavy schedules, two transmission
+windows interleaved — must close to the byte-identical arena an in-order
+delivery produces, and every message type must decode identically from it.
+Gaps stay open (``complete`` False, ``missing_nums`` exact) until a repair
+re-send fills them; the repair's redundant blocks count as duplicates and
+change nothing.
+"""
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.core import fastpath
+from repro.core.messages import (
+    FLChunkNack,
+    FLGlobalModelUpdate,
+    FLModelChunk,
+)
+from repro.transport.coap import (
+    MAX_BLOCK_NUM,
+    BlockReceiveRing,
+    blockwise_messages,
+)
+
+MID = uuid.UUID(bytes=bytes(range(16)))
+
+
+def _payload(n=1993, seed=0):
+    return np.random.default_rng(seed).bytes(n)
+
+
+def _msgs(payload, uri="fl/model/upload"):
+    return blockwise_messages(payload, uri=uri)
+
+
+def _fill(msgs, order):
+    ring = BlockReceiveRing()
+    for i in order:
+        ring.feed(msgs[i])
+    return ring
+
+
+def _oracle(msgs):
+    return _fill(msgs, range(len(msgs)))
+
+
+PERMUTATIONS = {
+    "in_order": lambda n, rng: list(range(n)),
+    "reversed": lambda n, rng: list(range(n))[::-1],
+    "shuffled": lambda n, rng: rng.permutation(n).tolist(),
+    "even_odd": lambda n, rng: list(range(0, n, 2)) + list(range(1, n, 2)),
+    # duplicate-heavy: every block at least once plus 2n seeded repeats
+    "dup_heavy": lambda n, rng: (rng.permutation(n).tolist()
+                                 + rng.integers(0, n, 2 * n).tolist()),
+    # interleaved windows: two full transmissions of the same transfer,
+    # alternating block by block (window 1 is all duplicates)
+    "interleaved_windows": lambda n, rng: [i for k in range(n)
+                                           for i in (k, (k + n // 2) % n)],
+}
+
+
+@pytest.mark.parametrize("name", sorted(PERMUTATIONS))
+def test_permutations_close_to_oracle_bytes(name):
+    payload = _payload()
+    msgs = _msgs(payload)
+    rng = np.random.default_rng(42)
+    ring = _fill(msgs, PERMUTATIONS[name](len(msgs), rng))
+    assert ring.complete, ring.missing_nums()
+    oracle = _oracle(msgs)
+    assert ring.tobytes() == oracle.tobytes() == payload
+    segs = ring.segments()
+    assert len(segs) == 1   # one coalesced arena, reorder or not
+    assert bytes(segs[0]) == payload
+
+
+@pytest.mark.parametrize("name", sorted(PERMUTATIONS))
+@pytest.mark.parametrize("mtype", ["chunk", "global", "nack"])
+def test_permutations_decode_identically(name, mtype):
+    """Byte-identical is necessary; the acceptance bar is that *decode*
+    over the ring's segments equals the in-order decode for real message
+    types (zero-copy segmented decode on a reordered arrival)."""
+    params = np.arange(700, dtype=np.float32)
+    if mtype == "chunk":
+        import zlib
+        msg = FLModelChunk(MID, 3, 0, 1,
+                           zlib.crc32(memoryview(params).cast("B")), params)
+        wire, decode = msg.to_cbor(), FLModelChunk.from_cbor_segments
+    elif mtype == "global":
+        msg = FLGlobalModelUpdate(MID, 3, params, True)
+        wire, decode = msg.to_cbor(), FLGlobalModelUpdate.from_cbor_segments
+    else:
+        msg = FLChunkNack(MID, 3, 64, tuple(range(0, 64, 3)))
+        wire = msg.to_cbor()
+        decode = lambda segs: FLChunkNack.from_cbor_segments(
+            segs, expect_num_chunks=64)
+    msgs = _msgs(wire)
+    rng = np.random.default_rng(7)
+    ring = _fill(msgs, PERMUTATIONS[name](len(msgs), rng))
+    assert ring.complete
+    back = decode(ring.segments())
+    oracle = decode(_oracle(msgs).segments())
+    if mtype == "nack":
+        assert back == oracle == msg
+    else:
+        for got in (back, oracle):
+            assert got.model_id == msg.model_id and got.round == msg.round
+            assert np.asarray(got.params, np.float32).tobytes() == \
+                params.tobytes()
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_seeded_adversarial_schedules(seed):
+    """Random payload size / block order / duplicate mix, vs the oracle."""
+    rng = np.random.default_rng((3, seed))
+    payload = _payload(int(rng.integers(1, 4000)), seed=seed)
+    msgs = _msgs(payload)
+    n = len(msgs)
+    order = rng.permutation(n).tolist() + \
+        rng.integers(0, n, int(rng.integers(0, 3 * n))).tolist()
+    rng.shuffle(order)
+    # every block appears at least once in `order`'s first-occurrence set
+    ring = _fill(msgs, order)
+    assert ring.complete
+    assert ring.tobytes() == payload
+    assert ring.duplicates == len(order) - n
+
+
+def test_gap_stays_open_until_repair_fills_it():
+    payload = _payload(1600)
+    msgs = _msgs(payload)
+    ring = BlockReceiveRing()
+    for m in msgs[:4] + msgs[9:]:
+        ring.feed(m)
+    assert not ring.complete
+    assert ring.missing_nums() == [4, 5, 6, 7, 8]
+    with pytest.raises(ValueError, match="incomplete"):
+        ring.segments()
+    # NACK repair re-sends the whole chunk: missing NUMs fill, rest drop
+    dups_before = ring.duplicates
+    for m in msgs:
+        ring.feed(m)
+    assert ring.complete and ring.missing_nums() == []
+    assert ring.duplicates == dups_before + len(msgs) - 5
+    assert ring.tobytes() == payload
+
+
+def test_unknown_tail_reports_no_false_missing():
+    msgs = _msgs(_payload(1600))
+    ring = BlockReceiveRing()
+    for m in msgs[:3]:       # contiguous prefix, final block never seen
+        ring.feed(m)
+    assert not ring.complete
+    assert ring.missing_nums() == []   # nothing *known* missing yet
+
+
+def test_single_block_message_is_complete():
+    wire = b"\x83\x01\x02\x03"          # < 64 B: no Block1 option
+    (msg,) = _msgs(wire)
+    ring = BlockReceiveRing()
+    ring.feed(msg)
+    assert ring.complete and ring.num_blocks == 1
+    assert ring.tobytes() == wire
+
+
+def test_protocol_violations_rejected():
+    ring = BlockReceiveRing()
+    with pytest.raises(ValueError, match="out of range"):
+        ring.add_block(b"x", num=MAX_BLOCK_NUM)
+    ring = BlockReceiveRing()
+    ring.add_block(b"x" * 64, num=2, last=True)
+    with pytest.raises(ValueError, match="beyond final"):
+        ring.add_block(b"y" * 64, num=3)
+    with pytest.raises(ValueError, match="conflicting final"):
+        ring.add_block(b"y" * 64, num=1, last=True)
+    ring = BlockReceiveRing()
+    ring.add_block(b"x" * 64, num=5)
+    with pytest.raises(ValueError, match="below an already-received"):
+        ring.add_block(b"y" * 64, num=3, last=True)
+    ring = BlockReceiveRing()
+    ring.add_block(b"x" * 64)           # legacy append mode
+    with pytest.raises(ValueError, match="cannot mix"):
+        ring.add_block(b"y" * 64, num=1)
+
+
+def test_legacy_append_mode_unchanged():
+    """The in-order append path (no NUM): seal-and-continue semantics are
+    what the CON `deliver_payload` receive path relies on."""
+    data = _payload(300)
+    ring = BlockReceiveRing()
+    ring.add_block(data[:64])
+    ring.add_block(data[64:128])
+    first = ring.segments()              # seals the arena
+    ring.add_block(data[128:])           # starts a new arena segment
+    assert ring.tobytes() == data
+    assert bytes(first[0]) == data[:128]
+    assert ring.complete                 # append mode has no gap concept
+
+
+def test_clear_resets_slotted_state():
+    msgs = _msgs(_payload(500))
+    ring = _fill(msgs, range(len(msgs)))
+    ring.clear()
+    assert len(ring) == 0 and ring.num_blocks == 0 and ring.duplicates == 0
+    # a cleared ring accepts a fresh transfer in either mode
+    ring.add_block(b"z" * 10)
+    assert ring.tobytes() == b"z" * 10
+
+
+def test_decode_from_reordered_ring_is_borrowed_view():
+    """An uninterrupted (complete) slotted arena decodes the params payload
+    as a zero-copy borrowed view of the ring's own memory — reorder does
+    not cost the receive path its zero-copy property."""
+    import zlib
+    params = np.arange(512, dtype=np.float32)
+    msg = FLModelChunk(MID, 1, 0, 1,
+                       zlib.crc32(memoryview(params).cast("B")), params)
+    msgs = _msgs(msg.to_cbor())
+    ring = _fill(msgs, list(range(len(msgs)))[::-1])
+    segs = ring.segments()
+    item = fastpath.decode(segs)
+    payload = item[5].value              # Tag(ta-f32le, <payload bstr>)
+    assert isinstance(payload, memoryview)   # borrowed, not copied out
+    assert np.shares_memory(np.frombuffer(payload, np.uint8),
+                            np.frombuffer(segs[0], np.uint8))
+
+
+# -- hypothesis property tests (optional dev dep; mandatory in CI) ------------
+
+
+try:
+    import hypothesis
+except ImportError:
+    hypothesis = None
+
+if hypothesis is not None:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(deadline=None, max_examples=50)
+    @given(st.data())
+    def test_property_any_schedule_matches_oracle(data):
+        n_bytes = data.draw(st.integers(1, 2500), label="payload_bytes")
+        payload = np.random.default_rng(n_bytes).bytes(n_bytes)
+        msgs = _msgs(payload)
+        n = len(msgs)
+        extra = data.draw(st.lists(st.integers(0, n - 1), max_size=2 * n),
+                          label="dups")
+        order = data.draw(st.permutations(list(range(n)) + extra),
+                          label="order")
+        ring = _fill(msgs, order)
+        assert ring.complete
+        assert ring.tobytes() == payload
+        assert ring.duplicates == len(order) - n
