@@ -98,15 +98,31 @@ def main() -> int:
 
     from benchmarks import (
         bench_codec_throughput,
+        bench_fault_sweep,
         bench_fl_round,
         bench_lenet,
         bench_message_sizes,
     )
 
+    def _merge_into_bench_json(update: dict) -> None:
+        # BENCH_codec.json carries sections from more than one bench; a
+        # re-run of one section must never clobber the committed numbers
+        # of another (the codec baseline was measured on dev hardware)
+        record = (json.loads(BENCH_JSON.read_text())
+                  if BENCH_JSON.exists() else {})
+        record.update(update)
+        BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+
     def codec_run():
         rows, record = bench_codec_throughput.run_json()
-        BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+        _merge_into_bench_json(record)
         rows.append(f"# wrote {BENCH_JSON}")
+        return rows
+
+    def fault_sweep_run():
+        rows, record = bench_fault_sweep.run_json()
+        _merge_into_bench_json({"fault_sweep": record})
+        rows.append(f"# merged fault_sweep into {BENCH_JSON}")
         return rows
 
     sections = [
@@ -115,6 +131,7 @@ def main() -> int:
         ("codec_throughput", codec_run),
         ("fl_round_accounting", bench_fl_round.run),
         ("uplink_airtime_shared_medium", bench_fl_round.run_uplink_airtime),
+        ("fault_sweep", fault_sweep_run),
     ]
     for name, fn in sections:
         t0 = time.time()

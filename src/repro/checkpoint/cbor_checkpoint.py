@@ -203,6 +203,38 @@ class CheckpointManager:
         self._prune()
         return path
 
+    # -- named auxiliary state (e.g. mid-round aggregation snapshots) --------
+    #
+    # Named files live beside the round checkpoints but outside the
+    # ``ckpt_*`` namespace, so they are never pruned or picked up by
+    # ``restore_latest`` — they are keyed state with their own lifecycle
+    # (fl.round rewrites one per fold and deletes it when the round closes).
+
+    def _named_path(self, name: str) -> Path:
+        if "/" in name or name.startswith("ckpt_"):
+            raise ValueError(f"invalid auxiliary checkpoint name {name!r}")
+        return self.dir / f"{name}.cbor"
+
+    def save_named(self, name: str, tree: Any, **kw) -> Path:
+        """Atomically write auxiliary state under ``name`` (same format,
+        same tmp-then-replace crash safety as round checkpoints)."""
+        return save_checkpoint(self._named_path(name), tree, **kw)
+
+    def restore_named(self, name: str, tree_like: Any):
+        """Restore auxiliary state by name; None when absent or corrupt
+        (a torn snapshot write degrades to 'no snapshot', never an
+        error — recovery then falls back to re-running the round)."""
+        path = self._named_path(name)
+        if not path.exists():
+            return None
+        try:
+            return restore_checkpoint(path, tree_like)
+        except (CheckpointCorrupt, StopIteration, cbor.CBORDecodeError):
+            return None
+
+    def delete_named(self, name: str) -> None:
+        self._named_path(name).unlink(missing_ok=True)
+
     def _all(self) -> list[Path]:
         return sorted(self.dir.glob("ckpt_*.cbor"))
 

@@ -1,4 +1,4 @@
-from repro.fl.aggregation import fedavg
+from repro.fl.aggregation import RunningFedAvg, fedavg
 from repro.fl.chunking import (
     AssemblerReceiver,
     ChunkAssembler,
@@ -7,10 +7,24 @@ from repro.fl.chunking import (
     run_selective_repeat,
 )
 from repro.fl.client import FLClient
-from repro.fl.server import FLServer, OrchestrationConfig
+from repro.fl.faults import (
+    Blackout,
+    ChunkLoss,
+    ClientCrash,
+    FaultPlan,
+    FeedbackLoss,
+    FrameFault,
+    ServerCrash,
+    ServerCrashed,
+)
+from repro.fl.round import BackoffPolicy, RoundEngine, RoundPolicy
+from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
 from repro.fl.simulation import FLSimulation, SimulationReport
 
-__all__ = ["fedavg", "FLClient", "FLServer", "OrchestrationConfig",
-           "FLSimulation", "SimulationReport", "AssemblerReceiver",
-           "ChunkAssembler", "ChunkTransferReport", "chunk_stream",
-           "run_selective_repeat"]
+__all__ = ["fedavg", "RunningFedAvg", "FLClient", "FLServer",
+           "OrchestrationConfig", "RoundResult", "FLSimulation",
+           "SimulationReport", "AssemblerReceiver", "ChunkAssembler",
+           "ChunkTransferReport", "chunk_stream", "run_selective_repeat",
+           "FaultPlan", "ChunkLoss", "Blackout", "FrameFault",
+           "FeedbackLoss", "ClientCrash", "ServerCrash", "ServerCrashed",
+           "BackoffPolicy", "RoundPolicy", "RoundEngine"]

@@ -69,6 +69,32 @@ class RunningFedAvg:
             raise ValueError("no updates to aggregate")
         return ((self._hi + self._lo) / self._weight).astype(np.float32)
 
+    # -- crash-recovery snapshots (fl.round) ---------------------------------
+    #
+    # The accumulator *is* the server's mid-round state: persisting (hi, lo,
+    # weight, n_updates) after each fold and restoring it later continues
+    # the sum with the exact f64 pair the crashed process held.  Because
+    # f64 arrays round-trip bit-exactly through the CBOR typed-array codec
+    # and the accumulation is order-independent, a resumed round's final
+    # f32 model is byte-identical to the uninterrupted run.
+
+    def state(self) -> dict:
+        """The exact accumulator state (live references, not copies)."""
+        return {"hi": self._hi, "lo": self._lo,
+                "weight": self._weight, "n_updates": self.n_updates}
+
+    @classmethod
+    def from_state(cls, *, hi: np.ndarray, lo: np.ndarray,
+                   weight: float, n_updates: int) -> "RunningFedAvg":
+        """Rebuild an accumulator from a snapshot (``state()`` shape)."""
+        hi = np.asarray(hi, np.float64)
+        agg = cls(hi.shape)
+        agg._hi = hi
+        agg._lo = np.asarray(lo, np.float64)
+        agg._weight = float(weight)
+        agg.n_updates = int(n_updates)
+        return agg
+
 
 def fedavg(updates: Sequence[np.ndarray],
            dataset_sizes: Sequence[int]) -> np.ndarray:

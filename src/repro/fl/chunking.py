@@ -369,6 +369,7 @@ class ChunkTransferReport:
     control_messages: int = 0
     control_payload_bytes: int = 0
     lost_feedback: int = 0                # NACK/ACKs the link failed to carry
+    corrupt_chunks: int = 0               # damaged in flight, re-requested
     completed: list[int] = field(default_factory=list)  # receiver positions
     stats: TransferStats = field(default_factory=TransferStats)
 
@@ -399,6 +400,12 @@ def run_selective_repeat(
     max_windows: int = 1 + MAX_REPAIR_WINDOWS,
     validate: bool = True,
     record: Callable[[str, TransferStats], None] | None = None,
+    backoff=None,
+    turnaround_s: float = 0.05,
+    airtime_budget_s: float | None = None,
+    sender_crash: tuple[int, int] | None = None,
+    feedback_lost: Callable[[int, int], bool] | None = None,
+    client_ids: Sequence[int] | None = None,
 ) -> ChunkTransferReport:
     """Drive one selective-repeat transfer of ``chunks`` to ``receivers``.
 
@@ -416,6 +423,24 @@ def run_selective_repeat(
     window budget is spent.  ``record`` receives per-message-type
     ``TransferStats`` (``FL_Model_Chunk`` / ``FL_Chunk_Nack`` /
     ``FL_Chunk_Ack``) for round accounting.
+
+    Round-lifecycle hooks (fl.round):
+
+    * ``backoff`` — a ``BackoffPolicy``: repair window k waits
+      ``backoff.delay(k)`` of link time first (exponential, scaled by the
+      link's loss estimate) and its ``retry_budget`` replaces
+      ``max_windows``;
+    * ``airtime_budget_s`` — stop opening windows once the transfer has
+      consumed this much round-clock time (the round's deadline share);
+    * ``sender_crash`` — ``(window, n_sends)``: the sender dies in that
+      window after that many chunk transmissions (FaultPlan client crash);
+    * ``feedback_lost(receiver_idx, window)`` — force-lose that feedback
+      message after it was accounted (FaultPlan feedback loss);
+    * ``client_ids[r]`` — the FL client id behind receiver slot ``r``, so
+      the link's ``chunk_drop`` schedule (a ``FaultPlan``'s chunk loss) is
+      keyed by client identity, not slot position.  Without it the uplink's
+      single slot would alias every client onto id 0 and a downlink
+      cohort's ids would shift with selection order.
     """
     if not chunks:
         raise ValueError("empty chunk stream")
@@ -437,16 +462,30 @@ def run_selective_repeat(
     acked: set[int] = set()      # receivers whose ACK reached the sender
     to_send = list(range(n))
     window = 0
+    if backoff is not None:
+        max_windows = backoff.max_windows
+    t_start = link.round_clock_s
     while window < max_windows and len(acked) < len(receivers):
-        if to_send:
+        if (airtime_budget_s is not None
+                and link.round_clock_s - t_start >= airtime_budget_s):
+            break                # round deadline: no airtime left to repair
+        if window > 0 and backoff is not None:
+            # exponential medium-aware backoff before each repair window:
+            # a lossy channel waits longer instead of burning its retry
+            # budget back-to-back into the same conditions
+            link.advance(backoff.delay(window, turnaround_s=turnaround_s,
+                                       loss_estimate=link.loss_estimate()))
+        crash_now = sender_crash is not None and window >= sender_crash[0]
+        send_list = to_send[:sender_crash[1]] if crash_now else to_send
+        if send_list:
             delivery = link.request_stream(
-                [wires[i] for i in to_send], uri=uri, code=code,
-                indices=to_send, num_receivers=len(receivers),
-                multicast=multicast, window=window)
+                [wires[i] for i in send_list], uri=uri, code=code,
+                indices=send_list, num_receivers=len(receivers),
+                multicast=multicast, window=window, client_ids=client_ids)
             if record:
                 record("FL_Model_Chunk", delivery.stats)
             report.stats.add(delivery.stats)
-            report.chunk_sends += len(to_send)
+            report.chunk_sends += len(send_list)
             report.payload_bytes += delivery.stats.payload_bytes
             for i in sorted(set().union(*delivery.delivered)):
                 # fan out the sender-side message object: the wire bytes
@@ -456,6 +495,8 @@ def run_selective_repeat(
                 for ridx, rcv in enumerate(receivers):
                     if i in delivery.delivered[ridx]:
                         rcv.receive_chunk(msg)
+        if crash_now:
+            break                # the sender died mid-window: no feedback
         # NACK round-trip: every not-yet-acked receiver reports its state.
         missing_union: set[int] = set()
         for ridx, rcv in enumerate(receivers):
@@ -476,7 +517,9 @@ def run_selective_repeat(
             report.stats.add(stats)
             report.control_messages += 1
             report.control_payload_bytes += len(payload)
-            if stats.failed_messages:
+            if stats.failed_messages or (
+                    feedback_lost is not None
+                    and feedback_lost(ridx, window)):
                 report.lost_feedback += 1
                 continue          # the sender never saw this feedback
             if is_ack:
@@ -520,7 +563,9 @@ class UplinkSession:
                  feedback_uri: str = "fl/model/upload/fb",
                  code: Code = Code.POST,
                  max_windows: int = 1 + MAX_REPAIR_WINDOWS,
-                 validate: bool = True) -> None:
+                 validate: bool = True,
+                 start_at: float = 0.0,
+                 crash_at: tuple[int, int] | None = None) -> None:
         if not chunks:
             raise ValueError("empty chunk stream")
         self.client_id = client_id
@@ -549,16 +594,40 @@ class UplinkSession:
         self.assembled = False      # the receiver completed reassembly
         self.rings: dict[int, BlockReceiveRing] = {}   # in-flight chunks
         self.delivered_chunks: set[int] = set()
+        self.start_at = start_at    # readiness on the round clock (training)
         self.ready_at = 0.0         # turnaround gate for the next window
         self.done_at: float | None = None
+        self.crash_at = crash_at    # (window, frames): client dies there
+        self.crashed = False
+        self.expired = False        # still unfinished at the round deadline
         self._frames = iter(())     # lazy frame source, current window
         self._lookahead = None
+        self._frames_in_window = 0
         self._window_stats = TransferStats()
         self._forced: dict[int, bool] = {}   # chunk_drop verdicts, 1 window
 
     @property
     def finished(self) -> bool:
-        return self.acked or self.window >= self.max_windows
+        return (self.acked or self.crashed or self.expired
+                or self.window >= self.max_windows)
+
+    def crash_due(self) -> bool:
+        """Has this session reached its injected crash point?  (checked
+        before every transmission and window boundary)."""
+        if self.crash_at is None or self.crashed:
+            return False
+        cw, cf = self.crash_at
+        return self.window > cw or (self.window == cw
+                                    and self._frames_in_window >= cf)
+
+    def halt(self, *, expired: bool = False) -> None:
+        """Stop transmitting immediately (crash or deadline expiry)."""
+        if expired:
+            self.expired = True
+        else:
+            self.crashed = True
+        self._frames = iter(())
+        self._lookahead = None
 
     @property
     def has_frame(self) -> bool:
@@ -581,10 +650,21 @@ def _enqueue_window(medium: SharedMedium, s: UplinkSession) -> None:
                      for i in s.to_send}
     s.report.chunk_sends += len(s.to_send)
     s.report.payload_bytes += s._window_stats.payload_bytes
+    s._frames_in_window = 0
     s._frames = iter_tagged_frames(
         [s.wires[i] for i in s.to_send], uri=s.uri, client=s.client_id,
         window=s.window, indices=s.to_send, code=s.code)
     s._advance()
+
+
+# What an in-flight-damaged frame can raise while its chunk is decoded or
+# CRC-verified: CBORDecodeError is a ValueError subclass; misaligned
+# payload bytes surface as type/shape/bounds errors from the decode layer.
+# A failure here is *data* corruption, never a programming error escape
+# hatch: the chunk stays un-delivered, so the NACK round-trip re-requests
+# it — corruption costs a repair window, never correctness.
+_CORRUPT_ERRORS = (ValueError, TypeError, KeyError, IndexError,
+                   OverflowError, EOFError)
 
 
 def _deliver(by_client: dict[int, UplinkSession], frame,
@@ -600,10 +680,21 @@ def _deliver(by_client: dict[int, UplinkSession], frame,
     ring.feed(frame.msg)             # slots by Block1 NUM; dups dropped
     if not ring.complete:
         return                       # gap: wait for repair to fill it
-    msg = FLModelChunk.from_cbor_segments(ring.segments())
+    try:
+        msg = FLModelChunk.from_cbor_segments(ring.segments())
+    except _CORRUPT_ERRORS:
+        del sess.rings[frame.chunk_index]   # garbage arena: drop it whole
+        sess.report.corrupt_chunks += 1
+        return                       # not delivered => NACK re-requests it
     del sess.rings[frame.chunk_index]   # arena freed once msg is consumed
+    try:
+        done = sess.receiver.receive_chunk(msg)
+    except _CORRUPT_ERRORS:
+        # decoded as CBOR but failed chunk CRC / geometry checks: same
+        # recovery as an undecodable arena
+        sess.report.corrupt_chunks += 1
+        return
     sess.delivered_chunks.add(frame.chunk_index)
-    done = sess.receiver.receive_chunk(msg)
     if done and not sess.assembled:
         sess.assembled = True
         if on_complete is not None:
@@ -611,7 +702,7 @@ def _deliver(by_client: dict[int, UplinkSession], frame,
 
 
 def _window_feedback(medium: SharedMedium, s: UplinkSession,
-                     record) -> None:
+                     record, *, backoff=None, faults=None) -> None:
     """Window boundary: account the data window, run the NACK/ACK
     round-trip over the medium, and stage the next window (or finish)."""
     w = s._window_stats
@@ -631,6 +722,9 @@ def _window_feedback(medium: SharedMedium, s: UplinkSession,
         _validate(payload, mtype)
     delivered, fstats = medium.transmit_payload(
         payload, uri=s.feedback_uri, code=Code.CONTENT)
+    if delivered and faults is not None and faults.feedback_lost(
+            s.client_id, s.window):
+        delivered = False        # injected: the client never heard it
     if record is not None:
         record(mtype, fstats)
     s.report.stats.add(fstats)
@@ -652,11 +746,21 @@ def _window_feedback(medium: SharedMedium, s: UplinkSession,
         s._lookahead = None
     else:
         _enqueue_window(medium, s)
-        # a repair window may transmit immediately (the feedback gap was
-        # already paid); an *empty* one (lost feedback) waits a poll
-        # interval before asking the receiver again
-        s.ready_at = (medium.clock if s.has_frame
-                      else medium.clock + medium.turnaround_s)
+        if backoff is not None:
+            # exponential medium-aware backoff before the repair window:
+            # attempt number = the window about to run (1-based repairs)
+            delay = backoff.delay(s.window,
+                                  turnaround_s=medium.turnaround_s,
+                                  loss_estimate=medium.loss_estimate())
+            s.ready_at = medium.clock + (delay if s.has_frame
+                                         else max(delay,
+                                                  medium.turnaround_s))
+        else:
+            # a repair window may transmit immediately (the feedback gap
+            # was already paid); an *empty* one (lost feedback) waits a
+            # poll interval before asking the receiver again
+            s.ready_at = (medium.clock if s.has_frame
+                          else medium.clock + medium.turnaround_s)
 
 
 def run_interleaved_uplinks(
@@ -666,6 +770,9 @@ def run_interleaved_uplinks(
     sequential: bool = False,
     record: Callable[[str, TransferStats], None] | None = None,
     on_complete: Callable[[UplinkSession], None] | None = None,
+    deadline_s: float | None = None,
+    backoff=None,
+    faults=None,
 ) -> MediumReport:
     """Drive many clients' selective-repeat uplinks over one shared medium.
 
@@ -681,6 +788,14 @@ def run_interleaved_uplinks(
     finishes reassembly — mid-schedule — which is what lets the server
     fold each model into the running aggregate and recycle the gather
     buffer while other clients are still transmitting.
+
+    Round-lifecycle hooks (fl.round): ``deadline_s`` is the round deadline
+    on the medium clock — sessions unfinished at that instant are marked
+    ``expired`` (stragglers) and stop transmitting; ``backoff`` delays
+    repair windows (see ``_window_feedback``); ``faults`` injects feedback
+    loss, and sessions carry their own ``crash_at`` points.  Session
+    ``start_at`` gates when a client becomes ready at all (its training
+    finish time), so uploads begin staggered, not all at clock zero.
     """
     sessions = list(sessions)
     by_client: dict[int, UplinkSession] = {}
@@ -689,9 +804,14 @@ def run_interleaved_uplinks(
             raise ValueError(f"duplicate session client id {s.client_id}")
         by_client[s.client_id] = s
     for s in sessions:
-        s.ready_at = medium.clock
+        s.ready_at = max(medium.clock, s.start_at)
         _enqueue_window(medium, s)
     while True:
+        if deadline_s is not None and medium.clock >= deadline_s:
+            for s in sessions:
+                if not s.finished:
+                    s.halt(expired=True)   # straggler: the round moved on
+            break
         active = [s for s in sessions if not s.finished]
         if not active:
             break
@@ -702,12 +822,19 @@ def run_interleaved_uplinks(
         else:
             cands = [s for s in active if s.ready_at <= medium.clock]
             if not cands:
-                medium.advance_to(min(s.ready_at for s in active))
+                t = min(s.ready_at for s in active)
+                if deadline_s is not None:
+                    t = min(t, deadline_s)
+                medium.advance_to(t)
                 continue
         s = by_client[medium.arbitrate([c.client_id for c in cands])]
+        if s.crash_due():
+            s.halt()                 # injected client crash, mid-upload
+            continue
         if s.has_frame:
             frame = s._lookahead
             s._advance()
+            s._frames_in_window += 1
             for fr in medium.transmit(frame, s._window_stats,
                                       drop=s._forced.get(frame.chunk_index)):
                 _deliver(by_client, fr, on_complete)
@@ -723,7 +850,8 @@ def run_interleaved_uplinks(
                     _deliver(by_client, fr, on_complete)
                 s.ready_at = medium.clock + medium.turnaround_s
         else:
-            _window_feedback(medium, s, record)   # turnaround passed
+            _window_feedback(medium, s, record,   # turnaround passed
+                             backoff=backoff, faults=faults)
     for fr in medium.flush():      # post-ACK jitter releases: late dups
         _deliver(by_client, fr, on_complete)
     return MediumReport(

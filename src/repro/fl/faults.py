@@ -1,0 +1,306 @@
+"""Deterministic fault injection for the FL round lifecycle.
+
+A ``FaultPlan`` is one seeded, composable schedule of every fault the
+round engine and transport layers know how to survive:
+
+  * **chunk loss** — seeded per-(window, chunk, client) drop verdicts,
+    replacing the ad-hoc ``chunk_drop`` closures tests used to hand-roll
+    (``ChunkLoss``; ``FaultPlan.as_chunk_drop()`` adapts it to the
+    ``ChunkDropFn`` signature every transport already accepts);
+  * **link blackouts** — intervals of the round's virtual clock during
+    which no frame crosses the medium (``Blackout``); CON control
+    transfers retry *through* a short blackout and fail through a long
+    one, NON data frames are simply lost and repaired by NACK;
+  * **frame corruption / truncation** — delivered frames whose payload
+    bytes are damaged in flight (``FrameFault``); the receive path must
+    detect (CBOR decode / per-chunk CRC), discard, and re-request, never
+    crash or install garbage;
+  * **lost feedback** — a NACK/ACK that the server processed but the
+    client never heard (``FeedbackLoss``): costs a poll window, never
+    correctness;
+  * **client crashes** — a client dying mid-train (never reports),
+    mid-upload (stops transmitting partway through window 0), or
+    mid-repair-window (dies after ``at_window`` repair rounds), leaving
+    the server with partial reassembly state it must shed gracefully
+    (``ClientCrash``);
+  * **server crashes** — the aggregator process dying after the Nth fold
+    of a round (``ServerCrash`` -> ``ServerCrashed`` raised mid-round);
+    recovery resumes from the aggregation snapshot
+    (``fl.round.save_agg_snapshot``) and must reproduce the fault-free
+    round's global model bit for bit.
+
+Every query is a pure function of the plan (no hidden RNG state), so a
+plan replays identically however many times — and across processes —
+which is what lets the chaos CI job and the differential recovery
+harness re-run the exact same schedule after a crash.
+
+``FaultPlan.random(seed, ...)`` derives a full schedule from one integer,
+the shape the chaos job replays: commit the seeds that found a bug, and
+the failure reproduces forever.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import Callable
+
+import numpy as np
+
+
+class ServerCrashed(RuntimeError):
+    """The injected server crash: raised mid-round after the fold named
+    by the plan's ``ServerCrash``.  The aggregation snapshot for every
+    fold so far is already durable when this propagates (snapshots are
+    written synchronously after each fold, *before* the crash check)."""
+
+    def __init__(self, round_: int, folds: int) -> None:
+        super().__init__(
+            f"injected server crash in round {round_} after {folds} fold(s)")
+        self.round = round_
+        self.folds = folds
+
+
+@dataclass(frozen=True)
+class ChunkLoss:
+    """Seeded per-(window, chunk, client) drop verdicts.
+
+    The verdict for a given key is independent of scheduling order, so
+    sequential and interleaved schedules lose the *same* chunks — the
+    property every cross-mode differential test relies on."""
+
+    rate: float
+    seed: int = 42
+
+    def drops(self, window: int, chunk_index: int, client: int) -> bool:
+        if self.rate <= 0.0:
+            return False
+        return bool(np.random.default_rng(
+            (self.seed, window, chunk_index, client)).random() < self.rate)
+
+
+@dataclass(frozen=True)
+class Blackout:
+    """No frame delivered while ``start_s <= t < end_s`` on the round's
+    virtual clock.  Transmissions still cost airtime (the radio does not
+    know the channel is dead); delivery is what fails."""
+
+    start_s: float
+    end_s: float
+
+    def covers(self, t: float) -> bool:
+        return self.start_s <= t < self.end_s
+
+
+@dataclass(frozen=True)
+class FrameFault:
+    """Damage one data frame in flight.
+
+    ``kind`` is ``"corrupt"`` (a payload byte flipped), ``"truncate"``
+    (final payload byte lost), or ``"drop"``.  Match fields left ``None``
+    are wildcards, so ``FrameFault("corrupt", client=2)`` damages every
+    frame client 2 sends while ``FrameFault("corrupt", client=2,
+    window=1, chunk_index=3, block_num=0)`` hits exactly one frame."""
+
+    kind: str
+    client: int | None = None
+    window: int | None = None
+    chunk_index: int | None = None
+    block_num: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("corrupt", "truncate", "drop"):
+            raise ValueError(f"unknown frame-fault kind {self.kind!r}")
+
+    def matches(self, *, client: int, window: int, chunk_index: int,
+                block_num: int) -> bool:
+        return all(want is None or want == got for want, got in (
+            (self.client, client), (self.window, window),
+            (self.chunk_index, chunk_index), (self.block_num, block_num)))
+
+
+@dataclass(frozen=True)
+class FeedbackLoss:
+    """The (client, window) NACK/ACK the client never receives."""
+
+    client: int
+    window: int
+
+
+@dataclass(frozen=True)
+class ClientCrash:
+    """One client dying at a named point of the round.
+
+    ``phase``:
+      * ``"train"``  — dies before reporting progress: a silent dropout;
+      * ``"upload"`` — dies during window 0 of its chunked upload, after
+        ``at_chunk`` chunk transmissions (frames for the interleaved
+        scheduler: ``at_frame``);
+      * ``"repair"`` — completes ``at_window`` windows then dies inside
+        the repair phase, leaving the server mid-reassembly.
+    """
+
+    client: int
+    phase: str
+    at_window: int = 0
+    at_chunk: int = 0
+    at_frame: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.phase not in ("train", "upload", "repair"):
+            raise ValueError(f"unknown crash phase {self.phase!r}")
+
+    @property
+    def crash_window(self) -> int:
+        """The upload window in which the client stops transmitting."""
+        return 0 if self.phase == "upload" else max(1, self.at_window)
+
+
+@dataclass(frozen=True)
+class ServerCrash:
+    """Kill the aggregator after the ``after_folds``-th fold of round
+    ``at_round`` (``None`` = whichever round reaches that fold count
+    first)."""
+
+    after_folds: int
+    at_round: int | None = None
+
+    def due(self, round_: int, folds: int) -> bool:
+        if self.at_round is not None and round_ != self.at_round:
+            return False
+        return folds == self.after_folds
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """One composable, exactly-replayable schedule of faults.
+
+    All-empty (the default) injects nothing — every query short-circuits
+    to the happy path, so a plan can be threaded through unconditionally.
+    """
+
+    seed: int = 0
+    chunk_loss: ChunkLoss | None = None
+    blackouts: tuple[Blackout, ...] = ()
+    frame_faults: tuple[FrameFault, ...] = ()
+    feedback_losses: tuple[FeedbackLoss, ...] = ()
+    client_crashes: tuple[ClientCrash, ...] = ()
+    server_crashes: tuple[ServerCrash, ...] = ()
+
+    def __post_init__(self) -> None:  # tolerate list literals in tests
+        for f in ("blackouts", "frame_faults", "feedback_losses",
+                  "client_crashes", "server_crashes"):
+            v = getattr(self, f)
+            if not isinstance(v, tuple):
+                object.__setattr__(self, f, tuple(v))
+        seen: set[int] = set()
+        for c in self.client_crashes:
+            if c.client in seen:
+                raise ValueError(
+                    f"client {c.client} has more than one crash")
+            seen.add(c.client)
+
+    # -- transport-facing queries -------------------------------------------
+
+    def as_chunk_drop(self) -> Callable[[str, int, int, int], bool] | None:
+        """The plan's chunk-loss schedule in the ``ChunkDropFn`` shape
+        every transport hook accepts (None when the plan has no chunk
+        loss, so callers can fall back to a legacy hook)."""
+        if self.chunk_loss is None:
+            return None
+        loss = self.chunk_loss
+
+        def drop(uri: str, window: int, index: int, client: int) -> bool:
+            return loss.drops(window, index, client)
+
+        return drop
+
+    def blackout_at(self, t: float) -> bool:
+        return any(b.covers(t) for b in self.blackouts)
+
+    def frame_verdict(self, *, client: int, window: int, chunk_index: int,
+                      block_num: int) -> str | None:
+        """``"corrupt"`` / ``"truncate"`` / ``"drop"`` for a matching
+        data frame, else None (deliver intact)."""
+        for ff in self.frame_faults:
+            if ff.matches(client=client, window=window,
+                          chunk_index=chunk_index, block_num=block_num):
+                return ff.kind
+        return None
+
+    def feedback_lost(self, client: int, window: int) -> bool:
+        return any(fl.client == client and fl.window == window
+                   for fl in self.feedback_losses)
+
+    # -- lifecycle-facing queries -------------------------------------------
+
+    def client_crash(self, client: int) -> ClientCrash | None:
+        for c in self.client_crashes:
+            if c.client == client:
+                return c
+        return None
+
+    def server_crash_due(self, round_: int, folds: int) -> bool:
+        return any(s.due(round_, folds) for s in self.server_crashes)
+
+    def check_server_crash(self, round_: int, folds: int) -> None:
+        """Raise ``ServerCrashed`` when the plan says the aggregator dies
+        here — called by the round engine after each durable fold."""
+        if self.server_crash_due(round_, folds):
+            raise ServerCrashed(round_, folds)
+
+    # -- authoring helpers ---------------------------------------------------
+
+    def describe(self) -> str:
+        """One reproducibility line for logs/CI failure messages."""
+        parts = [f"seed={self.seed}"]
+        for f in fields(self):
+            if f.name == "seed":
+                continue
+            v = getattr(self, f.name)
+            if v:
+                parts.append(f"{f.name}={v!r}")
+        return f"FaultPlan({', '.join(parts)})"
+
+    @classmethod
+    def random(cls, seed: int, *, n_clients: int,
+               max_loss_rate: float = 0.3,
+               blackout_prob: float = 0.5,
+               client_crash_prob: float = 0.6,
+               server_crash_prob: float = 0.7,
+               corruption_prob: float = 0.5,
+               round_span_s: float = 60.0) -> "FaultPlan":
+        """Derive a whole chaos schedule from one integer.
+
+        Deterministic: the same seed always produces the same plan, so a
+        failing chaos run is reproducible from its logged seed alone.
+        """
+        rng = np.random.default_rng(seed)
+        chunk_loss = ChunkLoss(rate=float(rng.random()) * max_loss_rate,
+                               seed=seed)
+        blackouts: list[Blackout] = []
+        if float(rng.random()) < blackout_prob:
+            start = float(rng.random()) * round_span_s * 0.5
+            dur = 0.1 + float(rng.random()) * round_span_s * 0.1
+            blackouts.append(Blackout(start, start + dur))
+        crashes: list[ClientCrash] = []
+        if n_clients > 1 and float(rng.random()) < client_crash_prob:
+            victim = int(rng.integers(n_clients))
+            phase = ("train", "upload", "repair")[int(rng.integers(3))]
+            crashes.append(ClientCrash(
+                victim, phase, at_window=1 + int(rng.integers(3)),
+                at_chunk=int(rng.integers(4)),
+                at_frame=int(rng.integers(1, 50))))
+        server_crashes: list[ServerCrash] = []
+        if float(rng.random()) < server_crash_prob:
+            server_crashes.append(ServerCrash(
+                after_folds=1 + int(rng.integers(max(1, n_clients - 1)))))
+        frame_faults: list[FrameFault] = []
+        if float(rng.random()) < corruption_prob:
+            frame_faults.append(FrameFault(
+                kind=("corrupt", "truncate")[int(rng.integers(2))],
+                client=int(rng.integers(n_clients)),
+                window=0, chunk_index=int(rng.integers(4))))
+        return cls(seed=seed, chunk_loss=chunk_loss,
+                   blackouts=tuple(blackouts),
+                   frame_faults=tuple(frame_faults),
+                   client_crashes=tuple(crashes),
+                   server_crashes=tuple(server_crashes))

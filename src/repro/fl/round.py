@@ -1,0 +1,552 @@
+"""Round lifecycle: deadline/quorum policy, backoff, crash-recoverable
+aggregation — the state machine extracted from ``FLSimulation.run_round``.
+
+``FLSimulation`` is now only the *driver*: it owns the clients, the link,
+the medium parameters and the byte accounting.  Everything that decides
+*when a round gives up on whom* lives here:
+
+  * **deadline on the virtual clock** — a round has ``deadline_s`` of
+    virtual time (dissemination + training + uploads all stamped on one
+    clock).  Quorum is evaluated *at the deadline*: stragglers are
+    whatever has not finished by then — there is no static
+    ``straggler_factor`` cull anymore; a slow client is late because its
+    training/upload timeline says so;
+  * **medium-aware backoff** — selective-repeat repair windows wait an
+    exponentially growing, loss-scaled delay (``BackoffPolicy``) with a
+    retry budget, instead of hammering the channel every
+    ``MAX_REPAIR_WINDOWS`` times;
+  * **graceful partial-cohort degradation** — a failed unicast send, a
+    crashed client, a blackout-starved upload each drop exactly one
+    participant; the round aggregates who remains, and if quorum is
+    missed at the deadline the global model is left untouched (the round
+    records the degradation instead of propagating a half-cohort
+    average);
+  * **crash-recoverable aggregation** — after every fold the
+    ``RunningFedAvg`` state (TwoSum hi/lo arrays + exact weight) and the
+    per-client completion bitmap are snapshotted through
+    ``checkpoint/cbor_checkpoint.py``.  A server restarted mid-round
+    resumes from the snapshot, re-collects *only* unfinished clients,
+    ignores duplicate re-folds idempotently, and produces a final global
+    model bit-identical to the uninterrupted run — the accumulator's
+    order-independence (f64 TwoSum state round-trips exactly through the
+    CBOR typed-array codec) is the oracle.
+
+See docs/fault_model.md for the full fault taxonomy and the recovery
+invariants the chaos CI job replays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.fl.aggregation import RunningFedAvg
+from repro.fl.chunking import MAX_REPAIR_WINDOWS
+from repro.fl.faults import FaultPlan
+from repro.fl.server import RoundResult
+from repro.transport.coap import Code
+from repro.transport.medium import SharedMedium
+
+
+@dataclass(frozen=True)
+class BackoffPolicy:
+    """Exponential, medium-aware backoff for selective-repeat repair
+    windows, with a retry budget.
+
+    The delay before repair window ``attempt`` (1-based) is
+
+        min(max_s, base * factor**(attempt-1) * (1 + loss_estimate))
+
+    where ``base`` is ``initial_s`` (or the medium's physical turnaround
+    when ``initial_s`` is None) and ``loss_estimate`` is the medium's
+    observed frame-loss fraction — a lossy/congested channel backs off
+    *harder*, because immediate re-transmission into the same conditions
+    just burns the budget.  ``retry_budget`` bounds total repair windows
+    (the role the bare ``MAX_REPAIR_WINDOWS`` constant used to play).
+    """
+
+    initial_s: float | None = None
+    factor: float = 2.0
+    max_s: float = 10.0
+    retry_budget: int = MAX_REPAIR_WINDOWS
+    medium_aware: bool = True
+
+    def __post_init__(self) -> None:
+        if self.factor < 1.0:
+            raise ValueError("backoff factor must be >= 1")
+        if self.retry_budget < 0:
+            raise ValueError("retry budget must be >= 0")
+
+    @property
+    def max_windows(self) -> int:
+        """Window budget: the initial full window plus the repairs."""
+        return 1 + self.retry_budget
+
+    def delay(self, attempt: int, *, turnaround_s: float = 0.0,
+              loss_estimate: float = 0.0) -> float:
+        base = self.initial_s if self.initial_s is not None else turnaround_s
+        d = base * (self.factor ** max(0, attempt - 1))
+        if self.medium_aware:
+            d *= 1.0 + max(0.0, min(1.0, loss_estimate))
+        return min(d, self.max_s)
+
+
+@dataclass(frozen=True)
+class RoundPolicy:
+    """Per-round lifecycle policy (what used to be scattered through
+    ``run_round`` as ad-hoc constants).
+
+    * ``deadline_s`` — virtual-clock budget for the whole round; None
+      disables deadline culling (quorum then follows the legacy
+      aggregate-what-arrived semantics).
+    * ``train_time_s`` — virtual seconds a ``straggler_factor == 1.0``
+      client spends training; a client's readiness is
+      ``dissemination_end + train_time_s * straggler_factor`` plus its
+      progress-report airtime.
+    * ``backoff`` — repair-window backoff; None keeps the legacy
+      immediate-repair behaviour (window budget ``MAX_REPAIR_WINDOWS``).
+    * ``snapshot_aggregation`` — write the per-fold aggregation snapshot
+      (requires the server to have a checkpoint directory).
+    """
+
+    deadline_s: float | None = None
+    train_time_s: float = 1.0
+    backoff: BackoffPolicy | None = None
+    snapshot_aggregation: bool = True
+
+
+# -- crash-recoverable aggregation snapshots ---------------------------------
+#
+# One snapshot file per in-flight round, rewritten after every fold (the
+# paper's CBOR serialization as the fault-tolerance substrate): TwoSum
+# hi/lo f64 arrays round-trip exactly through the typed-array codec, the
+# exact weight and fold count travel in the header meta, and client sets
+# travel as fixed-width bitmaps.  ``finalize``d rounds keep the file with
+# a marker until ``finish_round`` clears it, so a crash in the
+# finalize->checkpoint window cannot double-apply the aggregate.
+
+def _bitmap(ids, n: int) -> np.ndarray:
+    arr = np.zeros(n, np.int32)
+    idx = [i for i in set(ids) if 0 <= i < n]
+    if idx:
+        arr[idx] = 1
+    return arr
+
+
+def _ids(bitmap: np.ndarray) -> list[int]:
+    return np.flatnonzero(np.asarray(bitmap)).tolist()
+
+
+def _snapshot_name(round_: int) -> str:
+    return f"agg_{round_:08d}"
+
+
+def save_agg_snapshot(server, ctx: dict, *, finalized: bool = False) -> int:
+    """Persist the in-flight aggregation state; returns bytes written.
+
+    ``ctx`` is the round context the engine accumulated (selected /
+    reporters / dropped / stopped / progress means) — everything a
+    restarted server needs to finish the round without re-running
+    dissemination or training.
+    """
+    agg = server._agg
+    if agg is None:
+        raise RuntimeError("no aggregation in flight to snapshot")
+    n = server.cfg.num_clients
+    state = agg.state()
+    tree = {
+        "hi": state["hi"], "lo": state["lo"],
+        "folded": _bitmap(server.agg_clients, n),
+        "selected": _bitmap(ctx["selected"], n),
+        "reporters": _bitmap(ctx["reporters"], n),
+        "dropped": _bitmap(ctx["dropped"], n),
+        "stopped": _bitmap(ctx["stopped"], n),
+    }
+    meta = {
+        "model_id": str(server.model_id),
+        "weight": float(state["weight"]),
+        "n_updates": int(state["n_updates"]),
+        "finalized": bool(finalized),
+        "mean_train_loss": float(ctx["mean_train_loss"]),
+        "mean_val_loss": float(ctx["mean_val_loss"]),
+        # dataset sizes of folded clients are already inside the weight;
+        # unfinished clients' sizes are re-read from their uploads
+    }
+    path = server.ckpt.save_named(_snapshot_name(server.round), tree,
+                                  step=server.round, round_=server.round,
+                                  meta=meta)
+    return path.stat().st_size
+
+
+def load_agg_snapshot(server) -> dict | None:
+    """Restore the in-flight aggregation of the server's current round.
+
+    Installs the accumulator + folded set into the server and returns the
+    round context, or None when there is no (readable, matching) snapshot.
+    """
+    if server.ckpt is None:
+        return None
+    n = server.cfg.num_clients
+    elems = server.global_params.size
+    tree_like = {
+        "hi": np.zeros(elems, np.float64), "lo": np.zeros(elems, np.float64),
+        "folded": np.zeros(n, np.int32), "selected": np.zeros(n, np.int32),
+        "reporters": np.zeros(n, np.int32), "dropped": np.zeros(n, np.int32),
+        "stopped": np.zeros(n, np.int32),
+    }
+    restored = server.ckpt.restore_named(_snapshot_name(server.round),
+                                         tree_like)
+    if restored is None:
+        return None
+    tree, header = restored
+    meta = header.get("meta", {})
+    if meta.get("model_id") != str(server.model_id):
+        return None               # snapshot of some other model generation
+    agg = RunningFedAvg.from_state(
+        hi=tree["hi"], lo=tree["lo"],
+        weight=meta["weight"], n_updates=meta["n_updates"])
+    folded = _ids(tree["folded"])
+    server.restore_aggregation(agg, folded,
+                               finalized=bool(meta.get("finalized", False)))
+    return {
+        "selected": _ids(tree["selected"]),
+        "reporters": _ids(tree["reporters"]),
+        "dropped": _ids(tree["dropped"]),
+        "stopped": _ids(tree["stopped"]),
+        "folded": folded,
+        "mean_train_loss": float(meta["mean_train_loss"]),
+        "mean_val_loss": float(meta["mean_val_loss"]),
+        "finalized": bool(meta.get("finalized", False)),
+    }
+
+
+def clear_agg_snapshot(server) -> None:
+    if server.ckpt is not None:
+        server.ckpt.delete_named(_snapshot_name(server.round))
+
+
+# -- the round state machine --------------------------------------------------
+
+
+class RoundEngine:
+    """Drives one FL round through its phases on a virtual clock.
+
+    Phase order (paper Fig. 2): dissemination -> local training +
+    progress -> upload collection (+ incremental aggregation with
+    per-fold snapshots) -> finalize -> finish.  ``run()`` starts a fresh
+    round; ``resume()`` continues the current round from its aggregation
+    snapshot after a server restart — re-collecting only the clients the
+    completion bitmap says are unfinished.
+    """
+
+    def __init__(self, sim) -> None:
+        self.sim = sim
+        self.policy: RoundPolicy = sim.round_policy or RoundPolicy()
+        self.faults: FaultPlan = sim.faults or FaultPlan()
+        self.folded: list[int] = []       # fold order this process observed
+        self.stragglers: list[int] = []
+        self.snapshot_bytes = 0
+        self.duplicate_folds = 0
+        self.ctx: dict = {}
+
+    # -- clock helpers -------------------------------------------------------
+
+    @property
+    def clock(self) -> float:
+        return self.sim.link.round_clock_s
+
+    # -- fresh round ---------------------------------------------------------
+
+    def run(self) -> RoundResult:
+        sim, server = self.sim, self.sim.server
+        sim.link.mark_round_start()
+        selected = server.select_clients()
+        receivers, dissem_dropped = sim._disseminate(selected)
+        t_model = self.clock          # everyone holds the model from here
+        reporters, dropped, stopped, progress, ready = self._train_phase(
+            receivers, t_model)
+        dropped = dissem_dropped + dropped
+        self.ctx = {
+            "selected": selected, "reporters": reporters,
+            "dropped": dropped, "stopped": stopped,
+            "mean_train_loss": float(np.mean(
+                [p.metadata.train_loss for p in progress.values()]
+            )) if progress else float("nan"),
+            "mean_val_loss": float(np.mean(
+                [p.metadata.val_loss for p in progress.values()]
+            )) if progress else float("nan"),
+        }
+        return self._collect_and_finish(ready, recovered=False)
+
+    # -- resumed round (server restarted mid-collection) ---------------------
+
+    def resume(self) -> RoundResult | None:
+        """Continue the current round from its aggregation snapshot.
+
+        The restarted server re-NACKs (re-collects) only the reporters
+        the completion bitmap marks unfinished; clients that already
+        folded are skipped entirely — if one re-uploads anyway (it never
+        heard the round close), the fold is ignored idempotently.
+        Returns None when no snapshot exists for the current round.
+        """
+        sim = self.sim
+        state = load_agg_snapshot(sim.server)
+        if state is None:
+            return None
+        self.ctx = {k: state[k] for k in
+                    ("selected", "reporters", "dropped", "stopped",
+                     "mean_train_loss", "mean_val_loss")}
+        self.folded = list(state["folded"])
+        sim.link.mark_round_start()
+        # post-restart, unfinished clients are ready immediately: their
+        # training finished in the previous server's lifetime
+        ready = {cid: 0.0 for cid in self.ctx["reporters"]}
+        return self._collect_and_finish(ready, recovered=True)
+
+    # -- phases --------------------------------------------------------------
+
+    def _train_phase(self, receivers, t_model):
+        sim, server = self.sim, self.sim.server
+        policy = self.policy
+        reporters, dropped, stopped = [], [], []
+        progress, ready = {}, {}
+        for cid in receivers:
+            client = sim.clients[cid]
+            # draw first so the RNG stream is identical with/without an
+            # injected crash (the differential recovery oracle needs the
+            # fault-free and faulted runs to agree on dropout verdicts)
+            node_failed = sim._rng.random() < client.dropout_prob
+            crash = self.faults.client_crash(cid)
+            if crash is not None and crash.phase == "train":
+                dropped.append(cid)   # died before reporting anything
+                continue
+            if node_failed:
+                dropped.append(cid)   # node failure this round
+                continue
+            upd = client.train_locally()
+            t0 = self.clock
+            ring = sim._send(upd.to_cbor_segments(),
+                             "FL_Local_DataSet_Update",
+                             "fl/progress", Code.CONTENT)
+            if ring is None:
+                dropped.append(cid)   # report lost on the link
+                continue
+            upd = type(upd).from_cbor_segments(ring)
+            progress[cid] = upd
+            ready[cid] = (t_model
+                          + policy.train_time_s * client.straggler_factor
+                          + (self.clock - t0))
+            if not server.observe_ready(upd):
+                continue
+            if server.check_stop_condition(upd, cid):
+                stopped.append(cid)
+            reporters.append(cid)
+        return reporters, dropped, stopped, progress, ready
+
+    def _collect_and_finish(self, ready: dict[int, float],
+                            *, recovered: bool) -> RoundResult:
+        sim, server = self.sim, self.sim.server
+        selected = self.ctx["selected"]
+        reporters = self.ctx["reporters"]
+        dropped = list(self.ctx["dropped"])
+        deadline = self.policy.deadline_s
+        quorum_pre = server.quorum_met(len(reporters), len(selected))
+        installed = False
+        if reporters and quorum_pre:
+            if not recovered:
+                server.begin_aggregation()
+                # 0-fold snapshot: a crash before the first fold must
+                # still resume (the reporter set is what it preserves)
+                self._snapshot()
+            pending = [c for c in reporters if c not in self.folded]
+            if sim.chunk_elems is None:
+                self._collect_monolithic(pending, ready, dropped)
+            elif sim.uplink_mode == "interleaved":
+                self._collect_interleaved(pending, ready, dropped)
+            else:
+                self._collect_sequential(pending, ready, dropped)
+            quorum_final = server.quorum_met(len(self.folded), len(selected))
+            # legacy semantics with no deadline: install whatever arrived
+            # (the pre-quorum gate already passed); with a deadline the
+            # quorum re-check *at the deadline* decides
+            installed = (quorum_final if deadline is not None
+                         else bool(self.folded))
+            if installed:
+                server.finalize_aggregation()
+                self._snapshot(finalized=True)
+            else:
+                server.abort_aggregation()
+                clear_agg_snapshot(server)
+        quorum_met = (installed if (reporters and quorum_pre)
+                      else quorum_pre)
+        result = RoundResult(
+            round=server.round, participants=list(selected),
+            reporters=sorted(self.folded),
+            dropped=sorted(set(dropped)),
+            stopped=list(self.ctx["stopped"]),
+            mean_train_loss=self.ctx["mean_train_loss"],
+            mean_val_loss=self.ctx["mean_val_loss"],
+            stragglers=sorted(set(self.stragglers)),
+            quorum_met=quorum_met,
+            recovered=recovered,
+            clock_s=self.clock,
+            snapshot_bytes=self.snapshot_bytes,
+        )
+        clear_agg_snapshot(server)      # the round is over either way
+        server.finish_round(result)
+        return result
+
+    # -- folding (shared by every uplink mode) -------------------------------
+
+    def _fold(self, cid: int, flat: np.ndarray, dataset_size: int) -> bool:
+        server = self.sim.server
+        if server.already_folded(cid):
+            # duplicate re-fold (a resumed round re-receiving an upload
+            # the snapshot already contains): ignored idempotently
+            self.duplicate_folds += 1
+            server.release_update_buffer(flat)
+            return False
+        server.accumulate_update(cid, flat, dataset_size)
+        self.folded.append(cid)
+        self._snapshot()
+        # the snapshot for this fold is durable before the crash check
+        # fires, so recovery never loses an acknowledged fold
+        self.faults.check_server_crash(server.round, len(self.folded))
+        return True
+
+    def _snapshot(self, *, finalized: bool = False) -> None:
+        server = self.sim.server
+        if (server.ckpt is None or not self.policy.snapshot_aggregation
+                or (server._agg is None and not finalized)):
+            return
+        if finalized:
+            # keep only the marker state: finalize consumed the
+            # accumulator, so rewrite the *existing* snapshot's meta via
+            # a tombstone write guarding the finalize->checkpoint window
+            server.ckpt.delete_named(_snapshot_name(server.round))
+            return
+        self.snapshot_bytes += save_agg_snapshot(server, self.ctx)
+
+    # -- per-mode collection -------------------------------------------------
+
+    def _deadline_gate(self, cid: int, ready: dict[int, float]) -> bool:
+        """Advance the clock to the client's start; True when the client
+        may still transmit (the deadline has not passed)."""
+        deadline = self.policy.deadline_s
+        start = max(self.clock, ready.get(cid, 0.0))
+        if deadline is not None and start >= deadline:
+            self.stragglers.append(cid)
+            return False
+        self.sim.link.advance_to_round(start)
+        return True
+
+    def _missed_deadline(self, cid: int) -> bool:
+        deadline = self.policy.deadline_s
+        if deadline is not None and self.clock > deadline:
+            self.stragglers.append(cid)
+            return True
+        return False
+
+    def _collect_monolithic(self, pending, ready, dropped) -> None:
+        sim, server = self.sim, self.sim.server
+        enc = server.cfg.params_encoding
+        from repro.core.messages import FLLocalModelUpdate
+        for cid in sorted(pending, key=lambda c: ready.get(c, 0.0)):
+            crash = self.faults.client_crash(cid)
+            if crash is not None and crash.phase in ("upload", "repair"):
+                dropped.append(cid)   # died before/while answering the GET
+                continue
+            if not self._deadline_gate(cid, ready):
+                continue
+            ring = sim._send(
+                sim.clients[cid].local_model_update().to_cbor_segments(enc),
+                "FL_Local_Model_Update", "fl/model", Code.CONTENT)
+            if ring is None:
+                dropped.append(cid)   # model transfer lost
+                continue
+            if self._missed_deadline(cid):
+                continue              # arrived after the round closed
+            upd = FLLocalModelUpdate.from_cbor_segments(ring)
+            if upd.round != server.round or upd.model_id != server.model_id:
+                dropped.append(cid)   # stale generation
+                continue
+            self._fold(cid, np.asarray(upd.params, dtype=np.float32),
+                       sim.clients[cid].dataset_size())
+
+    def _collect_sequential(self, pending, ready, dropped) -> None:
+        sim = self.sim
+        deadline = self.policy.deadline_s
+        for cid in sorted(pending, key=lambda c: ready.get(c, 0.0)):
+            if not self._deadline_gate(cid, ready):
+                continue
+            budget = None if deadline is None else deadline - self.clock
+            flat = sim._collect_chunked(
+                cid, backoff=self.policy.backoff, faults=self.faults,
+                airtime_budget_s=budget)
+            if flat is None:
+                if not self._missed_deadline(cid):
+                    dropped.append(cid)   # upload never completed
+                continue
+            if self._missed_deadline(cid):
+                sim.server.release_update_buffer(flat)
+                continue
+            self._fold(cid, flat, sim.clients[cid].dataset_size())
+
+    def _collect_interleaved(self, pending, ready, dropped) -> None:
+        sim, server = self.sim, self.sim.server
+        backoff = self.policy.backoff
+        deadline = self.policy.deadline_s
+        sessions = []
+        for cid in pending:
+            crash = self.faults.client_crash(cid)
+            kwargs = {"start_at": ready.get(cid, 0.0)}
+            if backoff is not None:
+                kwargs["max_windows"] = backoff.max_windows
+            if crash is not None and crash.phase in ("upload", "repair"):
+                kwargs["crash_at"] = (crash.crash_window,
+                                      crash.at_frame or 0)
+            sessions.append(sim.clients[cid].uplink_session(
+                sim.chunk_elems, server.uplink_endpoint(cid),
+                uri="fl/model/upload", feedback_uri="fl/model/upload/fb",
+                **kwargs))
+        if not sessions:
+            sim.last_medium_report = None
+            sim.last_uplink_reports = []
+            return
+        chunk_drop = self.faults.as_chunk_drop() or sim.link.chunk_drop
+        medium = SharedMedium(
+            seed=(sim._seed, server.round),
+            frame_drop_prob=sim.link.drop_prob,
+            reorder_prob=sim.uplink_reorder_prob,
+            turnaround_s=sim.uplink_turnaround_s,
+            chunk_drop=chunk_drop, faults=self.faults)
+        # the uplink medium's clock continues the round clock: sessions
+        # become ready when their owners finish training, and the round
+        # deadline is absolute on the same axis
+        medium.clock = min((s.start_at for s in sessions),
+                           default=self.clock)
+        medium.clock = max(medium.clock, 0.0)
+
+        def fold(session) -> None:
+            flat = server.pop_uplink(session.client_id)
+            if flat is not None:
+                self._fold(flat=flat, cid=session.client_id,
+                           dataset_size=sim.clients[session.client_id]
+                           .dataset_size())
+
+        from repro.fl.chunking import run_interleaved_uplinks
+        sim.last_medium_report = run_interleaved_uplinks(
+            medium, sessions, record=sim._record_uplink, on_complete=fold,
+            deadline_s=deadline, backoff=backoff, faults=self.faults)
+        sim.last_uplink_reports = [s.report for s in sessions]
+        sim.last_uplink_report = (sim.last_uplink_reports[-1]
+                                  if sim.last_uplink_reports else None)
+        sim.link.advance_to_round(medium.clock)
+        for s in sessions:
+            if s.client_id in self.folded:
+                continue
+            server.pop_uplink(s.client_id)   # discard partial reassembly
+            if s.expired:
+                self.stragglers.append(s.client_id)
+            else:
+                dropped.append(s.client_id)

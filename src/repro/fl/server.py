@@ -45,11 +45,17 @@ class OrchestrationConfig:
 class RoundResult:
     round: int
     participants: list[int]
-    reporters: list[int]
-    dropped: list[int]
+    reporters: list[int]       # clients whose update was actually aggregated
+    dropped: list[int]         # failed/crashed/lossy — deduplicated
     stopped: list[int]
     mean_train_loss: float
     mean_val_loss: float
+    # deadline-based lifecycle (fl.round); defaults keep legacy callers
+    stragglers: list[int] = field(default_factory=list)  # missed the deadline
+    quorum_met: bool = True    # False => global model left untouched
+    recovered: bool = False    # round finished by a restarted server
+    clock_s: float = 0.0       # virtual round clock at close
+    snapshot_bytes: int = 0    # recovery overhead written this round
 
 
 class FLServer:
@@ -66,6 +72,7 @@ class FLServer:
         self._gather_pool = GatherBufferPool()
         self._agg: RunningFedAvg | None = None
         self._agg_clients: list[int] = []
+        self._agg_finalized = False
         self.history: list[RoundResult] = []
         self._rng = np.random.default_rng(cfg.seed)
         self.ckpt = (CheckpointManager(cfg.checkpoint_dir)
@@ -163,6 +170,7 @@ class FLServer:
     def begin_aggregation(self) -> None:
         self._agg = RunningFedAvg(self.global_params.shape)
         self._agg_clients = []
+        self._agg_finalized = False
 
     def accumulate_update(self, client_id: int, params: np.ndarray,
                           dataset_size: int) -> None:
@@ -176,12 +184,50 @@ class FLServer:
         self._agg_clients.append(client_id)
         self._gather_pool.release(params)
 
+    def already_folded(self, client_id: int) -> bool:
+        """Is this client's update already inside the running aggregate?
+        The round engine's idempotence check: a resumed round receiving a
+        duplicate re-upload skips the fold instead of double-counting."""
+        return self._agg is not None and client_id in self._agg_clients
+
+    @property
+    def agg_clients(self) -> list[int]:
+        """Clients folded into the in-flight aggregation (snapshot order)."""
+        return list(self._agg_clients)
+
+    def release_update_buffer(self, params: np.ndarray | None) -> None:
+        """Recycle a gather buffer that will NOT be folded (duplicate or
+        post-deadline upload) — the pool path ``accumulate_update`` takes
+        for buffers it consumes."""
+        self._gather_pool.release(params)
+
+    def restore_aggregation(self, agg: RunningFedAvg, clients: list[int],
+                            *, finalized: bool = False) -> None:
+        """Install a snapshot-restored mid-round aggregation (fl.round):
+        the accumulator continues exactly where the crashed process left
+        it, and ``already_folded`` answers from the restored client set."""
+        self._agg = agg
+        self._agg_clients = list(clients)
+        self._agg_finalized = finalized
+
+    def abort_aggregation(self) -> None:
+        """Discard the in-flight aggregation without installing it — the
+        deadline-quorum miss path: the global model stays untouched."""
+        self._agg = None
+        self._agg_clients = []
+
     def finalize_aggregation(self) -> np.ndarray | None:
         """Install the aggregated model; None when no update arrived (the
-        round then keeps the previous global model, as before)."""
+        round then keeps the previous global model, as before).  Refuses a
+        double-finalize: a restored-from-snapshot round whose aggregate
+        was already installed must not apply it twice."""
+        if self._agg_finalized:
+            raise RuntimeError(
+                f"round {self.round} aggregation is already finalized")
         agg, self._agg = self._agg, None
         if agg is None or agg.n_updates == 0:
             return None
+        self._agg_finalized = True
         self.global_params = agg.result()
         return self.global_params
 

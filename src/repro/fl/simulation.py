@@ -2,7 +2,11 @@
 
 Drives the paper's full communication diagram (Fig. 2) with exact
 byte/frame accounting per message type, CDDL validation of every message on
-the wire, straggler/dropout fault injection, and round checkpointing.
+the wire, deterministic fault injection (fl.faults), and round
+checkpointing.  The *round lifecycle* — deadlines on the virtual clock,
+quorum at the deadline, medium-aware backoff, crash-recoverable
+aggregation — lives in ``fl.round.RoundEngine``; this class is the driver
+that owns the clients, the link, and the byte accounting.
 """
 from __future__ import annotations
 
@@ -11,20 +15,17 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import cddl, fastpath
-from repro.core.messages import (
-    FLGlobalModelUpdate,
-    FLLocalDataSetUpdate,
-    FLLocalModelUpdate,
-)
+from repro.core.messages import FLGlobalModelUpdate
 from repro.fl.chunking import (
     ChunkTransferReport,
-    run_interleaved_uplinks,
     run_selective_repeat,
 )
 from repro.fl.client import FLClient
+from repro.fl.faults import FaultPlan
+from repro.fl.round import RoundEngine, RoundPolicy
 from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
 from repro.transport.coap import Code, TransferStats
-from repro.transport.medium import MediumReport, SharedMedium
+from repro.transport.medium import MediumReport
 from repro.transport.network import LossyLink, as_wire_payload
 
 
@@ -55,10 +56,23 @@ class FLSimulation:
                  chunk_elems: int | None = None,
                  uplink_mode: str = "sequential",
                  uplink_reorder_prob: float = 0.0,
-                 uplink_turnaround_s: float = 0.05) -> None:
+                 uplink_turnaround_s: float = 0.05,
+                 faults: FaultPlan | None = None,
+                 round_policy: RoundPolicy | None = None) -> None:
         self.server = server
         self.clients = {c.client_id: c for c in clients}
-        self.link = LossyLink(drop_prob=drop_prob, seed=seed)
+        # faults: one seeded, replayable schedule of client/server crashes,
+        # blackouts, frame damage, feedback loss, and chunk loss
+        # (fl.faults.FaultPlan) threaded through every transport layer;
+        # round_policy: deadline / training-time / backoff / snapshot
+        # policy the RoundEngine drives the round with (fl.round).
+        self.faults = faults
+        self.round_policy = round_policy
+        self.link = LossyLink(drop_prob=drop_prob, seed=seed, faults=faults)
+        if faults is not None and faults.as_chunk_drop() is not None:
+            # the plan's seeded chunk-loss schedule replaces the ad-hoc
+            # link.chunk_drop hook (both directions, both uplink modes)
+            self.link.chunk_drop = faults.as_chunk_drop()
         self.accounting = MessageAccounting()
         self.multicast_global = multicast_global
         # chunk_elems: when set, model transfers in BOTH directions run as
@@ -132,64 +146,45 @@ class FLSimulation:
         report = run_selective_repeat(
             self.link, chunks, [self.clients[cid] for cid in receivers],
             uri="fl/model/chunk", feedback_uri="fl/model/chunk/fb",
-            multicast=True, record=self.accounting.record)
+            multicast=True, record=self.accounting.record,
+            client_ids=receivers)
         self.last_downlink_report = report
         return [receivers[i] for i in report.completed]
 
-    def _collect_chunked(self, cid: int) -> np.ndarray | None:
+    def _collect_chunked(self, cid: int, *, backoff=None,
+                         faults: FaultPlan | None = None,
+                         airtime_budget_s: float | None = None
+                         ) -> np.ndarray | None:
         """Chunked client → server local-model upload (reverse direction).
 
         CON unicast chunk stream into the server's per-client reassembly
         endpoint; the *server* NACKs missing indices and the client re-sends
-        only those.  Returns the reassembled flat f32 params, or None if the
-        upload never completed (treated upstream as a dropout)."""
+        only those.  ``backoff`` delays repair windows, ``airtime_budget_s``
+        bounds the transfer's share of the round deadline, and ``faults``
+        injects this client's crash point / feedback losses (fl.round
+        threads the round policy through here).  Returns the reassembled
+        flat f32 params, or None if the upload never completed (treated
+        upstream as a dropout or straggler)."""
         chunks = self.clients[cid].local_model_chunks(self.chunk_elems)
+        sender_crash = None
+        feedback_lost = None
+        if faults is not None:
+            crash = faults.client_crash(cid)
+            if crash is not None and crash.phase in ("upload", "repair"):
+                sender_crash = (crash.crash_window, crash.at_chunk)
+            if faults.feedback_losses:
+                feedback_lost = (lambda ridx, w:
+                                 faults.feedback_lost(cid, w))
         report = run_selective_repeat(
             self.link, chunks, [self.server.uplink_endpoint(cid)],
             uri="fl/model/upload", feedback_uri="fl/model/upload/fb",
-            multicast=False, record=self._record_uplink)
+            multicast=False, record=self._record_uplink,
+            backoff=backoff, turnaround_s=self.uplink_turnaround_s,
+            airtime_budget_s=airtime_budget_s,
+            sender_crash=sender_crash, feedback_lost=feedback_lost,
+            client_ids=[cid])
         self.last_uplink_report = report
         return self.server.pop_uplink(cid)
-
-    def _collect_interleaved(self, reporters: list[int]) -> list[int]:
-        """Concurrent multi-client uplink over one shared contention
-        domain: every reporter's selective-repeat windows interleave
-        frame-by-frame (docs/concurrent_uplink.md), and each reassembled
-        model folds into the server's running aggregate the moment it
-        completes — then its gather buffer is recycled for the next
-        client.  Returns the clients whose upload was aggregated."""
-        server = self.server
-        sessions = [
-            self.clients[cid].uplink_session(
-                self.chunk_elems, server.uplink_endpoint(cid),
-                uri="fl/model/upload", feedback_uri="fl/model/upload/fb")
-            for cid in reporters
-        ]
-        medium = SharedMedium(
-            seed=(self._seed, server.round),
-            frame_drop_prob=self.link.drop_prob,
-            reorder_prob=self.uplink_reorder_prob,
-            turnaround_s=self.uplink_turnaround_s,
-            chunk_drop=self.link.chunk_drop)
-        aggregated: list[int] = []
-
-        def fold(session) -> None:
-            flat = server.pop_uplink(session.client_id)
-            if flat is not None:
-                server.accumulate_update(
-                    session.client_id, flat,
-                    self.clients[session.client_id].dataset_size())
-                aggregated.append(session.client_id)
-
-        self.last_medium_report = run_interleaved_uplinks(
-            medium, sessions, record=self._record_uplink, on_complete=fold)
-        self.last_uplink_reports = [s.report for s in sessions]
-        self.last_uplink_report = (self.last_uplink_reports[-1]
-                                   if self.last_uplink_reports else None)
-        for cid in reporters:       # discard partial reassembly state
-            if cid not in aggregated:
-                server.pop_uplink(cid)
-        return aggregated
 
     def _record_uplink(self, mtype: str, stats: TransferStats) -> None:
         # chunk traffic is accounted per direction; control messages share
@@ -198,135 +193,74 @@ class FLSimulation:
             "FL_Model_Chunk_Uplink" if mtype == "FL_Model_Chunk" else mtype,
             stats)
 
-    # -- one FL round (paper Fig. 2) ------------------------------------------
+    # -- dissemination (phase 1 of the round; the engine calls this) ----------
 
-    def run_round(self) -> RoundResult:
-        server, cfg = self.server, self.server.cfg
-        selected = server.select_clients()
-        enc = cfg.params_encoding
+    def _disseminate(self, selected: list[int]
+                     ) -> tuple[list[int], list[int]]:
+        """Global model dissemination: multicast = one wire transfer
+        reaching all clients (§VI-B2); unicast = one per client;
+        chunk_elems switches to the streaming FL_Model_Chunk path.
+        Returns ``(receivers, dropped)`` — clients holding the new model,
+        and clients the round continues *without*.
 
-        # (1) global model dissemination: multicast = one wire transfer
-        #     reaching all clients (§VI-B2); unicast = one per client.
-        #     chunk_elems switches to the streaming FL_Model_Chunk path.
+        Degradation semantics: a failed *unicast* send drops exactly that
+        client (everyone else trains); a failed *multicast* transfer keeps
+        all-or-nothing semantics — one wire stream either reached the
+        cohort or it did not."""
         if self.chunk_elems is not None:
             receivers = self._disseminate_chunked(selected)
-        else:
-            msg = server.global_update_message()
-            # vectored wire form: the params payload crosses the link as a
-            # borrowed view of the live global vector (zero encode copies);
-            # validated once over the segments, however many sends follow
-            payload = fastpath.ScatterPayload(msg.to_cbor_segments(enc))
-            cddl.validate(fastpath.decode(payload),
-                          cddl.SCHEMAS["FL_Global_Model_Update"])
-            delivered_global = True
-            if self.multicast_global:
-                # one wire transfer reaches everyone; every client decodes
-                # the same delivered ring (its arena is the receiver-side
-                # owned copy, decoded as views)
-                ring = self._send(payload, "FL_Global_Model_Update",
-                                  "fl/model", Code.POST, validated=True)
-                if ring is None:
-                    delivered_global = False
-                else:
-                    for cid in selected:
-                        self.clients[cid].handle_global_model(
-                            FLGlobalModelUpdate.from_cbor_segments(ring))
-            else:
-                # unicast: deliver + decode per client so only ONE ring is
-                # alive at a time (N simultaneous arenas would put peak
-                # memory back at N× model); a failed send still voids the
-                # whole round's dissemination, as before
-                for cid in selected:
-                    ring = self._send(payload, "FL_Global_Model_Update",
-                                      "fl/model", Code.POST, validated=True)
-                    if ring is None:
-                        delivered_global = False
-                    else:
-                        self.clients[cid].handle_global_model(
-                            FLGlobalModelUpdate.from_cbor_segments(ring))
-            receivers = selected if delivered_global else []
-
-        # (2) local training + observe notifications
-        reporters, dropped, stopped = [], [], []
-        progress: dict[int, FLLocalDataSetUpdate] = {}
-        for cid in receivers:
-            client = self.clients[cid]
-            if self._rng.random() < client.dropout_prob:
-                dropped.append(cid)       # node failure this round
-                continue
-            upd = client.train_locally()
-            ring = self._send(upd.to_cbor_segments(), "FL_Local_DataSet_Update",
-                              "fl/progress", Code.CONTENT)
+            return receivers, [c for c in selected if c not in receivers]
+        server = self.server
+        msg = server.global_update_message()
+        # vectored wire form: the params payload crosses the link as a
+        # borrowed view of the live global vector (zero encode copies);
+        # validated once over the segments, however many sends follow
+        payload = fastpath.ScatterPayload(
+            msg.to_cbor_segments(server.cfg.params_encoding))
+        cddl.validate(fastpath.decode(payload),
+                      cddl.SCHEMAS["FL_Global_Model_Update"])
+        if self.multicast_global:
+            # one wire transfer reaches everyone; every client decodes
+            # the same delivered ring (its arena is the receiver-side
+            # owned copy, decoded as views)
+            ring = self._send(payload, "FL_Global_Model_Update",
+                              "fl/model", Code.POST, validated=True)
             if ring is None:
-                dropped.append(cid)       # report lost on the link
+                return [], list(selected)
+            for cid in selected:
+                self.clients[cid].handle_global_model(
+                    FLGlobalModelUpdate.from_cbor_segments(ring))
+            return list(selected), []
+        # unicast: deliver + decode per client so only ONE ring is alive
+        # at a time (N simultaneous arenas would put peak memory back at
+        # N× model); a failed send drops only its client
+        receivers, dropped = [], []
+        for cid in selected:
+            ring = self._send(payload, "FL_Global_Model_Update",
+                              "fl/model", Code.POST, validated=True)
+            if ring is None:
+                dropped.append(cid)
                 continue
-            upd = FLLocalDataSetUpdate.from_cbor_segments(ring)
-            progress[cid] = upd
-            if not server.observe_ready(upd):
-                continue
-            if server.check_stop_condition(upd, cid):
-                stopped.append(cid)
-            reporters.append(cid)
+            self.clients[cid].handle_global_model(
+                FLGlobalModelUpdate.from_cbor_segments(ring))
+            receivers.append(cid)
+        return receivers, dropped
 
-        # (3) straggler mitigation: drop the slowest reporters beyond quorum
-        reporters.sort(key=lambda c: self.clients[c].straggler_factor)
-        quorum = max(1, int(np.ceil(cfg.min_fraction * len(selected))))
-        if len(reporters) > quorum:
-            slowest = [c for c in reporters
-                       if self.clients[c].straggler_factor > 1.0]
-            while len(reporters) > quorum and slowest:
-                drop = slowest.pop()
-                reporters.remove(drop)
+    # -- one FL round (paper Fig. 2; lifecycle in fl.round) -------------------
 
-        # (4) collect local models (GET) + aggregate
-        result = RoundResult(
-            round=server.round, participants=selected, reporters=reporters,
-            dropped=dropped, stopped=stopped,
-            mean_train_loss=float(np.mean(
-                [p.metadata.train_loss for p in progress.values()]
-            )) if progress else float("nan"),
-            mean_val_loss=float(np.mean(
-                [p.metadata.val_loss for p in progress.values()]
-            )) if progress else float("nan"),
-        )
-        if server.quorum_met(len(reporters), len(selected)):
-            if self.chunk_elems is not None:
-                # symmetric chunked uplink: params travel as selective-
-                # repeat FL_Model_Chunk streams (metadata already arrived
-                # in this round's progress update), and aggregation is
-                # *incremental* — each reassembled model folds into the
-                # running FedAvg as it completes and its gather buffer is
-                # recycled, so server peak memory is the accumulator plus
-                # one in-flight model however many clients report.
-                server.begin_aggregation()
-                if self.uplink_mode == "interleaved":
-                    aggregated = self._collect_interleaved(reporters)
-                    dropped += [c for c in reporters if c not in aggregated]
-                else:
-                    for cid in reporters:
-                        flat = self._collect_chunked(cid)
-                        if flat is None:
-                            dropped.append(cid)   # upload never completed
-                            continue
-                        server.accumulate_update(
-                            cid, flat, self.clients[cid].dataset_size())
-                server.finalize_aggregation()
-            else:
-                updates, sizes = {}, {}
-                for cid in reporters:
-                    ring = self._send(
-                        self.clients[cid].local_model_update()
-                            .to_cbor_segments(enc),
-                        "FL_Local_Model_Update", "fl/model", Code.CONTENT)
-                    if ring is None:
-                        dropped.append(cid)   # model transfer lost
-                        continue
-                    updates[cid] = FLLocalModelUpdate.from_cbor_segments(ring)
-                    sizes[cid] = self.clients[cid].dataset_size()
-                if updates:
-                    server.aggregate(updates, sizes)
-        server.finish_round(result)
-        return result
+    def run_round(self) -> RoundResult:
+        """Run one round through the RoundEngine state machine: deadline
+        on the virtual clock, quorum at the deadline, incremental
+        aggregation with per-fold recovery snapshots."""
+        return RoundEngine(self).run()
+
+    def resume_round(self) -> RoundResult | None:
+        """Finish the current round from its aggregation snapshot after a
+        server restart (``FLServer.try_restore`` first): re-collects only
+        the clients the completion bitmap marks unfinished and produces
+        the same final model the uninterrupted round would have.  None
+        when there is no snapshot — the caller runs a fresh round."""
+        return RoundEngine(self).resume()
 
     def run(self) -> SimulationReport:
         while not self.server.done:

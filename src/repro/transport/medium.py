@@ -30,7 +30,7 @@ clock/busy/idle.  The selective-repeat scheduling on top lives in
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Sequence
 
 import numpy as np
@@ -42,6 +42,28 @@ from repro.transport.network import (
     TaggedFrame,
     con_blockwise_transfer,
 )
+
+
+def _damage_frame(frame: TaggedFrame, kind: str) -> TaggedFrame | None:
+    """Deliver a damaged copy of ``frame``: one payload byte flipped
+    (``"corrupt"``) or the final payload byte lost (``"truncate"``).
+    The receive path must detect it (CBOR decode / per-chunk CRC) and
+    recover via NACK — never crash, never install garbage.  Returns None
+    when there is no payload left to damage (degrades to a drop)."""
+    payload = bytes(frame.msg.payload or b"")
+    if not payload:
+        return None
+    if kind == "corrupt":
+        mid = len(payload) // 2
+        payload = payload[:mid] + bytes([payload[mid] ^ 0xFF]) \
+            + payload[mid + 1:]
+    elif kind == "truncate":
+        payload = payload[:-1]
+        if not payload:
+            return None
+    else:
+        raise ValueError(f"unknown frame damage kind {kind!r}")
+    return replace(frame, msg=replace(frame.msg, payload=payload))
 
 
 @dataclass
@@ -71,7 +93,8 @@ class SharedMedium:
                  frame_drop_prob: float = 0.0,
                  reorder_prob: float = 0.0, max_reorder_lag: int = 8,
                  turnaround_s: float = 0.05,
-                 chunk_drop: ChunkDropFn | None = None) -> None:
+                 chunk_drop: ChunkDropFn | None = None,
+                 faults: object | None = None) -> None:
         if not 0.0 <= frame_drop_prob < 1.0:
             raise ValueError("frame_drop_prob must be in [0, 1)")
         if not 0.0 <= reorder_prob <= 1.0:
@@ -90,10 +113,17 @@ class SharedMedium:
         # the transmitting client, since the medium has one receiver (the
         # server) and many senders.
         self.chunk_drop = chunk_drop
+        # Optional fault schedule (fl.faults.FaultPlan shape, duck-typed):
+        # blackout intervals on the medium clock and per-frame
+        # corrupt/truncate/drop verdicts, applied *after* the RNG draws so
+        # a plan never perturbs the fault-free arbitration/loss streams.
+        self.faults = faults
         self.clock = 0.0
         self.busy_s = 0.0
         self.idle_s = 0.0
         self.stats = TransferStats()
+        self.frames_sent = 0               # data frames put on the air
+        self.frames_lost = 0               # ...that did not reach a receiver
         self._seq = 0                      # frames transmitted (global order)
         self._holdback: list = []          # heap of (release_seq, seq, frame)
 
@@ -142,13 +172,40 @@ class SharedMedium:
         if drop is None:
             drop = (self.frame_drop_prob > 0.0
                     and float(self._rng.random()) < self.frame_drop_prob)
+        # fault schedule verdicts come after the RNG draw so the per-frame
+        # drop stream replays identically with and without a plan (the
+        # differential recovery oracle relies on it)
+        if self.faults is not None:
+            if self.faults.blackout_at(self.clock - a):
+                drop = True          # the frame started inside a blackout
+            elif not drop:
+                verdict = self.faults.frame_verdict(
+                    client=frame.client, window=frame.window,
+                    chunk_index=frame.chunk_index,
+                    block_num=frame.block_num)
+                if verdict == "drop":
+                    drop = True
+                elif verdict is not None:
+                    frame = _damage_frame(frame, verdict)
+                    if frame is None:
+                        drop = True  # nothing left to deliver
         self._seq += 1
+        self.frames_sent += 1
         if not drop:
             lag = 0
             if self.reorder_prob and float(self._rng.random()) < self.reorder_prob:
                 lag = 1 + int(self._rng.integers(self.max_reorder_lag))
             heapq.heappush(self._holdback, (self._seq + lag, self._seq, frame))
+        else:
+            self.frames_lost += 1
         return self._release()
+
+    def loss_estimate(self) -> float:
+        """Observed frame-loss fraction so far — what medium-aware backoff
+        scales its delays by (a congested/black channel backs off harder)."""
+        if not self.frames_sent:
+            return 0.0
+        return self.frames_lost / self.frames_sent
 
     def _release(self) -> list[TaggedFrame]:
         out = []
@@ -191,11 +248,15 @@ class SharedMedium:
             self.clock += a
             self.busy_s += a
 
+        def drop() -> bool:
+            lost = (self.frame_drop_prob > 0.0
+                    and float(self._rng.random()) < self.frame_drop_prob)
+            if self.faults is not None and self.faults.blackout_at(self.clock):
+                return True      # RNG drawn first: stream stays aligned
+            return lost
+
         out = con_blockwise_transfer(
-            payload, uri=uri, code=code,
-            drop=lambda: (self.frame_drop_prob > 0.0
-                          and float(self._rng.random()) < self.frame_drop_prob),
-            on_frame=on_frame)
+            payload, uri=uri, code=code, drop=drop, on_frame=on_frame)
         self.stats.add(out)
         if stats is not None:
             stats.add(out)

@@ -158,10 +158,58 @@ class LossyLink:
     # it to inject exact seeded drop patterns (uniform / bursty /
     # adversarial) while byte accounting stays realistic.
     chunk_drop: ChunkDropFn | None = None
+    # Optional fault schedule (fl.faults.FaultPlan shape — duck-typed to
+    # keep transport free of fl imports): blackout intervals on the round
+    # clock force frame loss on top of the RNG.
+    faults: object | None = None
     _rng: np.random.Generator = field(init=False, repr=False)
+    # Virtual link clock: every frame that crosses (either direction, CON
+    # retries included) advances it by its airtime, so the FL round engine
+    # can evaluate deadlines on transport time instead of wall time.
+    clock_s: float = field(init=False, default=0.0, repr=False)
+    _round_t0: float = field(init=False, default=0.0, repr=False)
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
+
+    # -- virtual clock (round-relative) --------------------------------------
+
+    def _tick(self, wire: int) -> None:
+        self.clock_s += (wire + LOWPAN_OVERHEAD) * 8 / LINK_BPS
+
+    def mark_round_start(self) -> None:
+        """Zero the round-relative clock (deadlines are per round)."""
+        self._round_t0 = self.clock_s
+
+    @property
+    def round_clock_s(self) -> float:
+        return self.clock_s - self._round_t0
+
+    def advance_to_round(self, t: float) -> None:
+        """Advance to round-relative instant ``t`` (idle: a client not yet
+        ready, or a backoff delay). Never moves the clock backwards."""
+        if t > self.round_clock_s:
+            self.clock_s = self._round_t0 + t
+
+    def advance(self, dt: float) -> None:
+        if dt > 0:
+            self.clock_s += dt
+
+    def _frame_lost(self) -> bool:
+        # RNG draw first, unconditionally: threading a blackout schedule
+        # through must not shift the drop stream of fault-free frames
+        # (the differential recovery oracle depends on replay identity)
+        lost = self._rng.random() < self.drop_prob
+        if self.faults is not None and self.faults.blackout_at(
+                self.round_clock_s):
+            return True
+        return bool(lost)
+
+    def loss_estimate(self) -> float:
+        """The link's a-priori frame-loss fraction (point-to-point links
+        know their configured loss; the SharedMedium estimates from
+        observed traffic instead) — feeds medium-aware backoff."""
+        return self.drop_prob
 
     def send_payload(self, payload, *, uri: str,
                      code: Code = Code.POST) -> TransferStats:
@@ -195,8 +243,8 @@ class LossyLink:
     def _blockwise_transfer(self, payload, *, uri: str, code: Code,
                             ring: BlockReceiveRing | None) -> TransferStats:
         return con_blockwise_transfer(
-            payload, uri=uri, code=code,
-            drop=lambda: self._rng.random() < self.drop_prob, ring=ring)
+            payload, uri=uri, code=code, drop=self._frame_lost,
+            on_frame=self._tick, ring=ring)
 
     def send_stream(self, payloads: Iterable, *, uri: str,
                     code: Code = Code.POST,
@@ -223,12 +271,19 @@ class LossyLink:
                        indices: Sequence[int] | None = None,
                        num_receivers: int = 1,
                        multicast: bool = False,
-                       window: int = 0) -> StreamDelivery:
+                       window: int = 0,
+                       client_ids: Sequence[int] | None = None
+                       ) -> StreamDelivery:
         """Send one selective-repeat window of chunk payloads.
 
         ``indices[i]`` names the chunk carried by ``payloads[i]`` (defaults
         to 0..n-1); repair windows pass the original chunk indices so
         delivery sets and drop schedules stay keyed by chunk identity.
+        ``client_ids[r]`` maps receiver slot ``r`` to the FL client id the
+        ``chunk_drop`` schedule is keyed by; without it the schedule sees
+        the bare slot index — fine for ad-hoc test schedules, wrong for a
+        ``FaultPlan`` (an uplink's single receiver slot is the *server*,
+        and a downlink cohort's slot order is not the client id).
 
         * ``multicast=True``: every frame goes on the air exactly once
           (bytes counted once) and each of ``num_receivers`` receivers
@@ -252,7 +307,9 @@ class LossyLink:
         for payload, idx in zip(payloads, indices):
             if self.chunk_drop is not None:
                 stats = self._count_frames_once(payload, uri=uri, code=code)
-                got = [not self.chunk_drop(uri, window, idx, r)
+                got = [not self.chunk_drop(
+                           uri, window, idx,
+                           client_ids[r] if client_ids is not None else r)
                        for r in range(num_receivers)]
             elif multicast:
                 stats, got = self._multicast_payload(
@@ -278,6 +335,7 @@ class LossyLink:
             stats.frames += 1
             stats.wire_bytes += wire
             stats.link_bytes += wire + LOWPAN_OVERHEAD
+            self._tick(wire)
         return stats
 
     def _multicast_payload(self, payload, *, uri: str, code: Code,

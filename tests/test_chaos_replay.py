@@ -1,0 +1,85 @@
+"""Chaos tier: replay committed FaultPlan seeds through crash/recovery
+rounds (run via ``pytest -m chaos``; excluded from tier-1).
+
+Each seed derives a full fault schedule (``FaultPlan.random``): chunk
+loss, maybe a blackout, maybe a client crash, maybe a mid-aggregation
+server crash, maybe frame corruption.  The scenario runs two FL rounds,
+restarting + resuming the server whenever the plan kills it, and asserts
+the survival invariants — then runs the *whole scenario again* and
+requires byte-identical results, which is what makes any chaos failure
+reproducible from its seed alone.
+
+``tests/chaos_seeds.json`` holds the committed regression seeds.  CI adds
+one fresh seed per run via ``CHAOS_FRESH_SEED`` (the workflow passes its
+run id); a failure log always contains ``plan.describe()``, so the seed
+that found a bug gets committed and replays forever.
+"""
+import json
+import os
+import pathlib
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.fl import BackoffPolicy, FaultPlan, RoundPolicy, ServerCrashed
+from test_round_recovery import _restart, _sim
+
+SEEDS = json.loads(
+    (pathlib.Path(__file__).parent / "chaos_seeds.json").read_text()
+)["seeds"]
+_fresh = os.environ.get("CHAOS_FRESH_SEED")
+ALL_SEEDS = SEEDS + ([int(_fresh) % 2**31] if _fresh else [])
+
+POLICY = RoundPolicy(deadline_s=120.0, train_time_s=5.0,
+                     backoff=BackoffPolicy(initial_s=0.1))
+
+
+def _plan_for(seed: int) -> FaultPlan:
+    plan = FaultPlan.random(seed, n_clients=4)
+    # pin server crashes to round 1: round 0's checkpoint is what the
+    # restarted server recovers its generation (params/model_id) from
+    return replace(plan, server_crashes=tuple(
+        replace(sc, at_round=1) for sc in plan.server_crashes))
+
+
+def _run_scenario(tmp, plan):
+    """Two FL rounds under the plan, restarting the server through every
+    injected crash.  Returns everything a replay must reproduce."""
+    sim = _sim(tmp, rounds=2, drop_prob=0.05, faults=plan, policy=POLICY)
+    results, restarts = [], 0
+    while sim.server.round < 2:
+        try:
+            r = sim.resume_round()
+            if r is None:
+                r = sim.run_round()
+        except ServerCrashed:
+            restarts += 1
+            assert restarts <= 4, f"crash loop: {plan.describe()}"
+            sim = _restart(sim, faults=plan, policy=POLICY)
+            continue
+        results.append(r)
+    assert np.isfinite(sim.server.global_params).all(), plan.describe()
+    assert len(results) == 2, plan.describe()
+    for r in results:
+        # a round either installed a quorum aggregate or left the model
+        # alone — reporters are exactly the folded clients either way
+        assert set(r.reporters).issubset(set(r.participants)), \
+            plan.describe()
+        assert not (set(r.reporters) & set(r.dropped)), plan.describe()
+        assert not (set(r.reporters) & set(r.stragglers)), plan.describe()
+    assert restarts == (1 if plan.server_crashes else 0), plan.describe()
+    return (sim.server.global_params.tobytes(),
+            [(r.round, tuple(r.reporters), tuple(r.dropped),
+              tuple(r.stragglers), r.quorum_met, r.recovered)
+             for r in results])
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", ALL_SEEDS)
+def test_chaos_seed_survives_and_replays_exactly(tmp_path, seed):
+    plan = _plan_for(seed)
+    first = _run_scenario(tmp_path / "a", plan)
+    again = _run_scenario(tmp_path / "b", plan)
+    # the failure line CI greps for when a fresh seed finds a bug:
+    assert first == again, f"non-reproducible chaos run: {plan.describe()}"

@@ -1,0 +1,218 @@
+"""Unit tests for the deterministic fault-injection schedule (fl.faults)
+and the round-lifecycle policies (fl.round.BackoffPolicy / RoundPolicy)."""
+import pytest
+
+from repro.fl import (
+    BackoffPolicy,
+    Blackout,
+    ChunkLoss,
+    ClientCrash,
+    FaultPlan,
+    FeedbackLoss,
+    FrameFault,
+    RoundPolicy,
+    ServerCrash,
+    ServerCrashed,
+)
+
+
+# -- ChunkLoss ----------------------------------------------------------------
+
+def test_chunk_loss_is_deterministic_and_order_free():
+    loss = ChunkLoss(rate=0.5, seed=7)
+    keys = [(w, c, cl) for w in range(3) for c in range(5) for cl in range(4)]
+    first = [loss.drops(*k) for k in keys]
+    # same verdicts however often / in whatever order they are queried
+    assert [loss.drops(*k) for k in reversed(keys)] == first[::-1]
+    assert [ChunkLoss(rate=0.5, seed=7).drops(*k) for k in keys] == first
+    assert any(first) and not all(first)
+
+
+def test_chunk_loss_zero_rate_never_drops():
+    loss = ChunkLoss(rate=0.0)
+    assert not any(loss.drops(w, c, cl)
+                   for w in range(4) for c in range(4) for cl in range(4))
+
+
+def test_chunk_loss_seed_changes_schedule():
+    a = ChunkLoss(rate=0.5, seed=1)
+    b = ChunkLoss(rate=0.5, seed=2)
+    keys = [(w, c, 0) for w in range(8) for c in range(8)]
+    assert [a.drops(*k) for k in keys] != [b.drops(*k) for k in keys]
+
+
+# -- Blackout -----------------------------------------------------------------
+
+def test_blackout_interval_is_half_open():
+    b = Blackout(1.0, 2.0)
+    assert not b.covers(0.999)
+    assert b.covers(1.0)
+    assert b.covers(1.999)
+    assert not b.covers(2.0)
+
+
+def test_plan_blackout_union():
+    plan = FaultPlan(blackouts=(Blackout(1, 2), Blackout(5, 6)))
+    assert plan.blackout_at(1.5)
+    assert plan.blackout_at(5.0)
+    assert not plan.blackout_at(3.0)
+    assert not FaultPlan().blackout_at(1.5)
+
+
+# -- FrameFault ---------------------------------------------------------------
+
+def test_frame_fault_wildcards_and_exact_match():
+    wild = FrameFault("corrupt", client=2)
+    assert wild.matches(client=2, window=9, chunk_index=9, block_num=9)
+    assert not wild.matches(client=3, window=0, chunk_index=0, block_num=0)
+    exact = FrameFault("truncate", client=1, window=0, chunk_index=3,
+                       block_num=0)
+    assert exact.matches(client=1, window=0, chunk_index=3, block_num=0)
+    assert not exact.matches(client=1, window=0, chunk_index=4, block_num=0)
+
+
+def test_frame_fault_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        FrameFault("mangle")
+
+
+def test_plan_frame_verdict_first_match_wins():
+    plan = FaultPlan(frame_faults=(
+        FrameFault("drop", client=0, window=0),
+        FrameFault("corrupt", client=0),
+    ))
+    assert plan.frame_verdict(client=0, window=0, chunk_index=1,
+                              block_num=0) == "drop"
+    assert plan.frame_verdict(client=0, window=2, chunk_index=1,
+                              block_num=0) == "corrupt"
+    assert plan.frame_verdict(client=1, window=0, chunk_index=0,
+                              block_num=0) is None
+
+
+# -- crashes ------------------------------------------------------------------
+
+def test_client_crash_phases_and_window():
+    assert ClientCrash(0, "upload", at_chunk=3).crash_window == 0
+    assert ClientCrash(0, "repair", at_window=2).crash_window == 2
+    assert ClientCrash(0, "repair").crash_window == 1   # repair starts at 1
+    with pytest.raises(ValueError, match="phase"):
+        ClientCrash(0, "reboot")
+
+
+def test_plan_rejects_two_crashes_for_one_client():
+    with pytest.raises(ValueError, match="more than one crash"):
+        FaultPlan(client_crashes=(ClientCrash(1, "train"),
+                                  ClientCrash(1, "upload")))
+
+
+def test_server_crash_due_and_raise():
+    plan = FaultPlan(server_crashes=(ServerCrash(after_folds=2, at_round=1),))
+    assert not plan.server_crash_due(0, 2)      # wrong round
+    assert not plan.server_crash_due(1, 1)      # not enough folds
+    assert not plan.server_crash_due(1, 3)      # fires exactly once
+    assert plan.server_crash_due(1, 2)
+    with pytest.raises(ServerCrashed) as exc:
+        plan.check_server_crash(1, 2)
+    assert exc.value.round == 1 and exc.value.folds == 2
+    # a resumed round continues counting past the crash point: no re-fire
+    plan.check_server_crash(1, 3)
+
+
+def test_feedback_loss_lookup():
+    plan = FaultPlan(feedback_losses=(FeedbackLoss(2, 1),))
+    assert plan.feedback_lost(2, 1)
+    assert not plan.feedback_lost(2, 0)
+    assert not plan.feedback_lost(1, 1)
+
+
+# -- FaultPlan plumbing -------------------------------------------------------
+
+def test_empty_plan_short_circuits_everything():
+    plan = FaultPlan()
+    assert plan.as_chunk_drop() is None
+    assert plan.client_crash(0) is None
+    assert not plan.blackout_at(0.0)
+    assert plan.frame_verdict(client=0, window=0, chunk_index=0,
+                              block_num=0) is None
+    assert not plan.feedback_lost(0, 0)
+    plan.check_server_crash(0, 99)   # never raises
+
+
+def test_as_chunk_drop_adapts_chunk_loss():
+    plan = FaultPlan(chunk_loss=ChunkLoss(rate=0.5, seed=3))
+    drop = plan.as_chunk_drop()
+    assert drop is not None
+    # the uri argument is ignored: verdicts key on (window, chunk, client)
+    assert drop("fl/model/upload", 0, 1, 2) == drop("other/uri", 0, 1, 2)
+    assert drop("u", 0, 1, 2) == plan.chunk_loss.drops(0, 1, 2)
+
+
+def test_plan_tolerates_list_literals():
+    plan = FaultPlan(blackouts=[Blackout(0, 1)],
+                     client_crashes=[ClientCrash(0, "train")])
+    assert isinstance(plan.blackouts, tuple)
+    assert isinstance(plan.client_crashes, tuple)
+
+
+def test_random_plan_is_reproducible_and_described():
+    a = FaultPlan.random(123, n_clients=4)
+    b = FaultPlan.random(123, n_clients=4)
+    assert a == b
+    assert a != FaultPlan.random(124, n_clients=4)
+    assert "seed=123" in a.describe()
+    # chaos plans always carry chunk loss; the rest is seed-dependent
+    assert a.chunk_loss is not None
+
+
+def test_random_plans_cover_every_fault_family():
+    plans = [FaultPlan.random(s, n_clients=4) for s in range(64)]
+    assert any(p.blackouts for p in plans)
+    assert any(p.client_crashes for p in plans)
+    assert any(p.server_crashes for p in plans)
+    assert any(p.frame_faults for p in plans)
+
+
+# -- BackoffPolicy ------------------------------------------------------------
+
+def test_backoff_delay_grows_exponentially():
+    p = BackoffPolicy(initial_s=0.1, factor=2.0, max_s=100.0)
+    assert p.delay(1) == pytest.approx(0.1)
+    assert p.delay(2) == pytest.approx(0.2)
+    assert p.delay(4) == pytest.approx(0.8)
+
+
+def test_backoff_delay_caps_at_max():
+    p = BackoffPolicy(initial_s=1.0, factor=2.0, max_s=3.0)
+    assert p.delay(10) == 3.0
+
+
+def test_backoff_scales_with_loss_estimate():
+    p = BackoffPolicy(initial_s=1.0, factor=1.0, max_s=100.0)
+    assert p.delay(1, loss_estimate=0.5) == pytest.approx(1.5)
+    # loss estimate is clamped to [0, 1]
+    assert p.delay(1, loss_estimate=7.0) == pytest.approx(2.0)
+    assert p.delay(1, loss_estimate=-1.0) == pytest.approx(1.0)
+    lossless = BackoffPolicy(initial_s=1.0, factor=1.0, max_s=100.0,
+                             medium_aware=False)
+    assert lossless.delay(1, loss_estimate=0.9) == pytest.approx(1.0)
+
+
+def test_backoff_defaults_to_physical_turnaround():
+    p = BackoffPolicy()
+    assert p.delay(1, turnaround_s=0.05) == pytest.approx(0.05)
+    assert p.delay(2, turnaround_s=0.05) == pytest.approx(0.10)
+
+
+def test_backoff_budget_and_validation():
+    assert BackoffPolicy(retry_budget=4).max_windows == 5
+    with pytest.raises(ValueError, match="factor"):
+        BackoffPolicy(factor=0.5)
+    with pytest.raises(ValueError, match="budget"):
+        BackoffPolicy(retry_budget=-1)
+
+
+def test_round_policy_defaults_keep_legacy_shape():
+    p = RoundPolicy()
+    assert p.deadline_s is None
+    assert p.backoff is None
+    assert p.snapshot_aggregation

@@ -8,7 +8,8 @@ import pytest
 from repro.core.messages import ParamsEncoding
 from repro.core.params_codec import flatten_params
 from repro.data import partition_dirichlet, partition_iid, synthetic_mnist
-from repro.fl import FLClient, FLServer, FLSimulation, OrchestrationConfig
+from repro.fl import (FLClient, FLServer, FLSimulation, OrchestrationConfig,
+                      RoundPolicy)
 from repro.models import lenet5
 from repro.train.optim import SGDConfig
 
@@ -16,7 +17,8 @@ from repro.train.optim import SGDConfig
 def _make_sim(tmp_path=None, num_clients=4, rounds=3, drop_prob=0.0,
               dropout=0.0, straggler=None, encoding=ParamsEncoding.TA_F32,
               seed=0, data=None, min_fraction=0.5, chunk_elems=None,
-              uplink_mode="sequential", uplink_reorder_prob=0.0):
+              uplink_mode="sequential", uplink_reorder_prob=0.0,
+              faults=None, round_policy=None):
     params = lenet5.init_params(jax.random.PRNGKey(seed))
     flat, spec = flatten_params(params)
     data = data or synthetic_mnist(num_clients * 200, seed=seed)
@@ -38,7 +40,8 @@ def _make_sim(tmp_path=None, num_clients=4, rounds=3, drop_prob=0.0,
     server = FLServer(cfg, flat)
     return FLSimulation(server, clients, drop_prob=drop_prob, seed=seed,
                         chunk_elems=chunk_elems, uplink_mode=uplink_mode,
-                        uplink_reorder_prob=uplink_reorder_prob)
+                        uplink_reorder_prob=uplink_reorder_prob,
+                        faults=faults, round_policy=round_policy)
 
 
 def test_fl_loss_decreases():
@@ -90,15 +93,26 @@ def test_client_dropout_tolerated():
 
 
 def test_straggler_mitigation_drops_slow_clients():
+    """Deadline-based straggler culling: the slow client's *timeline*
+    (training time x straggler_factor on the virtual clock) misses the
+    round deadline, so the quorum evaluated at the deadline proceeds
+    without it — no static straggler_factor sort anywhere."""
     sim = _make_sim(num_clients=4, rounds=2,
-                    straggler={3: 5.0}, min_fraction=0.5)
+                    straggler={3: 10.0}, min_fraction=0.5,
+                    round_policy=RoundPolicy(deadline_s=65.0,
+                                             train_time_s=10.0))
     report = sim.run()
-    for r in report.rounds:
-        if len(r.reporters) < len(r.participants):
-            assert 3 not in r.reporters
-            break
-    else:
-        pytest.skip("quorum never forced a straggler drop")
+    assert len(report.rounds) == 2
+    culled = [r for r in report.rounds if 3 in r.participants]
+    assert culled                         # the slow client was selected
+    for r in culled:
+        assert 3 in r.stragglers          # timed out, not "sorted out"
+        assert 3 not in r.reporters       # never folded into the round
+        assert r.quorum_met               # reporters still >= min_fraction
+        assert 3 not in r.dropped         # late, not failed
+        # the straggler was pre-gated at the deadline: its model never
+        # crossed the wire, so the round clock never ran past the deadline
+        assert r.clock_s <= 65.0 + 1e-9
 
 
 def test_checkpoint_restart_resumes(tmp_path):

@@ -1,0 +1,385 @@
+"""Crash-recoverable aggregation + deadline/degradation round lifecycle.
+
+The central oracle: ``RunningFedAvg`` is order-independent to the final
+f32 bit and its TwoSum f64 state round-trips exactly through the CBOR
+typed-array codec — so a server that crashes mid-round, restarts from the
+per-fold aggregation snapshot, and re-collects only the unfinished
+clients MUST produce a global model byte-identical to the same round run
+without the crash (docs/fault_model.md).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.params_codec import flatten_params
+from repro.data import partition_iid, synthetic_mnist
+from repro.fl import (
+    BackoffPolicy,
+    Blackout,
+    ChunkLoss,
+    ClientCrash,
+    FaultPlan,
+    FeedbackLoss,
+    FLClient,
+    FLServer,
+    FLSimulation,
+    FrameFault,
+    OrchestrationConfig,
+    RoundEngine,
+    RoundPolicy,
+    ServerCrash,
+    ServerCrashed,
+)
+from repro.models import lenet5
+from repro.train.optim import SGDConfig
+
+N = 4
+CHUNK = 8192
+# seed 8: no client trips the stop condition in round 0, so round 1 keeps
+# the full 4-client cohort — the crash-recovery matrix needs clients left
+# to re-collect after the crash point (probed; deterministic forever)
+SEED = 8
+
+
+def _sim(tmp_path=None, *, rounds=2, drop_prob=0.0, seed=SEED,
+         chunk_elems=CHUNK, uplink_mode="sequential", reorder=0.0,
+         faults=None, policy=None, min_fraction=0.5, straggler=None):
+    params = lenet5.init_params(jax.random.PRNGKey(seed))
+    flat, spec = flatten_params(params)
+    data = synthetic_mnist(N * 200, seed=seed)
+    shards = partition_iid(data, N, seed=seed)
+    clients = [
+        FLClient(client_id=i, data=shards[i], loss_fn=lenet5.loss_fn,
+                 spec=spec, local_epochs=1, batch_size=32,
+                 sgd=SGDConfig(lr=0.05), seed=seed,
+                 straggler_factor=(straggler or {}).get(i, 1.0))
+        for i in range(N)
+    ]
+    cfg = OrchestrationConfig(
+        num_clients=N, clients_per_round=N, min_fraction=min_fraction,
+        num_rounds=rounds, min_local_samples=32, seed=seed,
+        checkpoint_dir=str(tmp_path) if tmp_path else None)
+    server = FLServer(cfg, flat)
+    return FLSimulation(server, clients, drop_prob=drop_prob, seed=seed,
+                        chunk_elems=chunk_elems, uplink_mode=uplink_mode,
+                        uplink_reorder_prob=reorder,
+                        faults=faults, round_policy=policy)
+
+
+def _restart(sim, *, faults=None, policy=None):
+    """Simulate a server process restart: a fresh FLServer restored from
+    the latest round checkpoint, driving the same client fleet (client
+    training state lives client-side and survives the server's death)."""
+    old = sim.server
+    server = FLServer(old.cfg, np.zeros_like(old.global_params))
+    assert server.try_restore(), "no round checkpoint to restart from"
+    return FLSimulation(server, list(sim.clients.values()),
+                        drop_prob=sim.link.drop_prob, seed=sim._seed,
+                        chunk_elems=sim.chunk_elems,
+                        uplink_mode=sim.uplink_mode,
+                        uplink_reorder_prob=sim.uplink_reorder_prob,
+                        faults=faults, round_policy=policy)
+
+
+def _n_chunks(sim):
+    return -(-sim.server.global_params.size // CHUNK)
+
+
+# -- the crash-recovery differential matrix -----------------------------------
+
+@pytest.mark.parametrize("mode,chunks,drop,reorder,crash_after", [
+    ("monolithic", None, 0.0, 0.0, 2),
+    ("sequential", CHUNK, 0.0, 0.0, 1),
+    ("sequential", CHUNK, 0.15, 0.0, 2),
+    ("interleaved", CHUNK, 0.0, 0.3, 1),
+    ("interleaved", CHUNK, 0.15, 0.3, 3),
+])
+def test_server_crash_recovery_bit_identical(tmp_path, mode, chunks, drop,
+                                             reorder, crash_after):
+    uplink = "interleaved" if mode == "interleaved" else "sequential"
+    kw = dict(chunk_elems=chunks, uplink_mode=uplink, drop_prob=drop,
+              reorder=reorder)
+    # fault-free reference: two full rounds
+    ref = _sim(tmp_path / "ref", **kw)
+    ref.run_round()
+    ref.run_round()
+
+    plan = FaultPlan(server_crashes=(
+        ServerCrash(after_folds=crash_after, at_round=1),))
+    sim = _sim(tmp_path / "crash", faults=plan, **kw)
+    sim.run_round()
+    with pytest.raises(ServerCrashed):
+        sim.run_round()
+    # every fold's snapshot was durable before the crash fired
+    snap = list((tmp_path / "crash").glob("agg_*.cbor"))
+    assert len(snap) == 1
+
+    sim2 = _restart(sim, faults=plan)
+    assert sim2.server.round == 1
+    res = sim2.resume_round()
+    assert res is not None and res.recovered
+    assert res.quorum_met
+    assert sorted(res.reporters) == [0, 1, 2, 3]
+    # THE oracle: byte-identical to the uninterrupted run
+    assert sim2.server.global_params.tobytes() == \
+        ref.server.global_params.tobytes()
+    # only the unfinished clients crossed the wire again
+    if chunks is not None:
+        up = sim2.accounting.by_type["FL_Model_Chunk_Uplink"]
+        floor = _n_chunks(sim2) * (N - crash_after)
+        assert up.messages >= floor
+        if drop == 0.0:
+            assert up.messages == floor     # lossless: zero re-sends
+    # the round closed: its snapshot is gone and the next round is clean
+    assert not list((tmp_path / "crash").glob("agg_*.cbor"))
+
+
+def test_crash_recovery_with_client_crash_too(tmp_path):
+    """Server crash + client crash in the same round: the resumed round
+    re-collects the survivors, records the crashed client as dropped, and
+    still matches the reference run (same client crash, no server crash)
+    byte for byte."""
+    cc = ClientCrash(2, "upload", at_chunk=2, at_frame=5)
+    ref = _sim(tmp_path / "ref", faults=FaultPlan(client_crashes=(cc,)))
+    ref.run_round()
+    ref.run_round()
+
+    plan = FaultPlan(client_crashes=(cc,),
+                     server_crashes=(ServerCrash(after_folds=1, at_round=1),))
+    sim = _sim(tmp_path / "crash", faults=plan)
+    sim.run_round()
+    with pytest.raises(ServerCrashed):
+        sim.run_round()
+    sim2 = _restart(sim, faults=plan)
+    res = sim2.resume_round()
+    assert res is not None
+    assert 2 in res.dropped and 2 not in res.reporters
+    assert sorted(res.reporters) == [0, 1, 3]
+    assert res.quorum_met
+    assert sim2.server.global_params.tobytes() == \
+        ref.server.global_params.tobytes()
+
+
+def test_resume_without_snapshot_is_none(tmp_path):
+    sim = _sim(tmp_path)
+    assert sim.resume_round() is None       # nothing in flight
+    r = sim.run_round()                     # a clean round still works
+    assert r.quorum_met
+    assert sim.resume_round() is None       # round closed: snapshot gone
+
+
+def test_double_finalize_refused():
+    sim = _sim()
+    server = sim.server
+    server.begin_aggregation()
+    server.accumulate_update(
+        0, np.ones(server.global_params.size, np.float32), 100)
+    assert server.finalize_aggregation() is not None
+    with pytest.raises(RuntimeError, match="already finalized"):
+        server.finalize_aggregation()
+
+
+def test_restored_finalized_marker_refuses_refinalize():
+    """A snapshot restored with the finalized marker set means the crash
+    hit the finalize->checkpoint window: re-applying the aggregate would
+    double-install it, so finalize refuses."""
+    from repro.fl.aggregation import RunningFedAvg
+    sim = _sim()
+    server = sim.server
+    agg = RunningFedAvg(server.global_params.shape)
+    agg.add(np.ones(server.global_params.size, np.float32), 10)
+    server.restore_aggregation(agg, [0], finalized=True)
+    with pytest.raises(RuntimeError, match="finalized"):
+        server.finalize_aggregation()
+
+
+def test_duplicate_refold_is_idempotent():
+    """A resumed round re-receiving an upload the snapshot already
+    contains must not double-count it."""
+    sim = _sim()                            # no checkpoint dir: pure engine
+    eng = RoundEngine(sim)
+    server = sim.server
+    server.begin_aggregation()
+    flat = np.ones(server.global_params.size, np.float32)
+    assert eng._fold(0, flat, 100) is True
+    assert eng._fold(0, flat.copy(), 100) is False
+    assert eng.duplicate_folds == 1
+    assert server.agg_clients == [0]
+    assert server._agg.n_updates == 1
+
+
+# -- deadline-based quorum in every uplink mode -------------------------------
+
+@pytest.mark.parametrize("mode,chunks", [
+    ("monolithic", None),
+    ("sequential", CHUNK),
+    ("interleaved", CHUNK),
+])
+def test_deadline_quorum_in_every_uplink_mode(mode, chunks):
+    uplink = "interleaved" if mode == "interleaved" else "sequential"
+    sim = _sim(rounds=1, chunk_elems=chunks, uplink_mode=uplink,
+               straggler={3: 10.0},
+               policy=RoundPolicy(deadline_s=65.0, train_time_s=10.0))
+    before = sim.server.global_params.tobytes()
+    r = sim.run_round()
+    assert 3 in r.stragglers
+    assert 3 not in r.reporters and 3 not in r.dropped
+    assert sorted(r.reporters) == [0, 1, 2]
+    assert r.quorum_met
+    assert sim.server.global_params.tobytes() != before  # model installed
+
+
+def test_quorum_miss_leaves_model_untouched(tmp_path):
+    """Deadline so tight nobody uploads: the round degrades gracefully —
+    reporters trained, every one of them timed out, the aggregate is
+    aborted, the global model stays byte-identical, and no aggregation
+    snapshot survives the round."""
+    sim = _sim(tmp_path, rounds=1, chunk_elems=None,
+               policy=RoundPolicy(deadline_s=5.0, train_time_s=10.0))
+    before = sim.server.global_params.tobytes()
+    r = sim.run_round()
+    assert not r.quorum_met
+    assert r.reporters == []
+    assert sorted(r.stragglers) == [0, 1, 2, 3]
+    assert sim.server.global_params.tobytes() == before
+    assert not list(tmp_path.glob("agg_*.cbor"))
+    assert sim.server.round == 1            # the round still closed
+
+
+# -- graceful partial-cohort degradation --------------------------------------
+
+def test_unicast_dissemination_drops_only_failed_clients():
+    """Satellite fix: a failed unicast global-model send drops exactly
+    that client — the rest of the cohort trains (the old path voided the
+    whole round on the first failure)."""
+    # seed 2 @ drop 0.25: some unicast sends fail, at least one survives
+    # (probed; the seeded link replays this forever)
+    sim = _sim(rounds=1, chunk_elems=None, seed=2, drop_prob=0.25)
+    sim.multicast_global = False
+    selected = sim.server.select_clients()
+    receivers, dropped = sim._disseminate(selected)
+    assert dropped and receivers            # partial, not all-or-nothing
+    assert sorted(receivers + dropped) == sorted(selected)
+
+
+def test_multicast_dissemination_stays_all_or_nothing():
+    sim = _sim(rounds=1, chunk_elems=None, seed=2, drop_prob=0.25)
+    selected = sim.server.select_clients()
+    receivers, dropped = sim._disseminate(selected)
+    assert (sorted(receivers) == sorted(selected) and not dropped) or \
+        (not receivers and sorted(dropped) == sorted(selected))
+
+
+@pytest.mark.parametrize("uplink", ["sequential", "interleaved"])
+def test_client_upload_crash_drops_one_client(uplink):
+    plan = FaultPlan(client_crashes=(
+        ClientCrash(2, "upload", at_chunk=2, at_frame=5),))
+    sim = _sim(rounds=1, uplink_mode=uplink, faults=plan)
+    before = sim.server.global_params.tobytes()
+    r = sim.run_round()
+    assert 2 in r.dropped and 2 not in r.reporters
+    assert sorted(r.reporters) == [0, 1, 3]
+    assert r.quorum_met
+    assert sim.server.global_params.tobytes() != before
+    # partial reassembly state was shed with the round
+    assert sim.server.pop_uplink(2) is None
+
+
+def test_client_train_crash_is_silent_dropout():
+    plan = FaultPlan(client_crashes=(ClientCrash(1, "train"),))
+    sim = _sim(rounds=1, faults=plan)
+    r = sim.run_round()
+    assert 1 in r.dropped and 1 not in r.reporters
+    assert sorted(r.reporters) == [0, 2, 3]
+
+
+def test_repair_window_crash_after_partial_upload():
+    """The client completes window 0 under loss, then dies inside the
+    repair phase: the server sheds its partial reassembly and the round
+    proceeds with the survivors."""
+    plan = FaultPlan(
+        chunk_loss=ChunkLoss(rate=0.3, seed=5),
+        client_crashes=(ClientCrash(2, "repair", at_window=1, at_chunk=0),))
+    sim = _sim(rounds=1, faults=plan)
+    r = sim.run_round()
+    assert 2 in r.dropped and 2 not in r.reporters
+    assert sorted(r.reporters) == [0, 1, 3]
+    assert r.quorum_met
+
+
+# -- link blackouts, frame damage, lost feedback ------------------------------
+
+def test_backoff_survives_blackout_that_burns_naive_retries():
+    """A 2s blackout mid-upload (uploads start ~12s into the round at
+    this seed/model size).  Failed attempts cost almost no airtime, so
+    the naive immediate-repair loop burns its whole window budget *inside*
+    the blackout and the upload dies.  Exponential backoff spaces the
+    repair windows past the blackout's end and the same transfer
+    recovers — the whole point of medium-aware backoff."""
+    plan = FaultPlan(blackouts=(Blackout(13.0, 15.0),))
+    naive = _sim(rounds=1, faults=plan)
+    r0 = naive.run_round()
+    assert r0.reporters == []               # budget burned in the dark
+    assert not r0.quorum_met
+
+    backed = _sim(rounds=1, faults=plan,
+                  policy=RoundPolicy(backoff=BackoffPolicy(initial_s=0.5)))
+    r1 = backed.run_round()
+    assert sorted(r1.reporters) == [0, 1, 2, 3]
+    assert r1.quorum_met
+    assert "FL_Chunk_Nack" in backed.accounting.by_type  # repaired the gap
+
+
+def test_corrupt_and_truncated_frames_never_install_garbage():
+    """Damaged frames are detected (CBOR decode / per-chunk CRC),
+    discarded, re-requested — and the final model is byte-identical to
+    the undamaged run (repairs change traffic, never values)."""
+    ref = _sim(rounds=1, uplink_mode="interleaved", reorder=0.0)
+    ref.run_round()
+    plan = FaultPlan(frame_faults=(
+        FrameFault("corrupt", client=1, window=0, chunk_index=2),
+        FrameFault("truncate", client=2, window=0, chunk_index=4),
+    ))
+    sim = _sim(rounds=1, uplink_mode="interleaved", reorder=0.0,
+               faults=plan)
+    r = sim.run_round()
+    assert sorted(r.reporters) == [0, 1, 2, 3]
+    assert sum(rep.corrupt_chunks for rep in sim.last_uplink_reports) >= 2
+    assert sim.server.global_params.tobytes() == \
+        ref.server.global_params.tobytes()
+
+
+def test_lost_feedback_costs_a_window_not_correctness():
+    ref = _sim(rounds=1)
+    ref.run_round()
+    plan = FaultPlan(feedback_losses=(FeedbackLoss(0, 0),))
+    sim = _sim(rounds=1, faults=plan)
+    r = sim.run_round()
+    assert sorted(r.reporters) == [0, 1, 2, 3]
+    # client 0 never heard the window-0 ACK: it opened one more window to
+    # re-poll (nothing was missing, so zero chunks were re-sent) and the
+    # server ACKed again — one extra control round-trip, no data cost
+    up = sim.accounting.by_type["FL_Model_Chunk_Uplink"]
+    assert up.messages == ref.accounting.by_type[
+        "FL_Model_Chunk_Uplink"].messages       # no data re-sent
+    assert sim.accounting.by_type["FL_Chunk_Ack"].messages == \
+        ref.accounting.by_type["FL_Chunk_Ack"].messages + 1
+    assert sim.server.global_params.tobytes() == \
+        ref.server.global_params.tobytes()
+
+
+# -- medium-aware backoff ------------------------------------------------------
+
+def test_backoff_stretches_repairs_under_loss_same_model():
+    plan = FaultPlan(chunk_loss=ChunkLoss(rate=0.3, seed=5))
+    base = _sim(rounds=1, faults=plan)
+    r0 = base.run_round()
+    backed = _sim(rounds=1, faults=plan,
+                  policy=RoundPolicy(backoff=BackoffPolicy(initial_s=0.5)))
+    r1 = backed.run_round()
+    assert sorted(r0.reporters) == sorted(r1.reporters) == [0, 1, 2, 3]
+    # same chunks lost (seeded), same repairs — but each repair window
+    # waited its exponential backoff first, so the round clock is longer
+    assert r1.clock_s > r0.clock_s
+    assert base.server.global_params.tobytes() == \
+        backed.server.global_params.tobytes()
