@@ -1,0 +1,94 @@
+"""Wire bytes per round for each chunk encoding — the compression table.
+
+One "round" of uplink traffic is a full chunked model transfer: the sum of
+every chunk's vectored wire form (headers + borrowed payload segments,
+``ScatterPayload`` length — exactly what the CoAP framer puts on the
+medium before link overhead).  Measured per encoding at the LeNet-5 size
+(44 426 params) and at 1 M params:
+
+  * f32          — ta-float32le chunk payloads (the baseline)
+  * f16          — ta-float16le payloads (error feedback on the client)
+  * q8           — q8-block payloads (int8 values + per-256-block scales)
+  * q8-residual  — the same q8 wire format carrying ``local − last_global``
+                   deltas; byte-wise identical cost, listed so the table
+                   states explicitly that residual mode changes *what* the
+                   bytes mean, not how many there are.
+
+``run_json()`` returns the CSV rows plus the ``wire_bytes_per_round``
+record that ``benchmarks/run.py`` merges into BENCH_codec.json; the
+``--check`` gate asserts the q8 ratio stays ≤ 0.30× f32 (the acceptance
+bound: 1 byte + 2 scale bytes per 256 elems ≈ 0.254× of 4 bytes/elem).
+"""
+from __future__ import annotations
+
+import uuid
+
+import numpy as np
+
+from repro.core import fastpath
+from repro.core.messages import ParamsEncoding
+from repro.fl.chunking import chunk_stream
+
+UUID = uuid.UUID(bytes=bytes(range(16)))
+SIZES = [44_426, 1_000_000]     # LeNet-5 (paper table 2) and 1M params
+CHUNK_ELEMS = 8192              # 32 KiB f32 chunks, % Q8_BLOCK == 0
+Q8_MAX_RATIO = 0.30             # acceptance bound, gated by run.py --check
+
+MODES = [
+    ("f32", ParamsEncoding.TA_F32, False),
+    ("f16", ParamsEncoding.TA_F16, False),
+    ("q8", ParamsEncoding.Q8, False),
+    ("q8-residual", ParamsEncoding.Q8, True),
+]
+
+
+def _wire_bytes_per_round(flat: np.ndarray, encoding: ParamsEncoding,
+                          residual: bool) -> tuple[int, int]:
+    """-> (total wire bytes, num chunks) for one full chunked transfer."""
+    if residual:
+        # a residual uplink quantizes ``local − global``: small-magnitude
+        # values, same element count — the wire cost is what's measured
+        flat = flat * 0.01
+    chunks = list(chunk_stream(UUID, 1, flat, CHUNK_ELEMS,
+                               encoding=encoding))
+    total = sum(len(fastpath.ScatterPayload(c.to_cbor_segments()))
+                for c in chunks)
+    return total, len(chunks)
+
+
+def run_json() -> tuple[list[str], dict]:
+    """-> (CSV rows, the ``wire_bytes_per_round`` BENCH_codec.json record)."""
+    rows = ["mode,model_size,num_chunks,wire_bytes_per_round,"
+            "bytes_per_param,ratio_vs_f32"]
+    record: dict = {"unit": "bytes", "chunk_elems": CHUNK_ELEMS,
+                    "q8_max_ratio": Q8_MAX_RATIO, "sizes": {}}
+    rng = np.random.default_rng(0)
+    for n in SIZES:
+        flat = rng.standard_normal(n).astype(np.float32)
+        entry: dict = {}
+        f32_total = None
+        for mode, encoding, residual in MODES:
+            total, num = _wire_bytes_per_round(flat, encoding, residual)
+            if mode == "f32":
+                f32_total = total
+            ratio = total / f32_total
+            rows.append(f"{mode},{n},{num},{total},{total / n:.3f},"
+                        f"{ratio:.3f}")
+            entry[mode] = {"wire_bytes": total, "num_chunks": num,
+                           "bytes_per_param": round(total / n, 3),
+                           "ratio_vs_f32": round(ratio, 3)}
+        record["sizes"][str(n)] = entry
+    return rows, record
+
+
+def run() -> list[str]:
+    rows, _ = run_json()
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+
+    rows, record = run_json()
+    print("\n".join(rows))
+    print(json.dumps(record, indent=2))

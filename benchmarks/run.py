@@ -35,13 +35,15 @@ def check(factor: float = REGRESSION_FACTOR,
     comparing — CI uploads it as an artifact whether the gate passes or
     not, without paying for a second bench run.
     """
-    from benchmarks import bench_codec_throughput
+    from benchmarks import bench_codec_throughput, bench_wire_bytes
 
     if not BENCH_JSON.exists():
         print(f"check: no committed record at {BENCH_JSON}")
         return 1
     committed = json.loads(BENCH_JSON.read_text())
     _, fresh = bench_codec_throughput.run_json()
+    _, wire = bench_wire_bytes.run_json()
+    fresh["wire_bytes_per_round"] = wire
     if out:
         Path(out).write_text(json.dumps(fresh, indent=2) + "\n")
         print(f"check: wrote fresh record to {out}")
@@ -64,6 +66,14 @@ def check(factor: float = REGRESSION_FACTOR,
         print("check: committed record has no comparable codec entries")
         return 1
     failed = False
+    # compression acceptance: q8 chunks must stay within the wire-bytes
+    # bound of f32 (deterministic — re-measured fresh, no baseline drift)
+    for size, entry in wire["sizes"].items():
+        ratio = entry["q8"]["ratio_vs_f32"]
+        if ratio > bench_wire_bytes.Q8_MAX_RATIO:
+            failed = True
+            print(f"check: q8 wire bytes @ {size} params = {ratio:.3f}x "
+                  f"f32, above the {bench_wire_bytes.Q8_MAX_RATIO}x bound")
     for kind, lines in failures.items():
         if lines:
             failed = True
@@ -102,6 +112,7 @@ def main() -> int:
         bench_fl_round,
         bench_lenet,
         bench_message_sizes,
+        bench_wire_bytes,
     )
 
     def _merge_into_bench_json(update: dict) -> None:
@@ -125,10 +136,17 @@ def main() -> int:
         rows.append(f"# merged fault_sweep into {BENCH_JSON}")
         return rows
 
+    def wire_bytes_run():
+        rows, record = bench_wire_bytes.run_json()
+        _merge_into_bench_json({"wire_bytes_per_round": record})
+        rows.append(f"# merged wire_bytes_per_round into {BENCH_JSON}")
+        return rows
+
     sections = [
         ("table1_message_sizes", bench_message_sizes.run),
         ("table2_lenet5", bench_lenet.run),
         ("codec_throughput", codec_run),
+        ("wire_bytes_per_round", wire_bytes_run),
         ("fl_round_accounting", bench_fl_round.run),
         ("uplink_airtime_shared_medium", bench_fl_round.run_uplink_airtime),
         ("fault_sweep", fault_sweep_run),

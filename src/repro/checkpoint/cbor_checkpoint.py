@@ -220,6 +220,24 @@ class CheckpointManager:
         same tmp-then-replace crash safety as round checkpoints)."""
         return save_checkpoint(self._named_path(name), tree, **kw)
 
+    def peek_named(self, name: str) -> dict | None:
+        """The named checkpoint's header (owned), without restoring any
+        leaf; None when absent or unreadable.  Callers whose tree layout
+        depends on what was saved (e.g. an aggregation snapshot with an
+        optional residual-base leaf) read the header meta first, then
+        build the matching ``tree_like`` for ``restore_named``."""
+        path = self._named_path(name)
+        if not path.exists():
+            return None
+        try:
+            with open(path, "rb") as f:
+                header = _own(next(fastpath.CBORSequenceReader(f.read())))
+        except (OSError, StopIteration, cbor.CBORDecodeError):
+            return None
+        if not isinstance(header, dict) or header.get("format") != FORMAT:
+            return None
+        return header
+
     def restore_named(self, name: str, tree_like: Any):
         """Restore auxiliary state by name; None when absent or corrupt
         (a torn snapshot write degrades to 'no snapshot', never an

@@ -193,6 +193,18 @@ fl_model_params = Choice([ArrayOf([OneOrMore(Float())]),
 
 fl_model_metadata = Group([Float(), Float()])  # (train-loss, val-loss)
 
+# Chunk payloads are discriminated by their own CBOR tag — the per-chunk
+# encoding discriminator (docs/chunk_protocol.md §wire format):
+#
+#   fl-chunk-params = ta-float32le / ta-float16le / q8-block
+#
+# a deliberately *narrower* choice than fl-model-params: chunk CRC32 and
+# gather-reassembly semantics are defined per encoding, so dynamic float
+# arrays / f64 / bf16 are not valid chunk payloads.
+fl_chunk_params = Choice([Tagged(TAG_F32LE, Bstr()),
+                          Tagged(TAG_F16LE, Bstr()),
+                          _q8_choice])
+
 FL_GLOBAL_MODEL_UPDATE = ArrayOf([
     fl_model_identifier,
     fl_model_round,
@@ -217,8 +229,8 @@ FL_MODEL_CHUNK = ArrayOf([       # beyond-paper extension (DESIGN.md §9.1)
     fl_model_round,
     Uint(),                      # chunk-index
     Uint(),                      # num-chunks
-    Uint(),                      # crc32
-    fl_model_params,
+    Uint(),                      # crc32 over the *encoded* payload bytes
+    fl_chunk_params,             # tag = the per-chunk encoding discriminator
 ])
 
 # Selective-repeat control messages (docs/chunk_protocol.md).  A receiver

@@ -84,6 +84,10 @@ def _encode_params(params: np.ndarray, encoding: ParamsEncoding,
     a ``memoryview`` handed straight out of a Pallas kernel
     (``params_to_f16_view``), which the vectored path sends un-copied.
     """
+    from repro.core.params_codec import Q8ChunkPayload
+    if isinstance(params, Q8ChunkPayload):
+        # pre-quantized chunk payload: its arrays go on the wire borrowed
+        return params.item()
     if encoding in _TA_TAGS:
         if payload is not None:  # pre-quantized payload (Pallas kernel output)
             return Tag(_TA_TAGS[encoding], payload)
@@ -178,6 +182,47 @@ def params_from_cbor(item: object) -> np.ndarray:
     if isinstance(item, list):
         return np.asarray([float(v) for v in item], dtype=np.float64)
     raise TypeError(f"not a valid fl-model-params item: {type(item)!r}")
+
+
+# The chunk wire format is pluggable: the params item's own CBOR tag is
+# the per-chunk encoding discriminator (ta-float32le / ta-float16le /
+# q8-block — see ``fl_chunk_params`` in core/cddl.py), so the chunk frame
+# itself never changed shape and legacy f32 chunk streams decode
+# unchanged.  ``CHUNK_ENCODINGS`` is the closed set a chunk stream may
+# carry; per-chunk CRC32 is always over the *encoded* payload bytes.
+CHUNK_ENCODINGS = (ParamsEncoding.TA_F32, ParamsEncoding.TA_F16,
+                   ParamsEncoding.Q8)
+
+
+def chunk_encoding_of(params: object) -> ParamsEncoding:
+    """The wire encoding a chunk payload discriminates to."""
+    from repro.core.params_codec import Q8ChunkPayload
+    if isinstance(params, Q8ChunkPayload):
+        return ParamsEncoding.Q8
+    if np.asarray(params).dtype == np.float16:
+        return ParamsEncoding.TA_F16
+    return ParamsEncoding.TA_F32
+
+
+def chunk_params_from_cbor(item: object):
+    """Decode fl-chunk-params *preserving the wire encoding*.
+
+    Unlike ``params_from_cbor`` (which widens every payload to f64 for
+    the monolithic messages), chunk reassembly needs the encoded form:
+    the assembler re-verifies the CRC over the encoded bytes and casts /
+    dequantizes straight into its gather slot.  f32 and f16 typed arrays
+    decode as borrowed ``<f4`` / ``<f2`` views of the receive buffer; a
+    q8 item decodes as a geometry-checked ``Q8ChunkPayload`` whose arrays
+    are views too — no copy until the gather write."""
+    if is_typed_array(item):
+        if item.tag in (TAG_F32LE, TAG_F16LE):  # type: ignore[union-attr]
+            return decode_typed_array(item)  # type: ignore[arg-type]
+        return params_from_cbor(item)
+    if isinstance(item, Tag):
+        from repro.core.params_codec import TAG_Q8_BLOCK, q8_chunk_payload
+        if item.tag == TAG_Q8_BLOCK:
+            return q8_chunk_payload(item)
+    return params_from_cbor(item)
 
 
 # ---------------------------------------------------------------------------
@@ -427,6 +472,12 @@ class FLModelChunk:
 
     [model-uuid, round, chunk-index: uint, num-chunks: uint, crc32: uint,
      chunk-params]
+
+    ``params`` is the chunk payload in its wire encoding: a flat f32 or
+    f16 array, or a ``Q8ChunkPayload`` — the payload item's CBOR tag is
+    the encoding discriminator on the wire (``chunk_encoding_of``), and
+    ``crc32`` always covers the *encoded* payload bytes, so selective-
+    repeat repair verifies exactly what traveled.
     """
 
     model_id: uuid_module.UUID
@@ -434,10 +485,27 @@ class FLModelChunk:
     chunk_index: int
     num_chunks: int
     crc32: int
-    params: np.ndarray
+    params: object
 
-    def _cbor_obj(self, encoding: ParamsEncoding,
+    @property
+    def encoding(self) -> ParamsEncoding:
+        return chunk_encoding_of(self.params)
+
+    @property
+    def payload_elems(self) -> int:
+        """Model elements this chunk reconstructs (unpadded count)."""
+        from repro.core.params_codec import Q8ChunkPayload
+        if isinstance(self.params, Q8ChunkPayload):
+            return self.params.count
+        return int(np.asarray(self.params).size)
+
+    def _cbor_obj(self, encoding: ParamsEncoding | None = None,
                   params_payload=None) -> list:
+        if encoding is None:
+            # self-describing default: the payload object picks its own
+            # wire tag (f16 arrays and Q8ChunkPayloads travel natively;
+            # everything else keeps the legacy ta-float32le form)
+            encoding = self.encoding
         return [
             Tag(TAG_UUID, self.model_id.bytes),
             int(self.round),
@@ -447,16 +515,17 @@ class FLModelChunk:
             _encode_params(self.params, encoding, params_payload),
         ]
 
-    def to_cbor(self, encoding: ParamsEncoding = ParamsEncoding.TA_F32, *,
+    def to_cbor(self, encoding: ParamsEncoding | None = None, *,
                 params_payload=None,
                 fast: bool = True) -> bytes:
         return _encode_obj(self._cbor_obj(encoding, params_payload), fast=fast)
 
-    def to_cbor_segments(self, encoding: ParamsEncoding = ParamsEncoding.TA_F32,
+    def to_cbor_segments(self, encoding: ParamsEncoding | None = None,
                          *, params_payload=None) -> list[memoryview]:
         """Chunk wire form as segments: the chunk payload is a borrowed
-        view of the live parameter slice — a whole-model chunk stream
-        holds only headers beyond the model itself."""
+        view of the live parameter slice (or the live quantized arrays) —
+        a whole-model chunk stream holds only headers beyond the model
+        itself, whatever the encoding."""
         return _encode_obj_segments(self._cbor_obj(encoding, params_payload))
 
     @classmethod
@@ -465,7 +534,7 @@ class FLModelChunk:
         ident, rnd, idx, total, crc, params = item
         return cls(_decode_uuid(ident), _expect_uint(rnd, "round"),
                    _expect_uint(idx, "chunk-index"), _expect_uint(total, "num-chunks"),
-                   _expect_uint(crc, "crc32"), params_from_cbor(params))
+                   _expect_uint(crc, "crc32"), chunk_params_from_cbor(params))
 
     @classmethod
     def from_cbor(cls, data: bytes) -> "FLModelChunk":

@@ -33,6 +33,18 @@ Pytree = Any
 
 TAG_Q8_BLOCK = 0x10002  # FCFS ext: [block_size, count, ta-sint8, ta-f32 scales]
 
+# Canonical q8 scale-block width.  ``kernels/q8_block`` compiles for the
+# same BLOCK; the chunk protocol's scale-block alignment rule is stated in
+# terms of this constant (docs/chunk_protocol.md).
+Q8_BLOCK = 256
+
+# Largest per-block group a wire item may claim.  The block size fans out
+# into a reshape of the (untrusted) value stream, so it gets the same
+# bounded-before-use treatment as chunk geometry (MAX_ASSEMBLY_ELEMS /
+# MAX_NACK_CHUNKS): a forged block cannot drive a degenerate reshape or a
+# scales array wildly out of proportion to the payload that arrived.
+MAX_Q8_BLOCK = 1 << 16
+
 
 @dataclass(frozen=True)
 class ParamsSpec:
@@ -75,7 +87,7 @@ def unflatten_params(flat: np.ndarray, spec: ParamsSpec) -> Pytree:
 # Blockwise int8 quantization (+ error feedback)
 
 
-def quantize_q8(flat: np.ndarray, block: int = 256):
+def quantize_q8(flat: np.ndarray, block: int = Q8_BLOCK):
     """-> (int8 values, f32 per-block scales, dequantized reconstruction)."""
     n = flat.size
     pad = (-n) % block
@@ -88,7 +100,7 @@ def quantize_q8(flat: np.ndarray, block: int = 256):
     return q.reshape(-1), scales, deq
 
 
-def encode_q8(flat: np.ndarray, block: int = 256) -> tuple[bytes, np.ndarray]:
+def encode_q8(flat: np.ndarray, block: int = Q8_BLOCK) -> tuple[bytes, np.ndarray]:
     """CBOR item: #6.TAG_Q8_BLOCK([block, count, ta-sint8, ta-f32]).
     Returns (encoded bytes, quantization error for error feedback)."""
     q, scales, deq = quantize_q8(flat, block)
@@ -102,7 +114,7 @@ def encode_q8(flat: np.ndarray, block: int = 256) -> tuple[bytes, np.ndarray]:
 
 
 def q8_item_from_arrays(q: np.ndarray, scales: np.ndarray, count: int,
-                        block: int = 256) -> Tag:
+                        block: int = Q8_BLOCK) -> Tag:
     """The single definition of the q8 wire item shape:
     ``Tag(TAG_Q8_BLOCK, [block, count, q: ndarray, scales: ndarray])``
     with ``q`` the block-padded int8 stream.  Both the numpy quantizer
@@ -111,7 +123,7 @@ def q8_item_from_arrays(q: np.ndarray, scales: np.ndarray, count: int,
     return Tag(TAG_Q8_BLOCK, [int(block), int(count), q, scales])
 
 
-def q8_item(flat: np.ndarray, block: int = 256) -> tuple[Tag, np.ndarray]:
+def q8_item(flat: np.ndarray, block: int = Q8_BLOCK) -> tuple[Tag, np.ndarray]:
     """The q8 payload as a CBOR object tree instead of pre-encoded bytes.
 
     Encodes byte-identically to ``encode_q8`` through every codec, but the
@@ -122,14 +134,145 @@ def q8_item(flat: np.ndarray, block: int = 256) -> tuple[Tag, np.ndarray]:
     return q8_item_from_arrays(q, scales, flat.size, block), flat - deq
 
 
-def decode_q8(item: Tag, total: int | None = None) -> np.ndarray:
+def validate_q8_geometry(block: int, count: int, q_elems: int,
+                         scale_blocks: int) -> tuple[int, int]:
+    """Bound wire-claimed q8 geometry against the *actual* typed-array
+    lengths before any reshape or allocation depends on it.
+
+    The claimed ``block``/``count`` arrive in the same untrusted bytes as
+    the payload they describe, so they must be cross-checked against what
+    physically arrived (the ``MAX_ASSEMBLY_ELEMS`` discipline from chunk
+    reassembly): the value stream must be exactly ``scale_blocks`` whole
+    blocks, and ``count`` must land inside the final block — anything else
+    is a forged or corrupt item.  Returns ``(block, count)`` as ints."""
+    if (not isinstance(block, int) or isinstance(block, bool)
+            or not 1 <= block <= MAX_Q8_BLOCK):
+        raise ValueError(
+            f"q8 block size {block!r} outside 1..{MAX_Q8_BLOCK}")
+    if not isinstance(count, int) or isinstance(count, bool) or count < 0:
+        raise ValueError(f"q8 count {count!r} must be a uint")
+    if q_elems != scale_blocks * block:
+        raise ValueError(
+            f"q8 value stream carries {q_elems} values, scales claim "
+            f"{scale_blocks} blocks of {block}")
+    if not count <= q_elems < count + block:
+        raise ValueError(
+            f"q8 count {count} inconsistent with {q_elems} block-padded "
+            f"values (block {block})")
+    return block, count
+
+
+def _q8_wire_arrays(item: Tag) -> tuple[int, int, np.ndarray, np.ndarray]:
+    """Decode + geometry-check a q8 wire item -> (block, count, q, scales).
+    ``q`` is the block-padded int8 stream, ``scales`` the per-block f32
+    scales — both zero-copy views of the item's typed-array payloads."""
     if not isinstance(item, Tag) or item.tag != TAG_Q8_BLOCK:
         raise TypeError("not a q8 payload")
+    if not isinstance(item.value, (list, tuple)) or len(item.value) != 4:
+        raise ValueError("q8 payload must be [block, count, values, scales]")
     block, count, q_ta, s_ta = item.value
-    q = decode_typed_array(q_ta).astype(np.float32).reshape(-1, block)
-    scales = decode_typed_array(s_ta).astype(np.float32)
-    return (q * scales[:, None]).reshape(-1)[:total if total is not None
-                                             else count]
+    q = decode_typed_array(q_ta)
+    scales = decode_typed_array(s_ta)
+    if q.dtype != np.int8:
+        raise ValueError("q8 values must be a ta-sint8 array")
+    if scales.dtype != np.dtype("<f4"):
+        raise ValueError("q8 scales must be a ta-float32le array")
+    block, count = validate_q8_geometry(block, count, q.size, scales.size)
+    return block, count, q.reshape(-1), scales.reshape(-1)
+
+
+def decode_q8(item: Tag, total: int | None = None) -> np.ndarray:
+    block, count, q, scales = _q8_wire_arrays(item)
+    if total is not None and not 0 <= total <= count:
+        raise ValueError(f"q8 requested length {total} exceeds count {count}")
+    deq = (q.astype(np.float32).reshape(-1, block)
+           * scales[:, None]).reshape(-1)
+    return deq[:total if total is not None else count]
+
+
+@dataclass(frozen=True, eq=False)
+class Q8ChunkPayload:
+    """One chunk's q8-block wire payload (docs/chunk_protocol.md).
+
+    The scale-block alignment rule makes every chunk self-describing:
+    chunk boundaries fall on multiples of ``block`` params, so a chunk
+    carries its int8 values plus *exactly* its scale blocks — it can be
+    CRC-verified, repaired, and dequantized without any other chunk.
+    ``q`` is the block-padded int8 stream (padding only ever on the final
+    chunk of a generation), ``count`` the unpadded element count, and the
+    geometry is validated against the actual array lengths on
+    construction (`validate_q8_geometry`), so a forged wire claim fails
+    here instead of mis-reshaping downstream."""
+
+    block: int
+    count: int
+    q: np.ndarray           # int8, block-padded values
+    scales: np.ndarray      # <f4, one per block
+
+    def __post_init__(self) -> None:
+        q = np.asarray(self.q).reshape(-1)
+        scales = np.ascontiguousarray(self.scales, dtype="<f4").reshape(-1)
+        if q.dtype != np.int8:
+            q = np.ascontiguousarray(q, dtype=np.int8)
+        elif not q.flags.c_contiguous:
+            q = np.ascontiguousarray(q)
+        object.__setattr__(self, "q", q)
+        object.__setattr__(self, "scales", scales)
+        validate_q8_geometry(self.block, self.count, q.size, scales.size)
+
+    def __eq__(self, other: object) -> bool:
+        # array fields need elementwise-aware equality (the dataclass
+        # default would bubble numpy's ambiguous-truth ValueError)
+        if not isinstance(other, Q8ChunkPayload):
+            return NotImplemented
+        return (self.block == other.block and self.count == other.count
+                and np.array_equal(self.q, other.q)
+                and np.array_equal(self.scales, other.scales))
+
+    __hash__ = None
+
+    @property
+    def padded(self) -> bool:
+        """True when the final block is partial (only legal on the last
+        chunk of a generation — the alignment rule)."""
+        return self.q.size != self.count
+
+    def item(self) -> Tag:
+        """The CBOR wire object (`q8_item_from_arrays` layout); its arrays
+        alias this payload, so the vectored encoder borrows them."""
+        return q8_item_from_arrays(self.q, self.scales, self.count,
+                                   self.block)
+
+    def crc_segments(self) -> tuple[memoryview, memoryview]:
+        """The *encoded* payload bytes the chunk CRC32 covers: the int8
+        value stream, then the little-endian f32 scales (in wire order)."""
+        return (memoryview(self.q).cast("B"),
+                memoryview(self.scales).cast("B"))
+
+    def dequantize_into(self, out: np.ndarray) -> None:
+        """Reconstruct this chunk's ``count`` f32 params into ``out`` (a
+        gather-buffer slot of exactly ``count`` elements)."""
+        deq = (self.q.astype(np.float32).reshape(-1, self.block)
+               * self.scales[:, None]).reshape(-1)
+        out[...] = deq[:self.count]
+
+    def to_f32(self) -> np.ndarray:
+        out = np.empty(self.count, dtype="<f4")
+        self.dequantize_into(out)
+        return out
+
+    def copy_owned(self) -> "Q8ChunkPayload":
+        """An owned copy (wire decodes alias a receive ring's arena — a
+        parked chunk must outlive it)."""
+        return Q8ChunkPayload(self.block, self.count,
+                              self.q.copy(), self.scales.copy())
+
+
+def q8_chunk_payload(item: Tag) -> Q8ChunkPayload:
+    """Decode a q8 wire item into a geometry-checked chunk payload whose
+    arrays are zero-copy views of the item's typed arrays."""
+    block, count, q, scales = _q8_wire_arrays(item)
+    return Q8ChunkPayload(block, count, q, scales)
 
 
 @dataclass

@@ -40,10 +40,18 @@ import numpy as np
 from repro.core import cddl, fastpath
 from repro.core.fastpath import ScatterPayload
 from repro.core.messages import (
+    CHUNK_ENCODINGS,
     MAX_NACK_CHUNKS,
     FLChunkAck,
     FLChunkNack,
     FLModelChunk,
+    ParamsEncoding,
+)
+from repro.core.params_codec import (
+    Q8_BLOCK,
+    ErrorFeedback,
+    Q8ChunkPayload,
+    quantize_q8,
 )
 from repro.transport.coap import BlockReceiveRing, Code, TransferStats
 from repro.transport.medium import MediumReport, SharedMedium
@@ -82,7 +90,8 @@ class GatherBufferPool:
     bounded by ``max_buffers``).
     """
 
-    __slots__ = ("_free", "_count", "max_buffers", "hits", "misses")
+    __slots__ = ("_free", "_count", "max_buffers", "hits", "misses",
+                 "discards", "capacity_drops")
 
     def __init__(self, max_buffers: int = 8) -> None:
         self._free: dict[int, list[np.ndarray]] = {}
@@ -90,6 +99,15 @@ class GatherBufferPool:
         self.max_buffers = max_buffers
         self.hits = 0
         self.misses = 0
+        # discards: returned buffers the pool could NOT re-issue (failed
+        # the dtype/layout check).  A workload whose buffers always fail —
+        # e.g. a dtype drift upstream — used to degrade to zero reuse with
+        # no signal at all; now the counter names the leak.
+        self.discards = 0
+        # capacity_drops: well-formed buffers dropped only because the
+        # pool was full (expected displacement, split out so ``discards``
+        # stays a pure health signal).
+        self.capacity_drops = 0
 
     def acquire(self, capacity: int) -> np.ndarray | None:
         """A pooled ``<f4`` buffer of exactly ``capacity`` elements
@@ -105,39 +123,147 @@ class GatherBufferPool:
     def release(self, arr: np.ndarray | None) -> None:
         """Return a spent gather buffer (or a completed-generation view of
         one — the base buffer is what gets pooled).  Arrays the pool
-        cannot re-issue (wrong dtype/layout, borrowed memory) are ignored."""
+        cannot re-issue (wrong dtype/layout, borrowed memory) are dropped
+        and counted in ``discards``."""
         if arr is None:
             return
         buf = arr.base if isinstance(arr.base, np.ndarray) else arr
         if (not isinstance(buf, np.ndarray) or buf.base is not None
                 or buf.dtype != np.dtype("<f4") or buf.ndim != 1
                 or not buf.flags.c_contiguous or not buf.flags.writeable):
+            self.discards += 1
             return
         if self._count >= self.max_buffers:
+            self.capacity_drops += 1
             return
         self._free.setdefault(buf.size, []).append(buf)
         self._count += 1
 
 
-def chunk_stream(model_id: uuid.UUID, round_: int, params: np.ndarray,
-                 chunk_elems: int) -> Iterator[FLModelChunk]:
-    """Slice ``params`` into ``chunk_elems``-element ``FLModelChunk``s.
+def chunk_payload_crc(params) -> int:
+    """CRC32 over a chunk payload's *encoded* wire bytes.
 
-    Each chunk's ``crc32`` covers its little-endian f32 payload, so
-    receivers verify integrity per chunk instead of per model.  Chunks are
-    numpy views of ``params`` — peak memory is one chunk regardless of
-    model size, and ``to_cbor_segments`` puts the view on the wire without
-    copying it.
+    The one definition both ends share (sender in ``chunk_stream``,
+    verifier in ``ChunkAssembler``), per encoding: f32/f16 — the
+    little-endian float bytes exactly as the typed array carries them;
+    q8 — the int8 value stream chained with the f32 scale bytes in wire
+    order.  Covering the encoded bytes (not some decoded form) is what
+    lets selective-repeat repair verify exactly what traveled."""
+    if isinstance(params, Q8ChunkPayload):
+        crc = 0
+        for seg in params.crc_segments():
+            crc = zlib.crc32(seg, crc)
+        return crc
+    arr = np.asarray(params)
+    if not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr)
+    return zlib.crc32(memoryview(arr).cast("B"))
+
+
+def chunk_stream(model_id: uuid.UUID, round_: int, params: np.ndarray,
+                 chunk_elems: int, *,
+                 encoding: ParamsEncoding | str = ParamsEncoding.TA_F32,
+                 allow_narrowing: bool = False,
+                 error_feedback: ErrorFeedback | None = None,
+                 quantizer: str = "numpy") -> Iterator[FLModelChunk]:
+    """Slice ``params`` into ``chunk_elems``-element ``FLModelChunk``s in
+    the requested wire ``encoding`` (``CHUNK_ENCODINGS``).
+
+    Each chunk's ``crc32`` covers its *encoded* payload bytes
+    (``chunk_payload_crc``), so receivers verify exactly what traveled,
+    per chunk instead of per model.  Payloads are views of one
+    whole-vector encode — peak memory is the encoded stream regardless of
+    chunk count, and ``to_cbor_segments`` puts each view on the wire
+    without copying it.
+
+    * ``TA_F32`` (default): ``params`` must already be little-endian f32 —
+      a sender holding f64 (or f16/bf16) params must opt into the lossy
+      narrowing / silent upcast with ``allow_narrowing=True``, otherwise
+      ``ValueError``.  Wire-compatible with pre-encoding receivers.
+    * ``TA_F16``: the vector is quantized to f16 once; chunks are ``<f2``
+      views of it.
+    * ``Q8``: blockwise int8 (scale block width ``Q8_BLOCK``).
+      ``chunk_elems`` must be a multiple of ``Q8_BLOCK`` — the scale-block
+      alignment rule: chunk boundaries fall on block boundaries, so every
+      chunk carries its int8 values plus exactly its own scales and is
+      self-describing for CRC/repair/dequantize.  Padding to a whole
+      block only ever lands in the final chunk.
+
+    Lossy encodings accept any float input (the loss is the caller's
+    explicit choice) and support ``error_feedback``: the previous round's
+    quantization error is added back before quantizing and the new error
+    is stored after.  ``quantizer="kernel"`` routes the quantization
+    through the Pallas kernels (``kernels/quantize_f16`` / ``q8_block``);
+    the default ``"numpy"`` host path is bit-compatible.
     """
     if chunk_elems <= 0:
         raise ValueError("chunk_elems must be positive")
-    flat = np.ascontiguousarray(params, dtype="<f4").reshape(-1)
-    num = max(1, -(-flat.size // chunk_elems))
+    if isinstance(encoding, str):
+        encoding = ParamsEncoding(encoding)
+    if encoding not in CHUNK_ENCODINGS:
+        raise ValueError(
+            f"{encoding.value} is not a chunk encoding "
+            f"(choose from {[e.value for e in CHUNK_ENCODINGS]})")
+    if quantizer not in ("numpy", "kernel"):
+        raise ValueError(f"unknown quantizer {quantizer!r}")
+
+    flat = np.asarray(params).reshape(-1)
+    if encoding is ParamsEncoding.TA_F32:
+        if flat.dtype != np.dtype("<f4") and not allow_narrowing:
+            raise ValueError(
+                f"chunk_stream would silently convert {flat.dtype} params "
+                f"to <f4 — lossy for f64, a silent upcast for f16/bf16. "
+                f"Pass allow_narrowing=True to opt in, or pick a lossy "
+                f"chunk encoding explicitly.")
+        stream: np.ndarray | None = np.ascontiguousarray(flat, dtype="<f4")
+        q = scales = None
+    else:
+        f32 = np.ascontiguousarray(flat, dtype="<f4")
+        if error_feedback is not None:
+            f32 = np.ascontiguousarray(error_feedback.compensate(f32),
+                                       dtype="<f4")
+        if encoding is ParamsEncoding.TA_F16:
+            if quantizer == "kernel":
+                from repro.kernels.quantize_f16.ops import params_to_f16_array
+                stream = params_to_f16_array(f32)
+            else:
+                stream = f32.astype("<f2")
+            if error_feedback is not None:
+                error_feedback.update(f32 - stream.astype(np.float32))
+            q = scales = None
+        else:                                   # Q8
+            if chunk_elems % Q8_BLOCK:
+                raise ValueError(
+                    f"q8 chunking requires chunk_elems to be a multiple of "
+                    f"the scale-block width {Q8_BLOCK} (got {chunk_elems}) "
+                    f"— the scale-block alignment rule")
+            if quantizer == "kernel":
+                from repro.kernels.q8_block.ops import q8_chunk_arrays
+                q, scales, err = q8_chunk_arrays(f32)
+            else:
+                q, scales, deq = quantize_q8(f32, Q8_BLOCK)
+                err = f32 - deq
+            if error_feedback is not None:
+                error_feedback.update(err)
+            stream = None
+
+    count = flat.size
+    num = max(1, -(-count // chunk_elems))
     for i in range(num):
-        part = flat[i * chunk_elems : (i + 1) * chunk_elems]
+        start = i * chunk_elems
+        if stream is not None:                  # f32 / f16: a flat slice
+            part = stream[start : start + chunk_elems]
+        else:                                   # q8: aligned block slices
+            cnt = min(chunk_elems, count - start)
+            b0 = start // Q8_BLOCK
+            b1 = b0 + (chunk_elems // Q8_BLOCK if i < num - 1
+                       else scales.size - b0)
+            part = Q8ChunkPayload(Q8_BLOCK, cnt,
+                                  q[b0 * Q8_BLOCK : b1 * Q8_BLOCK],
+                                  scales[b0:b1])
         yield FLModelChunk(
             model_id=model_id, round=round_, chunk_index=i, num_chunks=num,
-            crc32=zlib.crc32(memoryview(part).cast("B")), params=part)
+            crc32=chunk_payload_crc(part), params=part)
 
 
 class ChunkAssembler:
@@ -186,7 +312,9 @@ class ChunkAssembler:
         self._received: set[int] = set()
         self._chunk_elems: int | None = None     # slot width (non-final)
         self._final_size: int | None = None      # final chunk's element count
-        self._pending_final: np.ndarray | None = None
+        self._pending_final = None               # parked payload (owned)
+        self._encoding: ParamsEncoding | None = None   # generation encoding
+        self._q8_block: int | None = None        # generation q8 block width
         self._completed_key: tuple | None = None
         self.duplicates = 0
         self.stale_rejected = 0
@@ -210,6 +338,8 @@ class ChunkAssembler:
         self._chunk_elems = None
         self._final_size = None
         self._pending_final = None
+        self._encoding = None
+        self._q8_block = None
 
     def _alloc(self, num_chunks: int) -> None:
         """Allocate the gather buffer once the slot width is known, and
@@ -235,24 +365,64 @@ class ChunkAssembler:
         buf = self._pool.acquire(capacity) if self._pool is not None else None
         self._buf = buf if buf is not None else np.empty(capacity, dtype="<f4")
         if self._pending_final is not None:
-            fs = self._pending_final.size
+            fs = self._final_size
             if not 1 <= fs <= elems:
                 raise ValueError(
                     f"final chunk carries {fs} elements, expected 1..{elems}")
-            start = (num_chunks - 1) * elems
-            self._buf[start : start + fs] = self._pending_final
+            self._write((num_chunks - 1) * elems, self._pending_final)
             self._pending_final = None
 
+    def _write(self, start: int, payload) -> None:
+        """Reconstruct one verified payload into its gather slot: f32
+        slices assign directly, f16 upcasts on assignment, q8 dequantizes
+        into the slot — always exactly the payload's unpadded element
+        count, whatever the wire form."""
+        if isinstance(payload, Q8ChunkPayload):
+            payload.dequantize_into(self._buf[start : start + payload.count])
+        else:
+            self._buf[start : start + payload.size] = payload
+
     @staticmethod
-    def _payload(msg: FLModelChunk) -> np.ndarray:
-        """The chunk payload as a flat ``<f4`` view — zero-copy when the
-        sender's array already is one (the fan-out hot path); a
-        dtype-mismatched sender costs exactly one conversion copy of one
-        chunk, never a second buffered copy."""
-        part = np.asarray(msg.params)
+    def _normalize(msg: FLModelChunk):
+        """The chunk payload in canonical wire form ->
+        ``(encoding, payload, elems)`` where ``payload`` is a flat
+        contiguous ``<f4``/``<f2`` view or a ``Q8ChunkPayload`` and
+        ``elems`` the model elements it reconstructs.  Zero-copy when the
+        sender's array already is wire-shaped (the fan-out hot path); a
+        dtype-mismatched legacy sender (e.g. f64 arrays) costs exactly one
+        conversion copy of one chunk and lands on the f32 path — CRC over
+        f32 bytes, as those streams always defined it."""
+        params = msg.params
+        if isinstance(params, Q8ChunkPayload):
+            return ParamsEncoding.Q8, params, params.count
+        part = np.asarray(params)
+        if part.dtype == np.dtype("<f2"):
+            if not part.flags.c_contiguous:
+                part = np.ascontiguousarray(part)
+            return ParamsEncoding.TA_F16, part.reshape(-1), part.size
         if part.dtype != np.dtype("<f4") or not part.flags.c_contiguous:
             part = np.ascontiguousarray(part, dtype="<f4")
-        return part.reshape(-1)
+        return ParamsEncoding.TA_F32, part.reshape(-1), part.size
+
+    def _check_encoding(self, idx: int, enc: ParamsEncoding,
+                        payload) -> None:
+        """Generation encoding uniformity: the first verified chunk fixes
+        the encoding (and q8 block width); every later chunk must match —
+        a mixed generation means a confused or hostile sender, and a
+        gather buffer must never blend dequantization rules."""
+        if self._encoding is None:
+            self._encoding = enc
+            if enc is ParamsEncoding.Q8:
+                self._q8_block = payload.block
+        elif enc is not self._encoding:
+            raise ValueError(
+                f"chunk {idx} encoding {enc.value} differs from the "
+                f"generation's {self._encoding.value}")
+        elif (enc is ParamsEncoding.Q8
+                and payload.block != self._q8_block):
+            raise ValueError(
+                f"chunk {idx} q8 block {payload.block} differs from the "
+                f"generation's {self._q8_block}")
 
     def add(self, msg: FLModelChunk) -> np.ndarray | None:
         """Verify one chunk and gather it into the model buffer; returns
@@ -267,8 +437,8 @@ class ChunkAssembler:
             # fans out into O(n) state (missing sets, range expansion)
             raise ValueError(
                 f"num-chunks {n} exceeds MAX_NACK_CHUNKS ({MAX_NACK_CHUNKS})")
-        part = self._payload(msg)
-        if zlib.crc32(memoryview(part).cast("B")) != msg.crc32:
+        enc, part, elems = self._normalize(msg)
+        if chunk_payload_crc(part) != msg.crc32:
             raise ValueError(f"chunk {idx}/{n}: CRC mismatch")
         key = (msg.model_id, msg.round, n)
         if key == self._completed_key:
@@ -282,14 +452,22 @@ class ChunkAssembler:
         if idx in self._received:
             self.duplicates += 1
             return None
+        self._check_encoding(idx, enc, part)
         final = idx == n - 1
-        if final and n > 1 and part.size == 0:
+        if final and n > 1 and elems == 0:
             raise ValueError("empty final chunk")
         if not final:
-            if part.size == 0:
+            if elems == 0:
                 raise ValueError("empty non-final chunk")
+            if enc is ParamsEncoding.Q8 and (part.padded
+                                             or elems % part.block):
+                # the scale-block alignment rule: only the generation's
+                # final chunk may end mid-block or carry padding
+                raise ValueError(
+                    f"non-final q8 chunk {idx} is not whole unpadded "
+                    f"scale blocks ({elems} elements, block {part.block})")
             if self._chunk_elems is None:
-                self._chunk_elems = part.size
+                self._chunk_elems = elems
                 try:
                     self._alloc(n)
                 except (ValueError, MemoryError):
@@ -299,31 +477,40 @@ class ChunkAssembler:
                     # retransmit can restart assembly from scratch
                     self._reset_generation(None)
                     raise
-            elif part.size != self._chunk_elems:
+            elif elems != self._chunk_elems:
                 raise ValueError(
-                    f"chunk {idx} carries {part.size} elements, generation "
+                    f"chunk {idx} carries {elems} elements, generation "
                     f"width is {self._chunk_elems}")
-            start = idx * self._chunk_elems
-            self._buf[start : start + part.size] = part
+            self._write(idx * self._chunk_elems, part)
         elif n == 1:
             # degenerate single-chunk generation: the payload is the model
-            self._final_size = part.size
-            self._buf = (part if not np.may_share_memory(part, msg.params)
-                         else part.copy())
+            self._final_size = elems
+            if enc is ParamsEncoding.Q8:
+                self._buf = part.to_f32()
+            elif enc is ParamsEncoding.TA_F16:
+                self._buf = part.astype("<f4")
+            else:
+                self._buf = (part
+                             if not np.may_share_memory(part, msg.params)
+                             else part.copy())
         elif self._chunk_elems is None:
             # final chunk before geometry is known: park one owned copy
-            self._pending_final = (
-                part if not np.may_share_memory(part, msg.params)
-                else part.copy())
-            self._final_size = part.size
+            # (wire decodes alias a receive ring's arena that is freed as
+            # soon as the message is consumed)
+            if enc is ParamsEncoding.Q8:
+                self._pending_final = part.copy_owned()
+            else:
+                self._pending_final = (
+                    part if not np.may_share_memory(part, msg.params)
+                    else part.copy())
+            self._final_size = elems
         else:
-            if not 1 <= part.size <= self._chunk_elems:
+            if not 1 <= elems <= self._chunk_elems:
                 raise ValueError(
-                    f"final chunk carries {part.size} elements, expected "
+                    f"final chunk carries {elems} elements, expected "
                     f"1..{self._chunk_elems}")
-            self._final_size = part.size
-            start = idx * self._chunk_elems
-            self._buf[start : start + part.size] = part
+            self._final_size = elems
+            self._write(idx * self._chunk_elems, part)
         self._received.add(idx)
         if len(self._received) < n:
             return None

@@ -55,10 +55,20 @@ class FLClient:
     round: int = 0
     model_id: uuid.UUID | None = None
     samples_seen: int = 0
+    # the flat f32 global this client installed (what a residual uplink
+    # diffs against — the *received* reference, i.e. the dequantized model
+    # under a lossy downlink encoding, exactly what the server folds onto)
+    last_global_flat: np.ndarray | None = field(default=None, repr=False)
     _train_idx: np.ndarray = field(init=False, repr=False, default=None)
     _val_idx: np.ndarray = field(init=False, repr=False, default=None)
     _assembler: ChunkAssembler = field(init=False, repr=False,
                                        default_factory=ChunkAssembler)
+    # error-feedback replay state: re-generating the same round's chunk
+    # stream (a restarted server re-collecting this client) must restart
+    # from the residual the round *began* with, or the re-upload would
+    # not be bit-identical to the original
+    _ef_round: int | None = field(init=False, repr=False, default=None)
+    _ef_prev: np.ndarray | None = field(init=False, repr=False, default=None)
 
     def __post_init__(self) -> None:
         # the client knows its own model size: bound chunk-reassembly
@@ -83,9 +93,11 @@ class FLClient:
         already the receiver-owned f32 gather buffer, so installing it
         costs only the per-leaf unflatten casts, not an extra whole-model
         copy."""
-        self.params = unflatten_params(np.asarray(msg.params,
-                                                  dtype=np.float32),
-                                       self.spec)
+        flat = np.asarray(msg.params, dtype=np.float32)
+        self.params = unflatten_params(flat, self.spec)
+        # keep the installed reference for residual uplinks (flat is the
+        # client-owned gather buffer / decoded vector; nothing recycles it)
+        self.last_global_flat = flat.reshape(-1)
         self.round = msg.round
         self.model_id = msg.model_id
         self.samples_seen = 0
@@ -121,23 +133,62 @@ class FLClient:
         ACK when fully assembled/installed, else NACK the missing set."""
         return self._assembler.feedback(model_id, round_, num_chunks)
 
-    def local_model_chunks(self, chunk_elems: int) -> list[FLModelChunk]:
+    def local_model_chunks(self, chunk_elems: int, *,
+                           encoding: ParamsEncoding | str =
+                           ParamsEncoding.TA_F32,
+                           residual: bool = False) -> list[FLModelChunk]:
         """The local model update as a chunked uplink stream — the same
-        ``FLModelChunk`` framing as the downlink, in reverse."""
+        ``FLModelChunk`` framing as the downlink, in reverse.
+
+        ``encoding`` picks the chunk wire format (f32 / f16 / q8-block);
+        lossy encodings run through this client's ``error_feedback`` so
+        the quantization error of round t is added back in round t+1.
+        ``residual`` transmits ``local − last_global`` (the reference
+        installed by ``handle_global_model``) instead of the raw weights —
+        the server folds the deltas against its own copy of that
+        reference.  Re-generating the stream for the *same* round (a
+        restarted server re-collecting this client) replays the round's
+        starting error-feedback residual, so the re-upload is
+        bit-identical to the original."""
         if self.params is None:
             raise RuntimeError("no local model to upload")
+        if isinstance(encoding, str):
+            encoding = ParamsEncoding(encoding)
         flat, _ = flatten_params(self.params)
+        if residual:
+            if self.last_global_flat is None:
+                raise RuntimeError("no installed global model to diff "
+                                   "against for a residual uplink")
+            if self.last_global_flat.size != flat.size:
+                raise ValueError("residual reference does not match the "
+                                 "local model size")
+            flat = flat - self.last_global_flat
+        ef = None
+        if encoding in (ParamsEncoding.TA_F16, ParamsEncoding.Q8):
+            ef = self.error_feedback
+            if self._ef_round == self.round:
+                ef.residual = self._ef_prev      # same-round replay
+            else:
+                self._ef_round = self.round
+                self._ef_prev = ef.residual
         return list(chunk_stream(self.model_id, self.round, flat,
-                                 chunk_elems))
+                                 chunk_elems, encoding=encoding,
+                                 error_feedback=ef))
 
-    def uplink_session(self, chunk_elems: int, receiver,
+    def uplink_session(self, chunk_elems: int, receiver, *,
+                       encoding: ParamsEncoding | str =
+                       ParamsEncoding.TA_F32,
+                       residual: bool = False,
                        **kwargs) -> UplinkSession:
         """This client's chunked upload as a schedulable state machine —
         what the shared-medium scheduler interleaves across clients
         (``fl.chunking.run_interleaved_uplinks``).  ``receiver`` is the
-        server-side reassembly endpoint for this client."""
+        server-side reassembly endpoint for this client; ``encoding`` and
+        ``residual`` select the chunk wire format (``local_model_chunks``)."""
         return UplinkSession(self.client_id,
-                             self.local_model_chunks(chunk_elems),
+                             self.local_model_chunks(chunk_elems,
+                                                     encoding=encoding,
+                                                     residual=residual),
                              receiver, **kwargs)
 
     def dataset_size(self) -> int:

@@ -154,6 +154,7 @@ def save_agg_snapshot(server, ctx: dict, *, finalized: bool = False) -> int:
         raise RuntimeError("no aggregation in flight to snapshot")
     n = server.cfg.num_clients
     state = agg.state()
+    residual = bool(ctx.get("residual", False))
     tree = {
         "hi": state["hi"], "lo": state["lo"],
         "folded": _bitmap(server.agg_clients, n),
@@ -162,6 +163,13 @@ def save_agg_snapshot(server, ctx: dict, *, finalized: bool = False) -> int:
         "dropped": _bitmap(ctx["dropped"], n),
         "stopped": _bitmap(ctx["stopped"], n),
     }
+    if residual:
+        # the residual-uplink reference is part of the aggregation state:
+        # a resumed round must finalize base + avg(deltas) against the
+        # *same* base the crashed process held, to the bit
+        if server._agg_base is None:
+            raise RuntimeError("residual round has no aggregation base")
+        tree["base"] = server._agg_base
     meta = {
         "model_id": str(server.model_id),
         "weight": float(state["weight"]),
@@ -169,9 +177,15 @@ def save_agg_snapshot(server, ctx: dict, *, finalized: bool = False) -> int:
         "finalized": bool(finalized),
         "mean_train_loss": float(ctx["mean_train_loss"]),
         "mean_val_loss": float(ctx["mean_val_loss"]),
+        # the chunk wire encoding and uplink mode this round runs with:
+        # a restarted server re-collects unfinished clients in the same
+        # encoding and knows whether a "base" leaf precedes hi/lo
+        "residual": residual,
         # dataset sizes of folded clients are already inside the weight;
         # unfinished clients' sizes are re-read from their uploads
     }
+    if ctx.get("chunk_encoding"):
+        meta["chunk_encoding"] = str(ctx["chunk_encoding"])
     path = server.ckpt.save_named(_snapshot_name(server.round), tree,
                                   step=server.round, round_=server.round,
                                   meta=meta)
@@ -186,6 +200,15 @@ def load_agg_snapshot(server) -> dict | None:
     """
     if server.ckpt is None:
         return None
+    # peek the header first: the snapshot's leaf layout depends on what
+    # was saved (a residual round carries a "base" leaf), and the leaf
+    # streams are matched to ``tree_like`` positionally — guessing wrong
+    # would misread every array.  Legacy snapshots carry no "residual"
+    # key and default to the old layout.
+    header = server.ckpt.peek_named(_snapshot_name(server.round))
+    if header is None:
+        return None
+    residual = bool(header.get("meta", {}).get("residual", False))
     n = server.cfg.num_clients
     elems = server.global_params.size
     tree_like = {
@@ -194,6 +217,8 @@ def load_agg_snapshot(server) -> dict | None:
         "reporters": np.zeros(n, np.int32), "dropped": np.zeros(n, np.int32),
         "stopped": np.zeros(n, np.int32),
     }
+    if residual:
+        tree_like["base"] = np.zeros(elems, np.float32)
     restored = server.ckpt.restore_named(_snapshot_name(server.round),
                                          tree_like)
     if restored is None:
@@ -207,7 +232,8 @@ def load_agg_snapshot(server) -> dict | None:
         weight=meta["weight"], n_updates=meta["n_updates"])
     folded = _ids(tree["folded"])
     server.restore_aggregation(agg, folded,
-                               finalized=bool(meta.get("finalized", False)))
+                               finalized=bool(meta.get("finalized", False)),
+                               residual_base=tree.get("base"))
     return {
         "selected": _ids(tree["selected"]),
         "reporters": _ids(tree["reporters"]),
@@ -217,6 +243,8 @@ def load_agg_snapshot(server) -> dict | None:
         "mean_train_loss": float(meta["mean_train_loss"]),
         "mean_val_loss": float(meta["mean_val_loss"]),
         "finalized": bool(meta.get("finalized", False)),
+        "chunk_encoding": meta.get("chunk_encoding"),
+        "residual": residual,
     }
 
 
@@ -275,6 +303,12 @@ class RoundEngine:
             "mean_val_loss": float(np.mean(
                 [p.metadata.val_loss for p in progress.values()]
             )) if progress else float("nan"),
+            # recorded into every aggregation snapshot: a restarted
+            # server re-collects in the same chunk encoding and folds
+            # against the same residual base
+            "chunk_encoding": (sim.chunk_encoding.value
+                               if sim.chunk_elems is not None else None),
+            "residual": bool(sim.residual_uplink),
         }
         return self._collect_and_finish(ready, recovered=False)
 
@@ -295,7 +329,8 @@ class RoundEngine:
             return None
         self.ctx = {k: state[k] for k in
                     ("selected", "reporters", "dropped", "stopped",
-                     "mean_train_loss", "mean_val_loss")}
+                     "mean_train_loss", "mean_val_loss",
+                     "chunk_encoding", "residual")}
         self.folded = list(state["folded"])
         sim.link.mark_round_start()
         # post-restart, unfinished clients are ready immediately: their
@@ -354,7 +389,9 @@ class RoundEngine:
         installed = False
         if reporters and quorum_pre:
             if not recovered:
-                server.begin_aggregation()
+                server.begin_aggregation(
+                    residual_base=(sim._residual_ref
+                                   if self.ctx.get("residual") else None))
                 # 0-fold snapshot: a crash before the first fold must
                 # still resume (the reporter set is what it preserves)
                 self._snapshot()
@@ -473,16 +510,25 @@ class RoundEngine:
             self._fold(cid, np.asarray(upd.params, dtype=np.float32),
                        sim.clients[cid].dataset_size())
 
+    def _chunk_mode(self) -> tuple[str | None, bool]:
+        """The chunk encoding + residual flag this round runs with — the
+        snapshot-recorded values when resuming, the simulation defaults
+        otherwise."""
+        enc = self.ctx.get("chunk_encoding") or self.sim.chunk_encoding
+        return enc, bool(self.ctx.get("residual",
+                                      self.sim.residual_uplink))
+
     def _collect_sequential(self, pending, ready, dropped) -> None:
         sim = self.sim
         deadline = self.policy.deadline_s
+        enc, residual = self._chunk_mode()
         for cid in sorted(pending, key=lambda c: ready.get(c, 0.0)):
             if not self._deadline_gate(cid, ready):
                 continue
             budget = None if deadline is None else deadline - self.clock
             flat = sim._collect_chunked(
                 cid, backoff=self.policy.backoff, faults=self.faults,
-                airtime_budget_s=budget)
+                airtime_budget_s=budget, encoding=enc, residual=residual)
             if flat is None:
                 if not self._missed_deadline(cid):
                     dropped.append(cid)   # upload never completed
@@ -496,6 +542,7 @@ class RoundEngine:
         sim, server = self.sim, self.sim.server
         backoff = self.policy.backoff
         deadline = self.policy.deadline_s
+        enc, residual = self._chunk_mode()
         sessions = []
         for cid in pending:
             crash = self.faults.client_crash(cid)
@@ -508,7 +555,7 @@ class RoundEngine:
             sessions.append(sim.clients[cid].uplink_session(
                 sim.chunk_elems, server.uplink_endpoint(cid),
                 uri="fl/model/upload", feedback_uri="fl/model/upload/fb",
-                **kwargs))
+                encoding=enc, residual=residual, **kwargs))
         if not sessions:
             sim.last_medium_report = None
             sim.last_uplink_reports = []

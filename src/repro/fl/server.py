@@ -72,6 +72,7 @@ class FLServer:
         self._gather_pool = GatherBufferPool()
         self._agg: RunningFedAvg | None = None
         self._agg_clients: list[int] = []
+        self._agg_base: np.ndarray | None = None   # residual-uplink reference
         self._agg_finalized = False
         self.history: list[RoundResult] = []
         self._rng = np.random.default_rng(cfg.seed)
@@ -120,13 +121,18 @@ class FLServer:
             model_id=self.model_id, round=self.round,
             params=self.global_params, continue_training=cont)
 
-    def global_update_chunks(self, chunk_elems: int) -> Iterator[FLModelChunk]:
+    def global_update_chunks(self, chunk_elems: int,
+                             encoding: ParamsEncoding | str =
+                             ParamsEncoding.TA_F32
+                             ) -> Iterator[FLModelChunk]:
         """Chunked global-model dissemination (streaming fast path).
 
         Yields ``FLModelChunk`` messages covering ``global_params`` in
-        ``chunk_elems``-element slices.  Each chunk's ``crc32`` covers its
-        little-endian f32 payload, so receivers verify integrity per chunk
-        instead of per model.  Chunks are numpy views of the live global
+        ``chunk_elems``-element slices, carried in the requested chunk
+        wire ``encoding`` (f32 / f16 / q8-block — the payload's CBOR tag
+        discriminates on the wire).  Each chunk's ``crc32`` covers its
+        *encoded* payload bytes, so receivers verify integrity per chunk
+        instead of per model.  Chunk payloads are views of the (encoded)
         vector; ``to_cbor`` copies each slice exactly once.  Note the
         selective-repeat sender (``run_selective_repeat``) materializes
         every encoded chunk for the whole transfer so repair windows can
@@ -134,7 +140,7 @@ class FLServer:
         one encoded copy, not one chunk.
         """
         return chunk_stream(self.model_id, self.round, self.global_params,
-                            chunk_elems)
+                            chunk_elems, encoding=encoding)
 
     # -- chunked uplink: per-client reassembly of local-model updates --------
 
@@ -167,9 +173,22 @@ class FLServer:
     # RunningFedAvg), a round aggregated in medium-arbitration completion
     # order is byte-identical to the same round aggregated client-by-client.
 
-    def begin_aggregation(self) -> None:
+    def begin_aggregation(self, *,
+                          residual_base: np.ndarray | None = None) -> None:
+        """Start a round's incremental aggregation.
+
+        ``residual_base`` switches the round to residual-uplink folding:
+        clients transmit ``local − last_global`` and the accumulator
+        averages those deltas; ``finalize_aggregation`` then installs
+        ``base + avg(deltas)``.  The base must be the server's copy of
+        the reference the clients diffed against — for a lossy downlink
+        encoding that is the *dequantized* global the cohort installed,
+        not the exact f32 vector (``FLSimulation`` supplies it)."""
         self._agg = RunningFedAvg(self.global_params.shape)
         self._agg_clients = []
+        self._agg_base = (None if residual_base is None
+                          else np.ascontiguousarray(residual_base,
+                                                    dtype=np.float32))
         self._agg_finalized = False
 
     def accumulate_update(self, client_id: int, params: np.ndarray,
@@ -202,12 +221,19 @@ class FLServer:
         self._gather_pool.release(params)
 
     def restore_aggregation(self, agg: RunningFedAvg, clients: list[int],
-                            *, finalized: bool = False) -> None:
+                            *, finalized: bool = False,
+                            residual_base: np.ndarray | None = None) -> None:
         """Install a snapshot-restored mid-round aggregation (fl.round):
         the accumulator continues exactly where the crashed process left
-        it, and ``already_folded`` answers from the restored client set."""
+        it, and ``already_folded`` answers from the restored client set.
+        ``residual_base`` restores the residual-uplink reference the
+        snapshot recorded, so a resumed residual round finalizes against
+        the *same* base the crashed process held — bit-identically."""
         self._agg = agg
         self._agg_clients = list(clients)
+        self._agg_base = (None if residual_base is None
+                          else np.ascontiguousarray(residual_base,
+                                                    dtype=np.float32))
         self._agg_finalized = finalized
 
     def abort_aggregation(self) -> None:
@@ -215,20 +241,32 @@ class FLServer:
         deadline-quorum miss path: the global model stays untouched."""
         self._agg = None
         self._agg_clients = []
+        self._agg_base = None
 
     def finalize_aggregation(self) -> np.ndarray | None:
         """Install the aggregated model; None when no update arrived (the
         round then keeps the previous global model, as before).  Refuses a
         double-finalize: a restored-from-snapshot round whose aggregate
-        was already installed must not apply it twice."""
+        was already installed must not apply it twice.
+
+        A residual-uplink round installs ``base + avg(deltas)`` (the sum
+        taken in f64 before the single f32 rounding — ``fedavg_delta``
+        semantics), a plain round installs ``avg(models)``."""
         if self._agg_finalized:
             raise RuntimeError(
                 f"round {self.round} aggregation is already finalized")
         agg, self._agg = self._agg, None
+        base, self._agg_base = self._agg_base, None
         if agg is None or agg.n_updates == 0:
             return None
         self._agg_finalized = True
-        self.global_params = agg.result()
+        avg = agg.result()
+        if base is not None:
+            self.global_params = (base.astype(np.float64)
+                                  + avg.astype(np.float64)
+                                  ).astype(np.float32)
+        else:
+            self.global_params = avg
         return self.global_params
 
     def observe_ready(self, update: FLLocalDataSetUpdate) -> bool:

@@ -15,7 +15,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core import cddl, fastpath
-from repro.core.messages import FLGlobalModelUpdate
+from repro.core.messages import (
+    CHUNK_ENCODINGS,
+    FLGlobalModelUpdate,
+    ParamsEncoding,
+)
+from repro.core.params_codec import Q8_BLOCK, quantize_q8
 from repro.fl.chunking import (
     ChunkTransferReport,
     run_selective_repeat,
@@ -58,7 +63,10 @@ class FLSimulation:
                  uplink_reorder_prob: float = 0.0,
                  uplink_turnaround_s: float = 0.05,
                  faults: FaultPlan | None = None,
-                 round_policy: RoundPolicy | None = None) -> None:
+                 round_policy: RoundPolicy | None = None,
+                 chunk_encoding: ParamsEncoding | str =
+                 ParamsEncoding.TA_F32,
+                 residual_uplink: bool = False) -> None:
         self.server = server
         self.clients = {c.client_id: c for c in clients}
         # faults: one seeded, replayable schedule of client/server crashes,
@@ -78,12 +86,38 @@ class FLSimulation:
         # chunk_elems: when set, model transfers in BOTH directions run as
         # selective-repeat FL_Model_Chunk streams of this many parameters
         # each (docs/chunk_protocol.md) instead of monolithic updates.
-        # The chunk wire format is always ta-float32le (the per-chunk CRC
-        # is defined over the f32 LE payload), so cfg.params_encoding then
-        # only governs the tiny progress updates; the downlink stream is
-        # inherently multicast (one transfer reaches all receivers), so
-        # multicast_global does not apply to it either.
+        # chunk_encoding picks the chunk wire format (f32 / f16 /
+        # q8-block; the payload's CBOR tag is the per-chunk discriminator
+        # and the CRC covers the encoded bytes), so cfg.params_encoding
+        # then only governs the tiny progress updates; the downlink
+        # stream is inherently multicast (one transfer reaches all
+        # receivers), so multicast_global does not apply to it either.
+        # residual_uplink: clients transmit local − last_global and the
+        # server folds the deltas against its copy of that reference.
         self.chunk_elems = chunk_elems
+        if isinstance(chunk_encoding, str):
+            chunk_encoding = ParamsEncoding(chunk_encoding)
+        if chunk_encoding not in CHUNK_ENCODINGS:
+            raise ValueError(
+                f"{chunk_encoding.value} is not a chunk encoding (choose "
+                f"from {[e.value for e in CHUNK_ENCODINGS]})")
+        if chunk_elems is None and (
+                chunk_encoding is not ParamsEncoding.TA_F32
+                or residual_uplink):
+            raise ValueError("chunk_encoding / residual_uplink require "
+                             "chunked transfers (set chunk_elems)")
+        if (chunk_encoding is ParamsEncoding.Q8 and chunk_elems is not None
+                and chunk_elems % Q8_BLOCK):
+            raise ValueError(
+                f"q8 chunk streams need chunk_elems to be a multiple of "
+                f"{Q8_BLOCK} (got {chunk_elems})")
+        self.chunk_encoding = chunk_encoding
+        self.residual_uplink = bool(residual_uplink)
+        # the server's copy of the reference the cohort installed this
+        # round (what residual folds resolve against); set per
+        # dissemination — under a lossy chunk encoding it is the
+        # dequantized model, not the exact f32 global
+        self._residual_ref: np.ndarray | None = None
         # uplink_mode: "sequential" uploads chunked local models client by
         # client over the CON unicast link (the legacy shape);
         # "interleaved" schedules every reporter's selective-repeat windows
@@ -142,7 +176,21 @@ class FLSimulation:
         """
         if not receivers:
             return []
-        chunks = list(self.server.global_update_chunks(self.chunk_elems))
+        chunks = list(self.server.global_update_chunks(
+            self.chunk_elems, encoding=self.chunk_encoding))
+        if self.residual_uplink:
+            # record the server's copy of the reference the cohort is
+            # about to install: under a lossy chunk encoding the clients
+            # hold the *dequantized* model, and residual folds must
+            # resolve against exactly that vector, not the f32 global
+            flat = self.server.global_params
+            if self.chunk_encoding is ParamsEncoding.TA_F16:
+                self._residual_ref = flat.astype("<f2").astype("<f4")
+            elif self.chunk_encoding is ParamsEncoding.Q8:
+                self._residual_ref = quantize_q8(
+                    flat, Q8_BLOCK)[2].astype("<f4", copy=False)
+            else:
+                self._residual_ref = flat
         report = run_selective_repeat(
             self.link, chunks, [self.clients[cid] for cid in receivers],
             uri="fl/model/chunk", feedback_uri="fl/model/chunk/fb",
@@ -153,7 +201,9 @@ class FLSimulation:
 
     def _collect_chunked(self, cid: int, *, backoff=None,
                          faults: FaultPlan | None = None,
-                         airtime_budget_s: float | None = None
+                         airtime_budget_s: float | None = None,
+                         encoding: ParamsEncoding | str | None = None,
+                         residual: bool | None = None
                          ) -> np.ndarray | None:
         """Chunked client → server local-model upload (reverse direction).
 
@@ -164,8 +214,14 @@ class FLSimulation:
         injects this client's crash point / feedback losses (fl.round
         threads the round policy through here).  Returns the reassembled
         flat f32 params, or None if the upload never completed (treated
-        upstream as a dropout or straggler)."""
-        chunks = self.clients[cid].local_model_chunks(self.chunk_elems)
+        upstream as a dropout or straggler).  ``encoding``/``residual``
+        override the simulation defaults (the round engine passes the
+        values its aggregation snapshot recorded, so a resumed round
+        re-collects in the encoding the crashed round was using)."""
+        chunks = self.clients[cid].local_model_chunks(
+            self.chunk_elems,
+            encoding=(self.chunk_encoding if encoding is None else encoding),
+            residual=(self.residual_uplink if residual is None else residual))
         sender_crash = None
         feedback_lost = None
         if faults is not None:

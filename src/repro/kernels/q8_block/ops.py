@@ -65,6 +65,25 @@ def q8_wire_item(flat: jax.Array):
                                int(flat.shape[0]), BLOCK)
 
 
+def q8_chunk_arrays(flat):
+    """Kernel quantization in chunk-wire layout: f32 vector ->
+    (block-padded int8 values, ``<f4`` scales, reconstruction error) as
+    host arrays — what ``fl.chunking.chunk_stream(quantizer="kernel")``
+    slices into scale-block-aligned ``Q8ChunkPayload``s.  The returned
+    arrays alias the kernel output where the host layout allows, so the
+    vectored encoder borrows the chunk slices without copying."""
+    flat_np = np.ascontiguousarray(flat, dtype=np.float32).reshape(-1)
+    n = flat_np.size
+    if n == 0:
+        return (np.empty(0, np.int8), np.empty(0, "<f4"),
+                np.empty(0, np.float32))
+    q, scales = _quantize_blocks(jnp.asarray(flat_np))
+    deq = dequantize_q8(q, scales, interpret=not _ON_TPU).reshape(-1)[:n]
+    q_np = np.ascontiguousarray(np.asarray(q).reshape(-1))
+    s_np = np.ascontiguousarray(np.asarray(scales)).astype("<f4", copy=False)
+    return q_np, s_np, flat_np - np.asarray(deq)
+
+
 def decompress_update(q: np.ndarray, scales: np.ndarray, n: int) -> np.ndarray:
     pad = (-n) % BLOCK
     qb = jnp.pad(jnp.asarray(q), (0, pad)).reshape(-1, BLOCK)

@@ -55,6 +55,17 @@ def params_to_f16_payload_into(flat: jax.Array, out) -> int:
     return n
 
 
+def params_to_f16_array(flat) -> np.ndarray:
+    """Kernel output as a host ``<f2`` array (aliases the kernel buffer on
+    little-endian hosts) — the chunk-wire layout
+    ``fl.chunking.chunk_stream(quantizer="kernel")`` slices into f16
+    chunk payloads."""
+    arr = np.ascontiguousarray(flat, dtype=np.float32).reshape(-1)
+    if arr.size == 0:
+        return np.empty(0, "<f2")
+    return _f16_bits(arr).view("<f2")
+
+
 def params_to_f16_payload(flat: jax.Array) -> bytes:
     """f32 vector -> owned little-endian half-float payload bytes."""
     return bytes(params_to_f16_view(flat))

@@ -1,0 +1,641 @@
+"""Pluggable chunk wire encodings: f16 / q8-block payloads end to end.
+
+Covers the compressed-chunk protocol (docs/chunk_protocol.md):
+
+  * oracle-vs-fastpath differential round-trips for f16 and q8 chunk
+    payloads — odd lengths, NaN/±inf, all-zero scale blocks, a partial
+    final block (seeded fuzz always; hypothesis when present);
+  * loss sweeps (0–40 %, uniform and bursty) asserting compressed-chunk
+    reassembly is byte-identical to the unlossy transfer;
+  * the three satellite regressions: explicit (not silent) narrowing in
+    ``chunk_stream``, q8 wire geometry bounded against the actual typed-
+    array lengths, and ``GatherBufferPool`` counting discarded returns;
+  * zero-copy: a compressed chunk's vectored wire form borrows the live
+    payload arrays (copies_per_roundtrip stays 0.0);
+  * FL end-to-end: ``FLSimulation(chunk_encoding=..., residual_uplink=...)``
+    through both uplink modes, and a server crash mid-round with q8
+    residual uplinks recovering bit-identically.
+"""
+import uuid
+import zlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cbor, cddl, fastpath
+from repro.core.cbor import Tag
+from repro.core.messages import FLModelChunk, ParamsEncoding
+from repro.core.params_codec import (
+    MAX_Q8_BLOCK,
+    Q8_BLOCK,
+    TAG_Q8_BLOCK,
+    ErrorFeedback,
+    Q8ChunkPayload,
+    flatten_params,
+    q8_chunk_payload,
+    quantize_q8,
+    validate_q8_geometry,
+)
+from repro.core.typed_arrays import TAG_F32LE, TAG_SINT8
+from repro.fl.chunking import (
+    AssemblerReceiver,
+    ChunkAssembler,
+    GatherBufferPool,
+    chunk_payload_crc,
+    chunk_stream,
+    run_selective_repeat,
+)
+from repro.transport.network import LossyLink
+
+MID = uuid.UUID(bytes=bytes(range(16)))
+
+
+def _params(n, seed=0):
+    return (np.random.default_rng(seed).standard_normal(n)
+            .astype(np.float32) * 3.0)
+
+
+def _chunks(params, *, encoding, elems=1024, ef=None):
+    return list(chunk_stream(MID, 1, params, elems, encoding=encoding,
+                             error_feedback=ef))
+
+
+def _assemble(chunks, order=None):
+    asm = ChunkAssembler()
+    out = None
+    for i in order if order is not None else range(len(chunks)):
+        flat = asm.add(chunks[i])
+        out = flat if flat is not None else out
+    return out
+
+
+def _lossless_reference(params, encoding, elems=1024):
+    """What the encoding reconstructs with no loss at all — the oracle
+    every lossy transfer must match byte for byte."""
+    return _assemble(_chunks(params, encoding=encoding, elems=elems))
+
+
+# -- differential round-trips (oracle codec vs fastpath) ----------------------
+
+
+EDGE_VECTORS = [
+    np.array([], dtype="<f4"),
+    np.array([1.5], dtype="<f4"),                        # single element
+    _params(321, seed=1),                                # odd length
+    _params(Q8_BLOCK * 3, seed=2),                       # exact blocks
+    _params(Q8_BLOCK * 3 + 17, seed=3),                  # partial final block
+    np.zeros(Q8_BLOCK + 5, dtype="<f4"),                 # all-zero scales
+    np.array([np.nan, np.inf, -np.inf, 0.0, -0.0, 1e-40,
+              65504.0, -65504.0, 1e9], dtype="<f4"),     # f16 specials
+    np.concatenate([np.zeros(Q8_BLOCK, "<f4"),           # zero block then not
+                    _params(7, seed=4)]),
+]
+
+
+def _roundtrip_all_codecs(chunk: FLModelChunk) -> list[FLModelChunk]:
+    """The same chunk through every wire path: contiguous fastpath bytes,
+    oracle bytes, oracle decode, and split segmented decode."""
+    wire = chunk.to_cbor()
+    assert chunk.to_cbor(fast=False) == wire            # oracle === fastpath
+    cddl.validate(fastpath.decode(wire), cddl.SCHEMAS["FL_Model_Chunk"])
+    via_fast = FLModelChunk.from_cbor(wire)
+    via_oracle = FLModelChunk._from_item(cbor.decode(wire))
+    step = max(1, len(wire) // 7)
+    segs = [wire[i:i + step] for i in range(0, len(wire), step)]
+    via_segments = FLModelChunk.from_cbor_segments(segs)
+    return [via_fast, via_oracle, via_segments]
+
+
+@pytest.mark.parametrize("vec", range(len(EDGE_VECTORS)))
+def test_f16_chunk_roundtrip_differential(vec):
+    params = EDGE_VECTORS[vec]
+    with np.errstate(over="ignore"):        # 1e9 -> inf is the point
+        half = params.astype("<f2")
+    chunk = FLModelChunk(MID, 1, 0, 1, chunk_payload_crc(half), half)
+    for got in _roundtrip_all_codecs(chunk):
+        assert got.encoding is ParamsEncoding.TA_F16
+        arr = np.asarray(got.params)
+        assert arr.dtype == np.dtype("<f2")
+        assert arr.tobytes() == half.tobytes()          # NaN-safe: bytes
+        assert got.crc32 == chunk_payload_crc(got.params)
+
+
+@pytest.mark.parametrize("vec", range(len(EDGE_VECTORS)))
+def test_q8_chunk_roundtrip_differential(vec):
+    params = np.nan_to_num(EDGE_VECTORS[vec], posinf=3e4, neginf=-3e4)
+    q, scales, _ = quantize_q8(params, Q8_BLOCK)
+    part = Q8ChunkPayload(Q8_BLOCK, params.size, q, scales)
+    chunk = FLModelChunk(MID, 1, 0, 1, chunk_payload_crc(part), part)
+    for got in _roundtrip_all_codecs(chunk):
+        assert got.encoding is ParamsEncoding.Q8
+        assert isinstance(got.params, Q8ChunkPayload)
+        assert got.params == part
+        assert got.crc32 == chunk_payload_crc(got.params)
+        assert got.params.to_f32().tobytes() == part.to_f32().tobytes()
+
+
+def test_q8_all_zero_scale_blocks_reconstruct_zero():
+    params = np.zeros(Q8_BLOCK * 2 + 9, dtype="<f4")
+    out = _lossless_reference(params, ParamsEncoding.Q8, elems=Q8_BLOCK)
+    assert out.tobytes() == params.tobytes()
+
+
+@pytest.mark.parametrize("encoding", [ParamsEncoding.TA_F16,
+                                      ParamsEncoding.Q8])
+@pytest.mark.parametrize("n", [256, 1024, 4096 + 256, 20_000 // 256 * 256])
+def test_chunked_reassembly_matches_whole_vector_encode(encoding, n):
+    """Chunking must not change the reconstruction: assembling the chunk
+    stream equals encoding+decoding the whole vector in one piece."""
+    params = _params(n, seed=n)
+    got = _lossless_reference(params, encoding)
+    if encoding is ParamsEncoding.TA_F16:
+        want = params.astype("<f2").astype("<f4")
+    else:
+        want = quantize_q8(params, Q8_BLOCK)[2]
+    assert got.dtype == np.dtype("<f4")
+    assert got.tobytes() == np.asarray(want, "<f4").tobytes()
+
+
+def test_seeded_fuzz_roundtrip_never_corrupts():
+    rng = np.random.default_rng(99)
+    for _ in range(25):
+        n = int(rng.integers(1, 4 * Q8_BLOCK))
+        params = (rng.standard_normal(n) * 10).astype(np.float32)
+        for enc in (ParamsEncoding.TA_F16, ParamsEncoding.Q8):
+            elems = Q8_BLOCK * int(rng.integers(1, 4))
+            got = _assemble(
+                _chunks(params, encoding=enc, elems=elems),
+                order=rng.permutation(
+                    len(_chunks(params, encoding=enc, elems=elems))))
+            want = _lossless_reference(params, enc, elems=elems)
+            assert got.tobytes() == want.tobytes()
+
+
+# -- loss sweep: compressed chunks byte-identical under repair ----------------
+
+
+def _uniform(rate, seed=42):
+    def drop(uri, window, index, receiver):
+        return bool(np.random.default_rng(
+            (seed, window, index, receiver)).random() < rate)
+    return drop
+
+
+def _bursty(rate, seed=42, burst=4):
+    def drop(uri, window, index, receiver):
+        return bool(np.random.default_rng(
+            (seed, window, index // burst, receiver)).random() < rate)
+    return drop
+
+
+SCHEDULES = {"uniform": _uniform, "bursty": _bursty}
+
+
+@pytest.mark.parametrize("encoding", [ParamsEncoding.TA_F16,
+                                      ParamsEncoding.Q8])
+@pytest.mark.parametrize("pattern", sorted(SCHEDULES))
+@pytest.mark.parametrize("rate", [0.0, 0.05, 0.20, 0.40])
+def test_lossy_compressed_transfer_byte_identical(encoding, pattern, rate):
+    params = _params(20_224, seed=5)        # 79 blocks: partial last chunk
+    chunks = _chunks(params, encoding=encoding)
+    want = _lossless_reference(params, encoding)
+    receivers = [AssemblerReceiver(), AssemblerReceiver()]
+    link = LossyLink(drop_prob=0.0, seed=1,
+                     chunk_drop=SCHEDULES[pattern](rate))
+    report = run_selective_repeat(
+        link, chunks, receivers, uri="fl/model/chunk",
+        feedback_uri="fl/model/chunk/fb", multicast=True)
+    assert report.completed == [0, 1]
+    for r in receivers:
+        assert r.assembled.tobytes() == want.tobytes()
+    if rate == 0.0:
+        assert report.windows == 1
+        assert report.retransmitted_payload_bytes == 0
+
+
+@pytest.mark.parametrize("encoding", [ParamsEncoding.TA_F16,
+                                      ParamsEncoding.Q8])
+def test_corrupted_compressed_chunk_detected_and_repaired(encoding):
+    """A bit-flip inside a compressed payload must fail the CRC-over-
+    encoded-bytes check and get repaired, never installed."""
+    params = _params(8192, seed=6)
+    chunks = _chunks(params, encoding=encoding)
+    want = _lossless_reference(params, encoding)
+    asm = ChunkAssembler()
+    bad = chunks[1].to_cbor()
+    bad = bad[:-3] + bytes([bad[-3] ^ 0x40]) + bad[-2:]
+    with pytest.raises(ValueError, match="CRC"):
+        asm.add(FLModelChunk.from_cbor(bad))
+    for c in chunks:                        # repair: the good copies land
+        out = asm.add(c)
+    assert out is not None and out.tobytes() == want.tobytes()
+
+
+# -- satellite 1: lossy narrowing is explicit ---------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["<f8", "<f2"])
+def test_chunk_stream_refuses_silent_f32_conversion(dtype):
+    params = np.ones(64, dtype=dtype)
+    with pytest.raises(ValueError, match="allow_narrowing"):
+        list(chunk_stream(MID, 1, params, 32))
+
+
+def test_chunk_stream_narrowing_opt_in():
+    params = np.linspace(-1, 1, 64).astype("<f8")
+    chunks = list(chunk_stream(MID, 1, params, 32, allow_narrowing=True))
+    got = _assemble(chunks)
+    assert got.tobytes() == params.astype("<f4").tobytes()
+
+
+def test_chunk_stream_f32_input_unaffected():
+    params = _params(64, seed=7)
+    assert len(list(chunk_stream(MID, 1, params, 32))) == 2
+
+
+# -- satellite 2: q8 wire geometry bounded against actual lengths -------------
+
+
+def _forged(block=Q8_BLOCK, count=None, q=None, scales=None):
+    """A wire-shaped q8 item (typed-array Tag members, as the decoder
+    sees them) with independently forgeable geometry claims."""
+    base = _params(Q8_BLOCK * 2, seed=8)
+    q0, s0, _ = quantize_q8(base, Q8_BLOCK)
+    return Tag(TAG_Q8_BLOCK, [
+        int(block), int(base.size if count is None else count),
+        Tag(TAG_SINT8, (q0 if q is None else q).tobytes()),
+        Tag(TAG_F32LE, (s0 if scales is None else scales).tobytes()),
+    ])
+
+
+def test_q8_wire_count_bounded_by_payload_length():
+    item = _forged(count=Q8_BLOCK * 64)     # claims far more than arrived
+    with pytest.raises(ValueError, match="count"):
+        q8_chunk_payload(item)
+
+
+def test_q8_wire_block_scales_consistency():
+    with pytest.raises(ValueError):
+        q8_chunk_payload(_forged(block=128))      # q/scales don't divide
+    with pytest.raises(ValueError, match="block"):
+        q8_chunk_payload(_forged(block=MAX_Q8_BLOCK * 2))
+    with pytest.raises(ValueError, match="block"):
+        q8_chunk_payload(_forged(block=0))
+
+
+def test_q8_wire_negative_and_bool_geometry_rejected():
+    with pytest.raises(ValueError):
+        validate_q8_geometry(Q8_BLOCK, -1, Q8_BLOCK, 1)
+    with pytest.raises(ValueError):
+        validate_q8_geometry(True, 1, 1, 1)
+
+
+def test_q8_wire_padding_beyond_one_block_rejected():
+    q = np.zeros(Q8_BLOCK * 3, np.int8)
+    scales = np.ones(3, "<f4")
+    with pytest.raises(ValueError):         # count says only 1 block used
+        q8_chunk_payload(_forged(q=q, scales=scales, count=5))
+
+
+def test_q8_wire_malformed_item_shapes_rejected():
+    good = _forged()
+    with pytest.raises(ValueError):
+        q8_chunk_payload(Tag(TAG_Q8_BLOCK, good.value[:3]))   # 3 members
+    with pytest.raises(TypeError):          # wrong tag — also a corrupt
+        q8_chunk_payload(Tag(TAG_Q8_BLOCK + 1, good.value))   # -chunk error
+
+
+def test_assembler_rejects_nonfinal_partial_q8_chunk():
+    """The alignment rule on the receive side: a non-final chunk whose q8
+    payload is padded (or not whole blocks of the stream's chunk size)
+    cannot be part of a valid generation."""
+    params = _params(Q8_BLOCK * 4, seed=9)
+    q, scales, _ = quantize_q8(params[:Q8_BLOCK + 7], Q8_BLOCK)
+    part = Q8ChunkPayload(Q8_BLOCK, Q8_BLOCK + 7, q, scales)
+    msg = FLModelChunk(MID, 1, 0, 3, chunk_payload_crc(part), part)
+    with pytest.raises(ValueError, match="whole unpadded"):
+        ChunkAssembler().add(msg)
+
+
+def test_assembler_rejects_mixed_encoding_generation():
+    params = _params(2048, seed=10)
+    f32 = _chunks(params, encoding=ParamsEncoding.TA_F32)
+    q8 = _chunks(params, encoding=ParamsEncoding.Q8)
+    asm = ChunkAssembler()
+    asm.add(f32[0])
+    with pytest.raises(ValueError, match="encoding"):
+        asm.add(q8[1])
+
+
+# -- satellite 3: GatherBufferPool counts discarded returns -------------------
+
+
+def test_pool_counts_discarded_returns():
+    pool = GatherBufferPool()
+    pool.release(np.zeros(64, np.float64))          # wrong dtype
+    pool.release(np.zeros((8, 8), np.float32))      # wrong layout
+    pool.release(np.frombuffer(bytes(256), "<f4"))  # borrowed, read-only
+    assert pool.discards == 3
+    assert len(pool._free) == 0
+    pool.release(np.zeros(64, np.float32))          # a good one
+    assert pool.discards == 3 and len(pool._free) == 1
+
+
+def test_pool_counts_capacity_drops_separately():
+    pool = GatherBufferPool(max_buffers=1)
+    pool.release(np.zeros(64, np.float32))
+    pool.release(np.zeros(64, np.float32))          # pool full
+    assert pool.capacity_drops == 1 and pool.discards == 0
+
+
+# -- zero-copy: vectored wire borrows compressed payloads ---------------------
+
+
+def test_q8_chunk_segments_borrow_live_arrays():
+    # 512 blocks: both the value stream and the scales array clear the
+    # encoder's BORROW_MIN, so both must arrive as borrowed views
+    params = _params(Q8_BLOCK * 512, seed=11)
+    chunk = _chunks(params, encoding=ParamsEncoding.Q8,
+                    elems=Q8_BLOCK * 512)[0]
+    segs = chunk.to_cbor_segments()
+    part = chunk.params
+    assert any(np.shares_memory(np.frombuffer(s, np.int8), part.q)
+               for s in segs if len(s) == part.q.nbytes)
+    assert any(np.shares_memory(np.frombuffer(s, np.uint8), part.scales)
+               for s in segs if len(s) == part.scales.nbytes)
+    # and the vectored bytes are exactly the contiguous wire form
+    assert fastpath.ScatterPayload(segs).tobytes() == chunk.to_cbor()
+
+
+def test_f16_chunk_segments_borrow_live_array():
+    params = _params(1024, seed=12)
+    chunk = _chunks(params, encoding=ParamsEncoding.TA_F16, elems=1024)[0]
+    segs = chunk.to_cbor_segments()
+    arr = np.asarray(chunk.params)
+    assert any(np.shares_memory(np.frombuffer(s, np.uint8), arr)
+               for s in segs if len(s) == arr.nbytes)
+    assert fastpath.ScatterPayload(segs).tobytes() == chunk.to_cbor()
+
+
+@pytest.mark.parametrize("encoding", [ParamsEncoding.TA_F16,
+                                      ParamsEncoding.Q8])
+def test_compressed_chunk_wire_copies_stay_zero(encoding):
+    """copies_per_roundtrip == 0.0: building every chunk's vectored wire
+    form allocates only headers, never a payload-sized buffer."""
+    import tracemalloc
+    params = _params(200_000, seed=13)
+    chunks = _chunks(params, encoding=encoding, elems=50_176)
+    for c in chunks:
+        c.to_cbor_segments()                # warmup
+    tracemalloc.start()
+    for c in chunks:
+        c.to_cbor_segments()
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    payload = sum(c.payload_elems for c in chunks) * 4
+    assert round(peak / payload, 2) == 0.0
+
+
+# -- error feedback ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("encoding", [ParamsEncoding.TA_F16,
+                                      ParamsEncoding.Q8])
+def test_error_feedback_carries_residual_across_rounds(encoding):
+    params = _params(2048, seed=14)
+    ef = ErrorFeedback()
+    _chunks(params, encoding=encoding, ef=ef)
+    assert ef.residual is not None
+    first = ef.residual.copy()
+    # round 2 pre-compensates with round 1's residual
+    chunks = _chunks(params, encoding=encoding, ef=ef)
+    got = _assemble(chunks)
+    want = (_lossless_reference(params + first, encoding)
+            if encoding is ParamsEncoding.Q8
+            else (params + first).astype("<f2").astype("<f4"))
+    assert got.tobytes() == np.asarray(want, "<f4").tobytes()
+
+
+# -- wire-size acceptance ------------------------------------------------------
+
+
+def _wire_bytes(params, encoding):
+    return sum(len(fastpath.ScatterPayload(c.to_cbor_segments()))
+               for c in _chunks(params, encoding=encoding, elems=4096))
+
+
+def test_q8_wire_bytes_at_most_030x_f32():
+    params = _params(44_426, seed=15)       # LeNet-5 size
+    f32 = _wire_bytes(params, ParamsEncoding.TA_F32)
+    q8 = _wire_bytes(params, ParamsEncoding.Q8)
+    f16 = _wire_bytes(params, ParamsEncoding.TA_F16)
+    assert q8 <= 0.30 * f32
+    assert f16 <= 0.55 * f32
+
+
+# -- FL end-to-end -------------------------------------------------------------
+
+
+N = 4
+CHUNK = 8192
+SEED = 8
+
+
+def _sim(tmp_path=None, *, rounds=2, seed=SEED, chunk_elems=CHUNK,
+         uplink_mode="sequential", drop_prob=0.0, reorder=0.0, faults=None,
+         encoding=ParamsEncoding.TA_F32, residual=False):
+    from repro.data import partition_iid, synthetic_mnist
+    from repro.fl import (FLClient, FLServer, FLSimulation,
+                          OrchestrationConfig)
+    from repro.models import lenet5
+    from repro.train.optim import SGDConfig
+
+    params = lenet5.init_params(jax.random.PRNGKey(seed))
+    flat, spec = flatten_params(params)
+    data = synthetic_mnist(N * 200, seed=seed)
+    shards = partition_iid(data, N, seed=seed)
+    clients = [
+        FLClient(client_id=i, data=shards[i], loss_fn=lenet5.loss_fn,
+                 spec=spec, local_epochs=1, batch_size=32,
+                 sgd=SGDConfig(lr=0.05), seed=seed)
+        for i in range(N)
+    ]
+    cfg = OrchestrationConfig(
+        num_clients=N, clients_per_round=N, min_fraction=0.5,
+        num_rounds=rounds, min_local_samples=32, seed=seed,
+        checkpoint_dir=str(tmp_path) if tmp_path else None)
+    server = FLServer(cfg, flat)
+    return FLSimulation(server, clients, drop_prob=drop_prob, seed=seed,
+                        chunk_elems=chunk_elems, uplink_mode=uplink_mode,
+                        uplink_reorder_prob=reorder, faults=faults,
+                        chunk_encoding=encoding, residual_uplink=residual)
+
+
+def _restart(sim, *, faults=None):
+    from repro.fl import FLServer, FLSimulation
+    old = sim.server
+    server = FLServer(old.cfg, np.zeros_like(old.global_params))
+    assert server.try_restore(), "no round checkpoint to restart from"
+    return FLSimulation(server, list(sim.clients.values()),
+                        drop_prob=sim.link.drop_prob, seed=sim._seed,
+                        chunk_elems=sim.chunk_elems,
+                        uplink_mode=sim.uplink_mode,
+                        uplink_reorder_prob=sim.uplink_reorder_prob,
+                        faults=faults, chunk_encoding=sim.chunk_encoding,
+                        residual_uplink=sim.residual_uplink)
+
+
+@pytest.mark.parametrize("uplink", ["sequential", "interleaved"])
+@pytest.mark.parametrize("encoding,residual", [
+    ("ta-float16le", False),
+    ("q8-block", False),
+    ("q8-block", True),
+    ("ta-float32le", True),
+])
+def test_simulation_compressed_uplinks_converge(uplink, encoding, residual):
+    ref = _sim(uplink_mode=uplink)          # f32 raw: the exact baseline
+    ref.run_round()
+    sim = _sim(uplink_mode=uplink, encoding=encoding, residual=residual)
+    r = sim.run_round()
+    assert r.quorum_met and sorted(r.reporters) == [0, 1, 2, 3]
+    a = sim.server.global_params
+    b = ref.server.global_params
+    if encoding == "ta-float32le":
+        # residual-only transform: exact f32 deltas fold back losslessly
+        # up to one f64 rounding of the fold order
+        np.testing.assert_allclose(a, b, rtol=0, atol=1e-6)
+    else:
+        # lossy encodings track the baseline within quantization error
+        err = np.abs(a - b).max()
+        scale = np.abs(b).max()
+        bound = 0.02 * scale if encoding == "q8-block" else 0.005 * scale
+        assert 0 < err < bound
+    if encoding != "ta-float32le":
+        # compression shows up on the wire: the uplink chunk traffic
+        # shrinks vs the f32 baseline
+        up = "FL_Model_Chunk_Uplink"
+        assert sim.accounting.by_type[up].payload_bytes < \
+            ref.accounting.by_type[up].payload_bytes
+
+
+def test_simulation_validates_encoding_config():
+    from repro.fl import FLSimulation
+    with pytest.raises(ValueError, match="chunked"):
+        _sim(chunk_elems=None, encoding="q8-block")
+    with pytest.raises(ValueError, match="chunked"):
+        _sim(chunk_elems=None, residual=True)
+    with pytest.raises(ValueError, match="multiple"):
+        _sim(chunk_elems=1000, encoding="q8-block")   # not % Q8_BLOCK
+    with pytest.raises(ValueError):
+        _sim(encoding="no-such-encoding")
+    assert FLSimulation is not None
+
+
+@pytest.mark.parametrize("uplink,drop,reorder,crash_after", [
+    ("sequential", 0.0, 0.0, 1),
+    ("sequential", 0.15, 0.0, 2),
+    ("interleaved", 0.15, 0.3, 1),
+])
+def test_server_crash_recovery_q8_residual_bit_identical(
+        tmp_path, uplink, drop, reorder, crash_after):
+    """The tentpole acceptance: a server crash mid-round with compressed
+    residual uplinks in flight recovers bit-identically — the snapshot
+    records the encoding + the residual base, and clients replay the
+    round's starting error-feedback residual on re-collection."""
+    from repro.fl import FaultPlan, ServerCrash, ServerCrashed
+
+    kw = dict(uplink_mode=uplink, drop_prob=drop, reorder=reorder,
+              encoding="q8-block", residual=True)
+    ref = _sim(tmp_path / "ref", **kw)
+    ref.run_round()
+    ref.run_round()
+
+    plan = FaultPlan(server_crashes=(
+        ServerCrash(after_folds=crash_after, at_round=1),))
+    sim = _sim(tmp_path / "crash", faults=plan, **kw)
+    sim.run_round()
+    with pytest.raises(ServerCrashed):
+        sim.run_round()
+    snaps = list((tmp_path / "crash").glob("agg_*.cbor"))
+    assert len(snaps) == 1
+    # the snapshot header records the wire encoding + residual mode
+    header = sim.server.ckpt.peek_named(snaps[0].stem)
+    assert header["meta"]["chunk_encoding"] == "q8-block"
+    assert header["meta"]["residual"] is True
+
+    sim2 = _restart(sim, faults=plan)
+    res = sim2.resume_round()
+    assert res is not None and res.recovered and res.quorum_met
+    assert sorted(res.reporters) == [0, 1, 2, 3]
+    assert sim2.server.global_params.tobytes() == \
+        ref.server.global_params.tobytes()
+    assert not list((tmp_path / "crash").glob("agg_*.cbor"))
+
+
+def test_snapshot_without_residual_has_legacy_layout(tmp_path):
+    """f32 non-residual rounds write snapshots a pre-encoding server can
+    still read (no base leaf, no surprise meta)."""
+    from repro.fl import FaultPlan, ServerCrash, ServerCrashed
+
+    plan = FaultPlan(server_crashes=(
+        ServerCrash(after_folds=1, at_round=1),))
+    sim = _sim(tmp_path, faults=plan)
+    sim.run_round()
+    with pytest.raises(ServerCrashed):
+        sim.run_round()
+    snap = list(tmp_path.glob("agg_*.cbor"))[0]
+    header = sim.server.ckpt.peek_named(snap.stem)
+    assert header["meta"].get("residual", False) is False
+    sim2 = _restart(sim, faults=plan)
+    res = sim2.resume_round()
+    assert res is not None and res.quorum_met
+
+
+# -- hypothesis property tests (optional dev dep) -----------------------------
+
+
+try:
+    import hypothesis
+except ImportError:                          # pragma: no cover
+    hypothesis = None
+
+if hypothesis is not None:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    finite_f32 = st.floats(min_value=-1e4, max_value=1e4, width=32)
+    f16able = st.one_of(finite_f32, st.just(float("nan")),
+                        st.just(float("inf")), st.just(float("-inf")))
+
+    @given(st.lists(f16able, min_size=1, max_size=700),
+           st.sampled_from([64, 128, 512]))
+    @settings(max_examples=25, deadline=None)
+    def test_hyp_f16_chunk_roundtrip(values, elems):
+        params = np.array(values, dtype="<f4")
+        half = params.astype("<f2")
+        got = _assemble(_chunks(params.astype("<f2").astype("<f4"),
+                                encoding=ParamsEncoding.TA_F16,
+                                elems=elems))
+        assert got.tobytes() == half.astype("<f4").tobytes()
+
+    @given(st.lists(finite_f32, min_size=1, max_size=1600),
+           st.integers(min_value=1, max_value=3))
+    @settings(max_examples=25, deadline=None)
+    def test_hyp_q8_chunk_roundtrip(values, blocks_per_chunk):
+        params = np.array(values, dtype="<f4")
+        elems = Q8_BLOCK * blocks_per_chunk
+        got = _assemble(_chunks(params, encoding=ParamsEncoding.Q8,
+                                elems=elems))
+        want = quantize_q8(params, Q8_BLOCK)[2]
+        assert got.tobytes() == np.asarray(want, "<f4").tobytes()
+
+    @given(st.lists(finite_f32, min_size=1, max_size=900))
+    @settings(max_examples=25, deadline=None)
+    def test_hyp_q8_payload_wire_roundtrip(values):
+        params = np.array(values, dtype="<f4")
+        q, scales, _ = quantize_q8(params, Q8_BLOCK)
+        part = Q8ChunkPayload(Q8_BLOCK, params.size, q, scales)
+        chunk = FLModelChunk(MID, 1, 0, 1, chunk_payload_crc(part), part)
+        for got in _roundtrip_all_codecs(chunk):
+            assert got.params == part
