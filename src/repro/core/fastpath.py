@@ -797,7 +797,11 @@ def _decode_item(src, *, copy: bool = False, _first: int | None = None) -> Any:
                 continue
             raw = src.view(arg)
             if major == MT_TSTR:
-                value = str(raw, "utf-8")
+                try:
+                    value = str(raw, "utf-8")
+                except UnicodeDecodeError as exc:
+                    raise CBORDecodeError(
+                        f"invalid UTF-8 in text string: {exc}") from None
             else:
                 value = bytes(raw) if copy and isinstance(raw, memoryview) \
                     else raw

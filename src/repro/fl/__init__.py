@@ -14,6 +14,8 @@ from repro.fl.faults import (
     FaultPlan,
     FeedbackLoss,
     FrameFault,
+    LateJoin,
+    Leave,
     ServerCrash,
     ServerCrashed,
 )
@@ -27,4 +29,5 @@ __all__ = ["fedavg", "RunningFedAvg", "FLClient", "FLServer",
            "ChunkTransferReport", "chunk_stream", "run_selective_repeat",
            "FaultPlan", "ChunkLoss", "Blackout", "FrameFault",
            "FeedbackLoss", "ClientCrash", "ServerCrash", "ServerCrashed",
+           "LateJoin", "Leave",
            "BackoffPolicy", "RoundPolicy", "RoundEngine"]

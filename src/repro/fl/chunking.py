@@ -55,7 +55,11 @@ from repro.core.params_codec import (
 )
 from repro.transport.coap import BlockReceiveRing, Code, TransferStats
 from repro.transport.medium import MediumReport, SharedMedium
-from repro.transport.network import LossyLink, iter_tagged_frames
+from repro.transport.network import (
+    LossyLink,
+    iter_downlink_frames,
+    iter_tagged_frames,
+)
 
 # Window budget: the initial full-stream window plus up to this many repair
 # windows before incomplete receivers are treated as dropouts for the round.
@@ -525,6 +529,55 @@ class ChunkAssembler:
         ck = self._completed_key
         return ck is not None and ck[0] == model_id and ck[1] == round_
 
+    def export_state(self) -> dict | None:
+        """Snapshot the in-progress generation for a durable client
+        checkpoint (crash-resume): generation key + geometry, the received
+        bitmap, and the gather buffer itself.  Returns None when there is
+        nothing durable to keep — no generation open, or only a parked
+        final chunk (no geometry yet, so a resumed client simply NACKs the
+        full stream; persisting one short chunk buys nothing)."""
+        if (self._key is None or self._buf is None
+                or self._chunk_elems is None):
+            return None
+        mid, rnd, n = self._key
+        return {
+            "model_id": str(mid),
+            "round": int(rnd),
+            "num_chunks": int(n),
+            "chunk_elems": int(self._chunk_elems),
+            "final_size": (-1 if self._final_size is None
+                           else int(self._final_size)),
+            "encoding": ("" if self._encoding is None
+                         else self._encoding.value),
+            "q8_block": int(self._q8_block or 0),
+            "received": np.fromiter(sorted(self._received), dtype="<i4",
+                                    count=len(self._received)),
+            "buf": self._buf,
+        }
+
+    def restore_state(self, st: dict) -> None:
+        """Reinstall an ``export_state`` snapshot after a crash.  The
+        restored assembler answers ``missing``/``feedback`` exactly as the
+        pre-crash one did, so the sender's repair window retransmits only
+        the chunks the checkpoint does not hold."""
+        key = (uuid.UUID(str(st["model_id"])), int(st["round"]),
+               int(st["num_chunks"]))
+        self._reset_generation(key)
+        self._chunk_elems = int(st["chunk_elems"])
+        fs = int(st["final_size"])
+        self._final_size = None if fs < 0 else fs
+        enc = str(st["encoding"])
+        self._encoding = ParamsEncoding(enc) if enc else None
+        qb = int(st["q8_block"])
+        self._q8_block = qb or None
+        self._received = {int(i)
+                          for i in np.asarray(st["received"]).reshape(-1)}
+        buf = np.ascontiguousarray(np.asarray(st["buf"]).reshape(-1),
+                                   dtype="<f4")
+        if not buf.flags.writeable:
+            buf = buf.copy()    # checkpoint restores may hand back views
+        self._buf = buf
+
     def missing(self, model_id: uuid.UUID, round_: int,
                 num_chunks: int) -> list[int]:
         """Chunk indices of the given generation not yet assembled."""
@@ -593,6 +646,7 @@ def run_selective_repeat(
     sender_crash: tuple[int, int] | None = None,
     feedback_lost: Callable[[int, int], bool] | None = None,
     client_ids: Sequence[int] | None = None,
+    poll_first: bool = False,
 ) -> ChunkTransferReport:
     """Drive one selective-repeat transfer of ``chunks`` to ``receivers``.
 
@@ -627,7 +681,13 @@ def run_selective_repeat(
       the link's ``chunk_drop`` schedule (a ``FaultPlan``'s chunk loss) is
       keyed by client identity, not slot position.  Without it the uplink's
       single slot would alias every client onto id 0 and a downlink
-      cohort's ids would shift with selection order.
+      cohort's ids would shift with selection order;
+    * ``poll_first`` — crash-resume: window 0 sends *nothing* and only
+      collects feedback, so a sender resuming against a receiver that
+      already holds part of the stream retransmits exactly the NACK'd
+      chunks.  ``initial_payload_bytes`` still prices the full stream —
+      ``retransmitted_payload_bytes`` goes negative by exactly the bytes
+      the resume saved, which is what the strictly-fewer-bytes tests pin.
     """
     if not chunks:
         raise ValueError("empty chunk stream")
@@ -647,7 +707,7 @@ def run_selective_repeat(
 
     complete: set[int] = set()   # receivers that assembled (ground truth)
     acked: set[int] = set()      # receivers whose ACK reached the sender
-    to_send = list(range(n))
+    to_send = [] if poll_first else list(range(n))
     window = 0
     if backoff is not None:
         max_windows = backoff.max_windows
@@ -721,6 +781,226 @@ def run_selective_repeat(
     return report
 
 
+def run_medium_downlink(
+    medium: SharedMedium,
+    chunks: Sequence[FLModelChunk],
+    receivers: Sequence,
+    *,
+    uri: str,
+    feedback_uri: str,
+    code: Code = Code.POST,
+    max_windows: int = 1 + MAX_REPAIR_WINDOWS,
+    validate: bool = True,
+    record: Callable[[str, TransferStats], None] | None = None,
+    backoff=None,
+    client_ids: Sequence[int] | None = None,
+    faults=None,
+    checkpoint: Callable[[int], None] | None = None,
+    on_crash: Callable[[int], None] | None = None,
+    resume_client: Callable[[int], bool] | None = None,
+) -> ChunkTransferReport:
+    """Multicast dissemination of ``chunks`` over one ``SharedMedium`` —
+    the downlink half of the whole-round fault domain.
+
+    ``run_selective_repeat`` models the downlink on a per-chunk lossy
+    link; this is the same window/NACK protocol at *frame* granularity on
+    the shared medium: every frame is transmitted once (one airtime
+    charge, ``transmit_downlink``), each listening client gets its own
+    delivery verdict, and each client reassembles through per-chunk
+    reorder-aware rings that persist across repair windows — so the
+    downlink shares the medium's clock, RNG, blackouts, and frame faults
+    with the uplink that follows it.
+
+    Client crash-resume hooks (the client-side mirror of the server's
+    ``save_agg_snapshot`` recovery):
+
+    * ``checkpoint(client_id)`` fires after every *newly verified* chunk a
+      client gathers — persist-per-chunk, the way flash-backed firmware
+      downloads journal progress — so a crash loses at most in-flight
+      frames, never verified chunks;
+    * a ``FaultPlan`` download-phase ``ClientCrash`` kills the client
+      after ``at_chunk`` verified chunks of window ``at_window``
+      (``on_crash(client_id)`` wipes its volatile state);
+    * a crash with ``resume=True`` restarts the client at the next window
+      boundary via ``resume_client(client_id)`` — restore returns True
+      when a durable checkpoint existed, and the client's next NACK then
+      requests exactly the chunks the checkpoint does not hold.  A False
+      restore (no checkpoint dir) degrades to a dropout for the round.
+
+    ``report.completed`` lists the receiver *slots* that finished
+    reassembly; the caller maps slots back to client ids.
+    """
+    if not chunks:
+        raise ValueError("empty chunk stream")
+    mid, rnd, n = chunks[0].model_id, chunks[0].round, chunks[0].num_chunks
+    wires = [ScatterPayload(c.to_cbor_segments()) for c in chunks]
+    if validate:
+        for w in wires:
+            _validate(w, "FL_Model_Chunk")
+    report = ChunkTransferReport(
+        num_chunks=n, initial_payload_bytes=sum(len(w) for w in wires))
+    n_r = len(receivers)
+    if client_ids is None:
+        client_ids = list(range(n_r))
+    busy0 = medium.busy_s
+
+    rings: list[dict[int, BlockReceiveRing]] = [{} for _ in range(n_r)]
+    delivered: list[set[int]] = [set() for _ in range(n_r)]
+    crashed = [False] * n_r
+    resumed = [False] * n_r
+    acked: set[int] = set()      # slots whose ACK reached the server
+    complete: set[int] = set()   # slots that assembled (ground truth)
+    crashes: dict[int, object] = {}
+    if faults is not None:
+        for ridx, cid in enumerate(client_ids):
+            cr = faults.client_crash(cid)
+            if cr is not None and cr.phase == "download":
+                crashes[ridx] = cr
+
+    def _crash(ridx: int) -> None:
+        crashed[ridx] = True
+        rings[ridx].clear()      # volatile reassembly state dies with it
+        delivered[ridx] = set()
+        complete.discard(ridx)
+        acked.discard(ridx)
+        if on_crash is not None:
+            on_crash(client_ids[ridx])
+
+    def _pending() -> bool:
+        # anything left to serve: a live slot not yet acked (crashed slots
+        # without a successful resume are dropouts, not blockers)
+        return any(not crashed[r] and r not in acked for r in range(n_r))
+
+    to_send = list(range(n))
+    window = 0
+    if backoff is not None:
+        max_windows = backoff.max_windows
+    while window < max_windows and _pending():
+        if window > 0 and backoff is not None:
+            medium.advance_to(medium.clock + backoff.delay(
+                window, turnaround_s=medium.turnaround_s,
+                loss_estimate=medium.loss_estimate()))
+        # a crash whose coordinate window never delivered enough chunks
+        # (loss starved it) fires at the next window start instead —
+        # mirrors UplinkSession.crash_due
+        for ridx, cr in crashes.items():
+            if not crashed[ridx] and not resumed[ridx] \
+                    and window > cr.at_window:
+                _crash(ridx)
+        window_recv = [0] * n_r      # verified chunks this window (crash coord)
+        wstats = TransferStats(
+            messages=len(to_send),
+            payload_bytes=sum(len(wires[i]) for i in to_send))
+        report.chunk_sends += len(to_send)
+        report.payload_bytes += wstats.payload_bytes
+        for i in to_send:
+            # listeners: live slots still missing this chunk, fixed for
+            # the chunk's whole frame sequence (deterministic RNG order)
+            slots = [r for r in range(n_r)
+                     if not crashed[r] and r not in acked
+                     and i not in delivered[r]]
+            if not slots:
+                continue
+            drops = None
+            if medium.chunk_drop is not None:
+                drops = {client_ids[r]: bool(medium.chunk_drop(
+                    uri, window, i, client_ids[r])) for r in slots}
+            for frame in iter_downlink_frames(
+                    [wires[i]], uri=uri, window=window, indices=[i],
+                    code=code):
+                out = medium.transmit_downlink(
+                    frame, wstats, receivers=[client_ids[r] for r in slots],
+                    drops=drops)
+                for r in slots:
+                    if crashed[r]:
+                        continue     # died earlier in this frame loop
+                    fr = out.get(client_ids[r])
+                    if fr is None:
+                        continue
+                    ring = rings[r].get(i)
+                    if ring is None:
+                        ring = rings[r][i] = BlockReceiveRing()
+                    ring.feed(fr.msg)
+                    if not ring.complete:
+                        continue
+                    try:
+                        msg = FLModelChunk.from_cbor_segments(
+                            ring.segments())
+                    except _CORRUPT_ERRORS:
+                        del rings[r][i]
+                        report.corrupt_chunks += 1
+                        continue
+                    del rings[r][i]
+                    try:
+                        done = receivers[r].receive_chunk(msg)
+                    except _CORRUPT_ERRORS:
+                        report.corrupt_chunks += 1
+                        continue
+                    delivered[r].add(i)
+                    window_recv[r] += 1
+                    if done:
+                        complete.add(r)
+                    if checkpoint is not None:
+                        checkpoint(client_ids[r])   # persist-per-chunk
+                    cr = crashes.get(r)
+                    if (cr is not None and window == cr.at_window
+                            and window_recv[r] >= max(1, cr.at_chunk)):
+                        _crash(r)
+        if record is not None and (wstats.frames or wstats.messages):
+            record("FL_Model_Chunk", wstats)
+        medium.stats.messages += wstats.messages
+        medium.stats.payload_bytes += wstats.payload_bytes
+        report.stats.add(wstats)
+        # window boundary: resume crashed clients *before* the feedback
+        # round-trip, so a restored client's NACK reflects its checkpoint
+        for ridx, cr in crashes.items():
+            if (crashed[ridx] and not resumed[ridx]
+                    and getattr(cr, "resume", False)
+                    and resume_client is not None):
+                if resume_client(client_ids[ridx]):
+                    crashed[ridx] = False
+                resumed[ridx] = True    # one attempt; no checkpoint = dropout
+        medium.advance_to(medium.clock + medium.turnaround_s)
+        missing_union: set[int] = set()
+        for r in range(n_r):
+            if r in acked or crashed[r]:
+                continue
+            fb = receivers[r].chunk_feedback(mid, rnd, n)
+            is_ack = isinstance(fb, FLChunkAck)
+            if is_ack:
+                complete.add(r)
+            payload = fb.to_cbor()
+            mtype = "FL_Chunk_Ack" if is_ack else "FL_Chunk_Nack"
+            if validate:
+                _validate(payload, mtype)
+            ok, fstats = medium.transmit_payload(
+                payload, uri=feedback_uri, code=Code.CONTENT)
+            if record is not None:
+                record(mtype, fstats)
+            report.stats.add(fstats)
+            report.control_messages += 1
+            report.control_payload_bytes += len(payload)
+            if not ok or (faults is not None
+                          and faults.feedback_lost(client_ids[r], window)):
+                report.lost_feedback += 1
+                continue         # the server never saw this feedback
+            if is_ack:
+                acked.add(r)
+            else:
+                back = FLChunkNack.from_cbor(payload, expect_num_chunks=n)
+                # a resumed client's held set is whatever it did NOT nack
+                delivered[r] = set(range(n)) - set(back.missing)
+                missing_union |= set(back.missing)
+        to_send = sorted(missing_union)
+        window += 1
+        report.windows = window
+    # dissemination's share of the round clock, read back by MediumReport
+    medium.downlink_airtime_s = medium.clock
+    medium.downlink_busy_s = medium.busy_s - busy0
+    report.completed = sorted(complete)
+    return report
+
+
 class UplinkSession:
     """One client's selective-repeat uplink as an explicit state machine.
 
@@ -752,7 +1032,8 @@ class UplinkSession:
                  max_windows: int = 1 + MAX_REPAIR_WINDOWS,
                  validate: bool = True,
                  start_at: float = 0.0,
-                 crash_at: tuple[int, int] | None = None) -> None:
+                 crash_at: tuple[int, int] | None = None,
+                 poll_first: bool = False) -> None:
         if not chunks:
             raise ValueError("empty chunk stream")
         self.client_id = client_id
@@ -776,7 +1057,10 @@ class UplinkSession:
             num_chunks=self.num_chunks,
             initial_payload_bytes=sum(len(w) for w in self.wires))
         self.window = 0
-        self.to_send: list[int] = list(range(self.num_chunks))
+        # poll_first (crash-resume): window 0 sends nothing, only polls —
+        # the receiver's NACK scopes retransmission to what it is missing
+        self.to_send: list[int] = ([] if poll_first
+                                   else list(range(self.num_chunks)))
         self.acked = False          # the sender saw the receiver's ACK
         self.assembled = False      # the receiver completed reassembly
         self.rings: dict[int, BlockReceiveRing] = {}   # in-flight chunks
@@ -1044,7 +1328,9 @@ def run_interleaved_uplinks(
     return MediumReport(
         airtime_s=medium.clock, busy_s=medium.busy_s, idle_s=medium.idle_s,
         per_client_done_s={s.client_id: s.done_at for s in sessions},
-        stats=medium.stats)
+        stats=medium.stats,
+        downlink_airtime_s=medium.downlink_airtime_s,
+        downlink_busy_s=medium.downlink_busy_s)
 
 
 class AssemblerReceiver:

@@ -9,6 +9,7 @@ from __future__ import annotations
 import uuid
 from dataclasses import dataclass, field
 from functools import partial
+from pathlib import Path
 from typing import Callable
 
 import jax
@@ -34,6 +35,19 @@ from repro.core.params_codec import (
 )
 from repro.train.optim import SGDConfig, sgd_update
 
+# dtype per durable-checkpoint leaf name: the restore tree is rebuilt from
+# the header's ``leaves`` list (layouts vary with what the client held when
+# it checkpointed), and the checkpoint codec casts each leaf to its
+# reference dtype — so the mapping here is the whole layout contract.
+_CLIENT_LEAF_DTYPES = {
+    "asm_buf": "<f4",        # partial downlink gather buffer
+    "asm_received": "<i4",   # received chunk-index bitmap
+    "ef_prev": "<f4",        # error-feedback replay residual (round start)
+    "ef_res": "<f4",         # live error-feedback residual
+    "global": "<f4",         # installed global reference (residual uplinks)
+    "params": "<f4",         # local model, flattened
+}
+
 
 @dataclass
 class FLClient:
@@ -50,6 +64,9 @@ class FLClient:
     straggler_factor: float = 1.0    # >1 -> reports late
     encoding: ParamsEncoding = ParamsEncoding.TA_F32
     error_feedback: ErrorFeedback = field(default_factory=ErrorFeedback)
+    # durable storage root for crash-resume (``save_client_state``); None
+    # means a crash loses everything (pure dropout, the pre-PR behaviour)
+    checkpoint_dir: str | None = None
 
     params: dict | None = None
     round: int = 0
@@ -69,6 +86,7 @@ class FLClient:
     # not be bit-identical to the original
     _ef_round: int | None = field(init=False, repr=False, default=None)
     _ef_prev: np.ndarray | None = field(init=False, repr=False, default=None)
+    _ckpt_mgr: object = field(init=False, repr=False, default=None)
 
     def __post_init__(self) -> None:
         # the client knows its own model size: bound chunk-reassembly
@@ -130,8 +148,136 @@ class FLClient:
     def chunk_feedback(self, model_id: uuid.UUID, round_: int,
                        num_chunks: int) -> FLChunkAck | FLChunkNack:
         """Selective-repeat feedback for the given downlink generation:
-        ACK when fully assembled/installed, else NACK the missing set."""
+        ACK when fully assembled/installed, else NACK the missing set.
+
+        The installed-generation check matters after a crash-restore: the
+        rebuilt assembler has no completed-key memory, but a client whose
+        durable checkpoint already holds the installed model for exactly
+        this generation must ACK, not re-download a model it has."""
+        if (self.params is not None and model_id == self.model_id
+                and round_ == self.round):
+            return FLChunkAck(model_id, round_, num_chunks)
         return self._assembler.feedback(model_id, round_, num_chunks)
+
+    # -- durable client state (crash-resume) ---------------------------------
+
+    def _ckpt(self):
+        if self._ckpt_mgr is None:
+            from repro.checkpoint.cbor_checkpoint import CheckpointManager
+            self._ckpt_mgr = CheckpointManager(
+                Path(self.checkpoint_dir) / f"client_{self.client_id:04d}")
+        return self._ckpt_mgr
+
+    def save_client_state(self) -> None:
+        """Persist everything a resumed round needs to be bit-identical to
+        a crash-free one (docs/fault_model.md, client-checkpoint format):
+        installed params + the residual reference ``last_global_flat``,
+        the error-feedback replay pair (``_ef_round``/``_ef_prev``) and
+        live residual, and any in-progress downlink assembly.  One named
+        checkpoint, atomically replaced (tmp-then-rename) — the client
+        mirror of the server's ``save_agg_snapshot``.  No-op without a
+        ``checkpoint_dir``."""
+        if self.checkpoint_dir is None:
+            return
+        tree: dict[str, np.ndarray] = {}
+        meta: dict = {
+            "round": int(self.round),
+            "model_id": str(self.model_id) if self.model_id else "",
+            "samples_seen": int(self.samples_seen),
+            "ef_round": -1 if self._ef_round is None else int(self._ef_round),
+        }
+        if self.params is not None:
+            flat, _ = flatten_params(self.params)
+            tree["params"] = np.ascontiguousarray(flat, dtype="<f4")
+        if self.last_global_flat is not None:
+            tree["global"] = np.ascontiguousarray(self.last_global_flat,
+                                                  dtype="<f4")
+        if self._ef_prev is not None:
+            tree["ef_prev"] = np.ascontiguousarray(self._ef_prev,
+                                                   dtype="<f4")
+        if self.error_feedback.residual is not None:
+            tree["ef_res"] = np.ascontiguousarray(
+                self.error_feedback.residual, dtype="<f4")
+        asm = self._assembler.export_state()
+        if asm is not None:
+            tree["asm_buf"] = asm.pop("buf")
+            tree["asm_received"] = asm.pop("received")
+            meta["asm"] = asm       # generation key + geometry scalars
+        meta["leaves"] = sorted(tree)
+        self._ckpt().save_named("client_state", tree, round_=self.round,
+                                meta=meta)
+
+    def try_restore_client(self) -> bool:
+        """Rebuild this client from its durable checkpoint after
+        ``simulate_crash``.  Header-first restore: the saved leaf layout
+        varies (a pre-install crash has no params; a mid-download crash
+        carries assembler state), so the header's ``leaves`` list shapes
+        the restore tree.  Returns False — leaving the client a plain
+        dropout — when there is no directory, no checkpoint, or a torn /
+        unrecognised one."""
+        if self.checkpoint_dir is None:
+            return False
+        mgr = self._ckpt()
+        hdr = mgr.peek_named("client_state")
+        if hdr is None:
+            return False
+        names = [str(n) for n in (hdr.get("meta") or {}).get("leaves", [])]
+        if any(n not in _CLIENT_LEAF_DTYPES for n in names):
+            return False        # future/foreign layout: not restorable
+        tree_like = {n: np.empty(0, dtype=_CLIENT_LEAF_DTYPES[n])
+                     for n in names}
+        out = mgr.restore_named("client_state", tree_like)
+        if out is None:
+            return False
+        tree, header = out
+        meta = header.get("meta") or {}
+        self.round = int(meta.get("round", 0))
+        mid = str(meta.get("model_id", ""))
+        self.model_id = uuid.UUID(mid) if mid else None
+        self.samples_seen = int(meta.get("samples_seen", 0))
+        efr = int(meta.get("ef_round", -1))
+        self._ef_round = None if efr < 0 else efr
+
+        def _flat(name: str) -> np.ndarray | None:
+            arr = tree.get(name)
+            if arr is None:
+                return None
+            return np.ascontiguousarray(arr, dtype="<f4").reshape(-1)
+
+        flat = _flat("params")
+        self.params = (None if flat is None
+                       else unflatten_params(flat, self.spec))
+        self.last_global_flat = _flat("global")
+        self._ef_prev = _flat("ef_prev")
+        self.error_feedback = ErrorFeedback(residual=_flat("ef_res"))
+        self._assembler = ChunkAssembler(expected_elems=self.spec.total)
+        asm = meta.get("asm")
+        if asm is not None and "asm_buf" in tree:
+            st = dict(asm)
+            st["buf"] = tree["asm_buf"]
+            st["received"] = tree["asm_received"]
+            try:
+                self._assembler.restore_state(st)
+            except (ValueError, KeyError, TypeError):
+                pass    # garbage assembler snapshot: re-download from NACK
+        if self.params is not None:
+            self.training_enabled = True
+        return True
+
+    def simulate_crash(self) -> None:
+        """Wipe every piece of volatile state — what a device reboot
+        loses.  The durable checkpoint (if any) survives on disk;
+        ``try_restore_client`` brings it back."""
+        self.params = None
+        self.round = 0
+        self.model_id = None
+        self.samples_seen = 0
+        self.last_global_flat = None
+        self._assembler = ChunkAssembler(expected_elems=self.spec.total)
+        self._ef_round = None
+        self._ef_prev = None
+        self.error_feedback = ErrorFeedback()
+        self.training_enabled = False
 
     def local_model_chunks(self, chunk_elems: int, *,
                            encoding: ParamsEncoding | str =

@@ -130,12 +130,22 @@ class ClientCrash:
     """One client dying at a named point of the round.
 
     ``phase``:
+      * ``"download"`` — dies while receiving the chunked dissemination,
+        after ``at_chunk`` verified chunks of window ``at_window``
+        (medium-routed downlink only);
       * ``"train"``  — dies before reporting progress: a silent dropout;
       * ``"upload"`` — dies during window 0 of its chunked upload, after
         ``at_chunk`` chunk transmissions (frames for the interleaved
         scheduler: ``at_frame``);
       * ``"repair"`` — completes ``at_window`` windows then dies inside
         the repair phase, leaving the server mid-reassembly.
+
+    ``resume=True`` turns the silent dropout into a crash-*resume*: the
+    client restarts from its durable per-round checkpoint
+    (``FLClient.save_client_state``) and finishes the round — bit-identical
+    to the crash-free run, retransmitting only what its checkpoint and the
+    receiver's surviving reassembly state do not already cover.  Without a
+    client checkpoint directory, ``resume`` degrades to the plain dropout.
     """
 
     client: int
@@ -143,15 +153,42 @@ class ClientCrash:
     at_window: int = 0
     at_chunk: int = 0
     at_frame: int | None = None
+    resume: bool = False
 
     def __post_init__(self) -> None:
-        if self.phase not in ("train", "upload", "repair"):
+        if self.phase not in ("download", "train", "upload", "repair"):
             raise ValueError(f"unknown crash phase {self.phase!r}")
 
     @property
     def crash_window(self) -> int:
         """The upload window in which the client stops transmitting."""
         return 0 if self.phase == "upload" else max(1, self.at_window)
+
+
+@dataclass(frozen=True)
+class LateJoin:
+    """Membership churn: ``client`` appears only after round ``at_round``'s
+    dissemination already happened.  The round engine defers it — no
+    mid-round catch-up — and the next round's dissemination hands it the
+    then-current global model like any other cohort member."""
+
+    client: int
+    at_round: int
+
+
+@dataclass(frozen=True)
+class Leave:
+    """Membership churn: ``client`` leaves round ``at_round`` mid-round —
+    after training (its progress report may already be in) but before its
+    upload is collected.  With ``rejoin=True`` it comes back at the start
+    of round ``at_round + 1`` and blindly pushes its now-stale upload
+    (old ``round``/``model_id``) before hearing the new dissemination; the
+    ``UplinkEndpoint`` generation gate must reject every stale chunk
+    idempotently, and the client resyncs on the next dissemination."""
+
+    client: int
+    at_round: int
+    rejoin: bool = False
 
 
 @dataclass(frozen=True)
@@ -184,10 +221,13 @@ class FaultPlan:
     feedback_losses: tuple[FeedbackLoss, ...] = ()
     client_crashes: tuple[ClientCrash, ...] = ()
     server_crashes: tuple[ServerCrash, ...] = ()
+    late_joins: tuple[LateJoin, ...] = ()
+    leaves: tuple[Leave, ...] = ()
 
     def __post_init__(self) -> None:  # tolerate list literals in tests
         for f in ("blackouts", "frame_faults", "feedback_losses",
-                  "client_crashes", "server_crashes"):
+                  "client_crashes", "server_crashes", "late_joins",
+                  "leaves"):
             v = getattr(self, f)
             if not isinstance(v, tuple):
                 object.__setattr__(self, f, tuple(v))
@@ -238,6 +278,27 @@ class FaultPlan:
                 return c
         return None
 
+    # -- membership churn queries --------------------------------------------
+
+    def is_late_join(self, client: int, round_: int) -> bool:
+        """Does this client appear only mid-round ``round_`` (deferred to
+        the next round's dissemination)?"""
+        return any(lj.client == client and lj.at_round == round_
+                   for lj in self.late_joins)
+
+    def leaves_mid_round(self, client: int, round_: int) -> bool:
+        """Does this client leave round ``round_`` between training and
+        upload collection?"""
+        return any(lv.client == client and lv.at_round == round_
+                   for lv in self.leaves)
+
+    def rejoining(self, round_: int) -> list[int]:
+        """Clients that left round ``round_ - 1`` with ``rejoin=True`` —
+        they open round ``round_`` by pushing their stale upload before
+        hearing the new dissemination."""
+        return [lv.client for lv in self.leaves
+                if lv.rejoin and lv.at_round == round_ - 1]
+
     def server_crash_due(self, round_: int, folds: int) -> bool:
         return any(s.due(round_, folds) for s in self.server_crashes)
 
@@ -267,11 +328,19 @@ class FaultPlan:
                client_crash_prob: float = 0.6,
                server_crash_prob: float = 0.7,
                corruption_prob: float = 0.5,
-               round_span_s: float = 60.0) -> "FaultPlan":
+               round_span_s: float = 60.0,
+               resume_prob: float = 0.0,
+               churn_prob: float = 0.0) -> "FaultPlan":
         """Derive a whole chaos schedule from one integer.
 
         Deterministic: the same seed always produces the same plan, so a
         failing chaos run is reproducible from its logged seed alone.
+
+        ``resume_prob``/``churn_prob`` gate the crash-resume and membership
+        churn fault kinds.  Their draws are *appended* after the legacy
+        draw sequence and skipped entirely at the default weight 0.0, so
+        every committed chaos seed keeps producing the exact plan it always
+        did — the chaos churn tier opts in explicitly.
         """
         rng = np.random.default_rng(seed)
         chunk_loss = ChunkLoss(rate=float(rng.random()) * max_loss_rate,
@@ -299,8 +368,34 @@ class FaultPlan:
                 kind=("corrupt", "truncate")[int(rng.integers(2))],
                 client=int(rng.integers(n_clients)),
                 window=0, chunk_index=int(rng.integers(4))))
+        # crash-resume / churn draws strictly AFTER the legacy sequence,
+        # and only when their weight is nonzero: the RNG stream consumed by
+        # a legacy call is untouched, so committed seeds replay exactly
+        if crashes and resume_prob > 0.0 and float(rng.random()) < resume_prob:
+            from dataclasses import replace
+            phase = ("download", "train", "upload",
+                     "repair")[int(rng.integers(4))]
+            crashes[0] = replace(crashes[0], phase=phase, resume=True,
+                                 at_window=(0 if phase == "download"
+                                            else crashes[0].at_window))
+        late_joins: list[LateJoin] = []
+        leaves: list[Leave] = []
+        if n_clients > 1 and churn_prob > 0.0 \
+                and float(rng.random()) < churn_prob:
+            taken = {c.client for c in crashes}
+            victim = int(rng.integers(n_clients))
+            if victim in taken:     # churn and crash on one client would
+                victim = (victim + 1) % n_clients   # conflate attributions
+            kind = int(rng.integers(3))
+            at_round = int(rng.integers(2))
+            if kind == 0:
+                late_joins.append(LateJoin(victim, at_round))
+            else:
+                leaves.append(Leave(victim, at_round, rejoin=kind == 2))
         return cls(seed=seed, chunk_loss=chunk_loss,
                    blackouts=tuple(blackouts),
                    frame_faults=tuple(frame_faults),
                    client_crashes=tuple(crashes),
-                   server_crashes=tuple(server_crashes))
+                   server_crashes=tuple(server_crashes),
+                   late_joins=tuple(late_joins),
+                   leaves=tuple(leaves))

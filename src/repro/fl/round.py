@@ -276,6 +276,13 @@ class RoundEngine:
         self.snapshot_bytes = 0
         self.duplicate_folds = 0
         self.ctx: dict = {}
+        # per-client fault attribution: first cause wins (a client that
+        # crash-resumed and THEN missed the deadline is a straggler whose
+        # story started with the crash) — RoundResult.fault_attribution
+        self.attribution: dict[int, str] = {}
+
+    def _attr(self, cid: int, reason: str) -> None:
+        self.attribution.setdefault(cid, reason)
 
     # -- clock helpers -------------------------------------------------------
 
@@ -288,11 +295,37 @@ class RoundEngine:
     def run(self) -> RoundResult:
         sim, server = self.sim, self.sim.server
         sim.link.mark_round_start()
+        self._open_round_medium()
+        # rejoin-with-stale-round: a client that left last round comes
+        # back replaying its stale upload — rejected idempotently before
+        # the round even opens, then resynced by this round's dissemination
+        for cid in self.faults.rejoining(server.round):
+            sim._push_stale_upload(cid)
         selected = server.select_clients()
-        receivers, dissem_dropped = sim._disseminate(selected)
+        # late join: the client appears mid-round — it participates from
+        # the NEXT round on (it gets the then-current global), this round
+        # proceeds without it
+        late = [c for c in selected
+                if self.faults.is_late_join(c, server.round)]
+        for cid in late:
+            self._attr(cid, "late-join")
+        cohort = [c for c in selected if c not in late]
+        receivers, dissem_dropped = sim._disseminate(cohort)
+        dissem_dropped = dissem_dropped + late
         t_model = self.clock          # everyone holds the model from here
+        self._attribute_dissemination(cohort, receivers)
+        for cid in receivers:
+            sim._client_checkpoint(cid)   # durable installed-model state
         reporters, dropped, stopped, progress, ready = self._train_phase(
             receivers, t_model)
+        # mid-round leave: trained, then left before uploading anything
+        leavers = [c for c in reporters
+                   if self.faults.leaves_mid_round(c, server.round)]
+        if leavers:
+            reporters = [c for c in reporters if c not in leavers]
+            for cid in leavers:
+                self._attr(cid, "churn")
+            dropped = dropped + leavers
         dropped = dissem_dropped + dropped
         self.ctx = {
             "selected": selected, "reporters": reporters,
@@ -333,12 +366,44 @@ class RoundEngine:
                      "chunk_encoding", "residual")}
         self.folded = list(state["folded"])
         sim.link.mark_round_start()
+        sim._round_medium = None     # uplink-only resume: fresh medium
         # post-restart, unfinished clients are ready immediately: their
         # training finished in the previous server's lifetime
         ready = {cid: 0.0 for cid in self.ctx["reporters"]}
         return self._collect_and_finish(ready, recovered=True)
 
     # -- phases --------------------------------------------------------------
+
+    def _open_round_medium(self) -> None:
+        """When the sim runs its downlink on the medium, create ONE
+        ``SharedMedium`` for the whole round: dissemination, feedback and
+        (interleaved) uplink share its clock, RNG, and fault schedule."""
+        sim = self.sim
+        sim._round_medium = None
+        if getattr(sim, "downlink_mode", "link") != "medium":
+            return
+        sim._round_medium = SharedMedium(
+            seed=(sim._seed, sim.server.round),
+            frame_drop_prob=sim.link.drop_prob,
+            reorder_prob=sim.uplink_reorder_prob,
+            turnaround_s=sim.uplink_turnaround_s,
+            chunk_drop=self.faults.as_chunk_drop() or sim.link.chunk_drop,
+            faults=self.faults)
+
+    def _attribute_dissemination(self, cohort, receivers) -> None:
+        """Name why each cohort member did (not) come out of dissemination
+        holding the model: download crash (resumed or not) vs plain loss."""
+        sim = self.sim
+        for cid in cohort:
+            if cid in receivers:
+                if cid in sim._downlink_resumed:
+                    self._attr(cid, "crash-resumed")
+                continue
+            crash = self.faults.client_crash(cid)
+            if crash is not None and crash.phase == "download":
+                self._attr(cid, "crash")
+            else:
+                self._attr(cid, "link")
 
     def _train_phase(self, receivers, t_model):
         sim, server = self.sim, self.sim.server
@@ -353,17 +418,27 @@ class RoundEngine:
             node_failed = sim._rng.random() < client.dropout_prob
             crash = self.faults.client_crash(cid)
             if crash is not None and crash.phase == "train":
-                dropped.append(cid)   # died before reporting anything
-                continue
+                # a resumable crash reboots + restores the durable
+                # post-install checkpoint, then retrains — training is
+                # deterministic in (seed, client, round), so the resumed
+                # update is bit-identical to the crash-free one
+                if not (crash.resume and sim.restart_client(cid)):
+                    self._attr(cid, "crash")
+                    dropped.append(cid)   # died before reporting anything
+                    continue
+                self._attr(cid, "crash-resumed")
             if node_failed:
+                self._attr(cid, "node")
                 dropped.append(cid)   # node failure this round
                 continue
             upd = client.train_locally()
+            sim._client_checkpoint(cid)   # durable trained-model state
             t0 = self.clock
             ring = sim._send(upd.to_cbor_segments(),
                              "FL_Local_DataSet_Update",
                              "fl/progress", Code.CONTENT)
             if ring is None:
+                self._attr(cid, "link")
                 dropped.append(cid)   # report lost on the link
                 continue
             upd = type(upd).from_cbor_segments(ring)
@@ -416,6 +491,14 @@ class RoundEngine:
                 clear_agg_snapshot(server)
         quorum_met = (installed if (reporters and quorum_pre)
                       else quorum_pre)
+        if not quorum_pre:
+            for cid in reporters:
+                self._attr(cid, "missed-quorum")
+        elif reporters and not installed:
+            for cid in self.folded:
+                self._attr(cid, "missed-quorum")
+        for cid in self.stragglers:
+            self._attr(cid, "deadline")
         result = RoundResult(
             round=server.round, participants=list(selected),
             reporters=sorted(self.folded),
@@ -428,8 +511,10 @@ class RoundEngine:
             recovered=recovered,
             clock_s=self.clock,
             snapshot_bytes=self.snapshot_bytes,
+            fault_attribution=dict(sorted(self.attribution.items())),
         )
         clear_agg_snapshot(server)      # the round is over either way
+        self.sim._round_medium = None   # the round's fault domain closes
         server.finish_round(result)
         return result
 
@@ -468,7 +553,15 @@ class RoundEngine:
 
     def _deadline_gate(self, cid: int, ready: dict[int, float]) -> bool:
         """Advance the clock to the client's start; True when the client
-        may still transmit (the deadline has not passed)."""
+        may still transmit.
+
+        Boundary contract (pinned): a transfer may not *start* at or
+        after the deadline — ``start >= deadline_s`` makes the client a
+        straggler before any airtime is spent.  A transfer *completing*
+        exactly at the deadline still counts: ``_missed_deadline`` is
+        strict (``clock > deadline_s``).  The interleaved scheduler's
+        ``medium.clock >= deadline_s`` window gate applies the same
+        start-side rule on the shared clock."""
         deadline = self.policy.deadline_s
         start = max(self.clock, ready.get(cid, 0.0))
         if deadline is not None and start >= deadline:
@@ -491,6 +584,7 @@ class RoundEngine:
         for cid in sorted(pending, key=lambda c: ready.get(c, 0.0)):
             crash = self.faults.client_crash(cid)
             if crash is not None and crash.phase in ("upload", "repair"):
+                self._attr(cid, "crash")
                 dropped.append(cid)   # died before/while answering the GET
                 continue
             if not self._deadline_gate(cid, ready):
@@ -499,12 +593,14 @@ class RoundEngine:
                 sim.clients[cid].local_model_update().to_cbor_segments(enc),
                 "FL_Local_Model_Update", "fl/model", Code.CONTENT)
             if ring is None:
+                self._attr(cid, "link")
                 dropped.append(cid)   # model transfer lost
                 continue
             if self._missed_deadline(cid):
                 continue              # arrived after the round closed
             upd = FLLocalModelUpdate.from_cbor_segments(ring)
             if upd.round != server.round or upd.model_id != server.model_id:
+                self._attr(cid, "churn")
                 dropped.append(cid)   # stale generation
                 continue
             self._fold(cid, np.asarray(upd.params, dtype=np.float32),
@@ -525,12 +621,35 @@ class RoundEngine:
         for cid in sorted(pending, key=lambda c: ready.get(c, 0.0)):
             if not self._deadline_gate(cid, ready):
                 continue
+            crash = self.faults.client_crash(cid)
+            resumable = (crash is not None
+                         and crash.phase in ("upload", "repair")
+                         and crash.resume
+                         and sim.clients[cid].checkpoint_dir is not None)
             budget = None if deadline is None else deadline - self.clock
             flat = sim._collect_chunked(
                 cid, backoff=self.policy.backoff, faults=self.faults,
-                airtime_budget_s=budget, encoding=enc, residual=residual)
+                airtime_budget_s=budget, encoding=enc, residual=residual,
+                keep_partial=resumable)
+            if (flat is None and resumable
+                    and (deadline is None or self.clock < deadline)
+                    and sim.restart_client(cid)):
+                # reboot + restore the post-train checkpoint, then poll
+                # the endpoint first: only the chunks it still misses go
+                # back on the air (strictly fewer payload bytes)
+                self._attr(cid, "crash-resumed")
+                budget = None if deadline is None else deadline - self.clock
+                flat = sim._collect_chunked(
+                    cid, backoff=self.policy.backoff, faults=self.faults,
+                    airtime_budget_s=budget, encoding=enc,
+                    residual=residual, poll_first=True, resumed=True)
             if flat is None:
                 if not self._missed_deadline(cid):
+                    if crash is not None and crash.phase in ("upload",
+                                                             "repair"):
+                        self._attr(cid, "crash")
+                    else:
+                        self._attr(cid, "link")
                     dropped.append(cid)   # upload never completed
                 continue
             if self._missed_deadline(cid):
@@ -560,19 +679,28 @@ class RoundEngine:
             sim.last_medium_report = None
             sim.last_uplink_reports = []
             return
-        chunk_drop = self.faults.as_chunk_drop() or sim.link.chunk_drop
-        medium = SharedMedium(
-            seed=(sim._seed, server.round),
-            frame_drop_prob=sim.link.drop_prob,
-            reorder_prob=sim.uplink_reorder_prob,
-            turnaround_s=sim.uplink_turnaround_s,
-            chunk_drop=chunk_drop, faults=self.faults)
-        # the uplink medium's clock continues the round clock: sessions
-        # become ready when their owners finish training, and the round
-        # deadline is absolute on the same axis
-        medium.clock = min((s.start_at for s in sessions),
-                           default=self.clock)
-        medium.clock = max(medium.clock, 0.0)
+        if sim._round_medium is not None:
+            # whole-round fault domain: dissemination already ran on this
+            # medium, so the uplink contends on the same virtual clock,
+            # RNG stream, and fault schedule
+            medium = sim._round_medium
+            start = min((s.start_at for s in sessions),
+                        default=medium.clock)
+            medium.advance_to(max(medium.clock, start))
+        else:
+            chunk_drop = self.faults.as_chunk_drop() or sim.link.chunk_drop
+            medium = SharedMedium(
+                seed=(sim._seed, server.round),
+                frame_drop_prob=sim.link.drop_prob,
+                reorder_prob=sim.uplink_reorder_prob,
+                turnaround_s=sim.uplink_turnaround_s,
+                chunk_drop=chunk_drop, faults=self.faults)
+            # the uplink medium's clock continues the round clock:
+            # sessions become ready when their owners finish training,
+            # and the round deadline is absolute on the same axis
+            medium.clock = min((s.start_at for s in sessions),
+                               default=self.clock)
+            medium.clock = max(medium.clock, 0.0)
 
         def fold(session) -> None:
             flat = server.pop_uplink(session.client_id)
@@ -582,18 +710,63 @@ class RoundEngine:
                            .dataset_size())
 
         from repro.fl.chunking import run_interleaved_uplinks
-        sim.last_medium_report = run_interleaved_uplinks(
+        report = run_interleaved_uplinks(
             medium, sessions, record=sim._record_uplink, on_complete=fold,
             deadline_s=deadline, backoff=backoff, faults=self.faults)
-        sim.last_uplink_reports = [s.report for s in sessions]
+        resume_cids = []
+        for s in sessions:
+            cid = s.client_id
+            if cid in self.folded:
+                continue
+            crash = self.faults.client_crash(cid)
+            crashed = bool(getattr(s, "crashed", False))
+            if (crashed and crash is not None and crash.resume
+                    and sim.clients[cid].checkpoint_dir is not None
+                    and (deadline is None or medium.clock < deadline)
+                    and sim.restart_client(cid)):
+                # reboot + restore; the endpoint's partial reassembly is
+                # kept in place so the resumed session polls it first
+                resume_cids.append(cid)
+                continue
+            server.pop_uplink(cid)   # discard partial reassembly
+            if s.expired:
+                self.stragglers.append(cid)
+            else:
+                self._attr(cid, "crash" if crashed else "link")
+                dropped.append(cid)
+        resume_sessions = []
+        if resume_cids:
+            rkwargs = {}
+            if backoff is not None:
+                rkwargs["max_windows"] = backoff.max_windows
+            for cid in resume_cids:
+                self._attr(cid, "crash-resumed")
+                resume_sessions.append(sim.clients[cid].uplink_session(
+                    sim.chunk_elems, server.uplink_endpoint(cid),
+                    uri="fl/model/upload",
+                    feedback_uri="fl/model/upload/fb",
+                    encoding=enc, residual=residual,
+                    start_at=medium.clock, poll_first=True, **rkwargs))
+            report2 = run_interleaved_uplinks(
+                medium, resume_sessions, record=sim._record_uplink,
+                on_complete=fold, deadline_s=deadline, backoff=backoff,
+                faults=self.faults)
+            report2.per_client_done_s = {**report.per_client_done_s,
+                                         **report2.per_client_done_s}
+            report = report2
+            for s in resume_sessions:
+                cid = s.client_id
+                if cid in self.folded:
+                    continue
+                server.pop_uplink(cid)
+                if s.expired:
+                    self.stragglers.append(cid)
+                else:
+                    self._attr(cid, "crash")
+                    dropped.append(cid)
+        sim.last_medium_report = report
+        sim.last_uplink_reports = [s.report
+                                   for s in sessions + resume_sessions]
         sim.last_uplink_report = (sim.last_uplink_reports[-1]
                                   if sim.last_uplink_reports else None)
         sim.link.advance_to_round(medium.clock)
-        for s in sessions:
-            if s.client_id in self.folded:
-                continue
-            server.pop_uplink(s.client_id)   # discard partial reassembly
-            if s.expired:
-                self.stragglers.append(s.client_id)
-            else:
-                dropped.append(s.client_id)

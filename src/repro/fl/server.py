@@ -56,6 +56,12 @@ class RoundResult:
     recovered: bool = False    # round finished by a restarted server
     clock_s: float = 0.0       # virtual round clock at close
     snapshot_bytes: int = 0    # recovery overhead written this round
+    # per-client fault attribution (whole-round fault domain): why each
+    # client missed — or almost missed — this round's aggregate.  Values:
+    # "deadline", "crash", "crash-resumed", "churn", "late-join", "link",
+    # "node", "missed-quorum" (docs/fault_model.md).  Clients that
+    # reported cleanly do not appear.
+    fault_attribution: dict[int, str] = field(default_factory=dict)
 
 
 class FLServer:
@@ -155,9 +161,18 @@ class FLServer:
             ep = self._uplink[client_id] = UplinkEndpoint(self)
         return ep
 
-    def pop_uplink(self, client_id: int) -> np.ndarray | None:
+    def pop_uplink(self, client_id: int, *,
+                   keep_partial: bool = False) -> np.ndarray | None:
         """The client's fully reassembled flat params, or None if the upload
-        never completed.  Clears the client's reassembly state."""
+        never completed.  Clears the client's reassembly state — unless
+        ``keep_partial`` and reassembly is still incomplete, in which case
+        the endpoint stays put so a crash-*resumed* client's poll-first
+        retransmission can finish against the partial state instead of
+        re-uploading from scratch."""
+        if keep_partial:
+            ep = self._uplink.get(client_id)
+            if ep is not None and ep.assembled is None:
+                return None
         ep = self._uplink.pop(client_id, None)
         return ep.assembled if ep is not None else None
 

@@ -23,13 +23,14 @@ from repro.core.messages import (
 from repro.core.params_codec import Q8_BLOCK, quantize_q8
 from repro.fl.chunking import (
     ChunkTransferReport,
+    run_medium_downlink,
     run_selective_repeat,
 )
 from repro.fl.client import FLClient
 from repro.fl.faults import FaultPlan
 from repro.fl.round import RoundEngine, RoundPolicy
 from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
-from repro.transport.coap import Code, TransferStats
+from repro.transport.coap import BlockReceiveRing, Code, TransferStats
 from repro.transport.medium import MediumReport
 from repro.transport.network import LossyLink, as_wire_payload
 
@@ -66,7 +67,8 @@ class FLSimulation:
                  round_policy: RoundPolicy | None = None,
                  chunk_encoding: ParamsEncoding | str =
                  ParamsEncoding.TA_F32,
-                 residual_uplink: bool = False) -> None:
+                 residual_uplink: bool = False,
+                 downlink_mode: str = "link") -> None:
         self.server = server
         self.clients = {c.client_id: c for c in clients}
         # faults: one seeded, replayable schedule of client/server crashes,
@@ -128,6 +130,22 @@ class FLSimulation:
         if uplink_mode not in ("sequential", "interleaved"):
             raise ValueError(f"unknown uplink_mode {uplink_mode!r}")
         self.uplink_mode = uplink_mode
+        # downlink_mode: "link" disseminates over the point-to-point
+        # LossyLink (legacy); "medium" routes dissemination AND its
+        # NACK/ACK feedback through the round's SharedMedium, so one
+        # FaultPlan — blackouts, frame faults, feedback loss — governs
+        # the whole round on one virtual clock and MediumReport carves
+        # out the dissemination airtime (docs/fault_model.md).
+        if downlink_mode not in ("link", "medium"):
+            raise ValueError(f"unknown downlink_mode {downlink_mode!r}")
+        self.downlink_mode = downlink_mode
+        # the whole-round contention domain, created per round by the
+        # RoundEngine when downlink_mode == "medium"
+        self._round_medium = None
+        # per-dissemination churn bookkeeping (who died downloading, who
+        # came back) — the engine reads these for fault attribution
+        self._downlink_crashed: set[int] = set()
+        self._downlink_resumed: set[int] = set()
         self.uplink_reorder_prob = uplink_reorder_prob
         self.uplink_turnaround_s = uplink_turnaround_s
         self.last_downlink_report: ChunkTransferReport | None = None
@@ -191,6 +209,25 @@ class FLSimulation:
                     flat, Q8_BLOCK)[2].astype("<f4", copy=False)
             else:
                 self._residual_ref = flat
+        self._downlink_crashed = set()
+        self._downlink_resumed = set()
+        if self.downlink_mode == "medium" and self._round_medium is not None:
+            medium = self._round_medium
+            report = run_medium_downlink(
+                medium, chunks, [self.clients[cid] for cid in receivers],
+                uri="fl/model/chunk", feedback_uri="fl/model/chunk/fb",
+                record=self.accounting.record,
+                backoff=(self.round_policy.backoff
+                         if self.round_policy else None),
+                client_ids=receivers, faults=self.faults,
+                checkpoint=self._client_checkpoint,
+                on_crash=self._client_crash_cb,
+                resume_client=self.restart_client)
+            self.last_downlink_report = report
+            self._publish_downlink_report(medium)
+            # the rest of the round continues on the same clock axis
+            self.link.advance_to_round(medium.clock)
+            return [receivers[i] for i in report.completed]
         report = run_selective_repeat(
             self.link, chunks, [self.clients[cid] for cid in receivers],
             uri="fl/model/chunk", feedback_uri="fl/model/chunk/fb",
@@ -203,7 +240,10 @@ class FLSimulation:
                          faults: FaultPlan | None = None,
                          airtime_budget_s: float | None = None,
                          encoding: ParamsEncoding | str | None = None,
-                         residual: bool | None = None
+                         residual: bool | None = None,
+                         keep_partial: bool = False,
+                         poll_first: bool = False,
+                         resumed: bool = False
                          ) -> np.ndarray | None:
         """Chunked client → server local-model upload (reverse direction).
 
@@ -217,7 +257,14 @@ class FLSimulation:
         upstream as a dropout or straggler).  ``encoding``/``residual``
         override the simulation defaults (the round engine passes the
         values its aggregation snapshot recorded, so a resumed round
-        re-collects in the encoding the crashed round was using)."""
+        re-collects in the encoding the crashed round was using).
+
+        Crash-resume hooks: ``keep_partial`` leaves the server's partial
+        reassembly endpoint in place when the upload dies mid-transfer
+        (so a resumed client can finish it), ``poll_first`` makes window
+        0 a pure feedback poll (retransmit only what the server NACKs),
+        and ``resumed`` suppresses the fault plan's crash injection —
+        a client does not crash twice at the same coordinate."""
         chunks = self.clients[cid].local_model_chunks(
             self.chunk_elems,
             encoding=(self.chunk_encoding if encoding is None else encoding),
@@ -226,7 +273,8 @@ class FLSimulation:
         feedback_lost = None
         if faults is not None:
             crash = faults.client_crash(cid)
-            if crash is not None and crash.phase in ("upload", "repair"):
+            if (not resumed and crash is not None
+                    and crash.phase in ("upload", "repair")):
                 sender_crash = (crash.crash_window, crash.at_chunk)
             if faults.feedback_losses:
                 feedback_lost = (lambda ridx, w:
@@ -238,9 +286,9 @@ class FLSimulation:
             backoff=backoff, turnaround_s=self.uplink_turnaround_s,
             airtime_budget_s=airtime_budget_s,
             sender_crash=sender_crash, feedback_lost=feedback_lost,
-            client_ids=[cid])
+            client_ids=[cid], poll_first=poll_first)
         self.last_uplink_report = report
-        return self.server.pop_uplink(cid)
+        return self.server.pop_uplink(cid, keep_partial=keep_partial)
 
     def _record_uplink(self, mtype: str, stats: TransferStats) -> None:
         # chunk traffic is accounted per direction; control messages share
@@ -275,7 +323,27 @@ class FLSimulation:
             msg.to_cbor_segments(server.cfg.params_encoding))
         cddl.validate(fastpath.decode(payload),
                       cddl.SCHEMAS["FL_Global_Model_Update"])
+        medium = (self._round_medium
+                  if self.downlink_mode == "medium" else None)
         if self.multicast_global:
+            if medium is not None:
+                # monolithic dissemination on the shared medium: one CON
+                # transfer on the round clock, decoded from its ring
+                busy0 = medium.busy_s
+                ring = BlockReceiveRing()
+                ok, stats = medium.transmit_payload(
+                    payload, uri="fl/model", code=Code.POST, ring=ring)
+                self.accounting.record("FL_Global_Model_Update", stats)
+                medium.downlink_airtime_s = medium.clock
+                medium.downlink_busy_s = medium.busy_s - busy0
+                self._publish_downlink_report(medium)
+                self.link.advance_to_round(medium.clock)
+                if not ok:
+                    return [], list(selected)
+                for cid in selected:
+                    self.clients[cid].handle_global_model(
+                        FLGlobalModelUpdate.from_cbor_segments(ring))
+                return list(selected), []
             # one wire transfer reaches everyone; every client decodes
             # the same delivered ring (its arena is the receiver-side
             # owned copy, decoded as views)
@@ -291,16 +359,90 @@ class FLSimulation:
         # at a time (N simultaneous arenas would put peak memory back at
         # N× model); a failed send drops only its client
         receivers, dropped = [], []
+        busy0 = medium.busy_s if medium is not None else 0.0
         for cid in selected:
-            ring = self._send(payload, "FL_Global_Model_Update",
-                              "fl/model", Code.POST, validated=True)
+            if medium is not None:
+                ring = BlockReceiveRing()
+                ok, stats = medium.transmit_payload(
+                    payload, uri="fl/model", code=Code.POST, ring=ring)
+                self.accounting.record("FL_Global_Model_Update", stats)
+                if not ok:
+                    ring = None
+            else:
+                ring = self._send(payload, "FL_Global_Model_Update",
+                                  "fl/model", Code.POST, validated=True)
             if ring is None:
                 dropped.append(cid)
                 continue
             self.clients[cid].handle_global_model(
                 FLGlobalModelUpdate.from_cbor_segments(ring))
             receivers.append(cid)
+        if medium is not None:
+            medium.downlink_airtime_s = medium.clock
+            medium.downlink_busy_s = medium.busy_s - busy0
+            self._publish_downlink_report(medium)
+            self.link.advance_to_round(medium.clock)
         return receivers, dropped
+
+    def _publish_downlink_report(self, medium) -> None:
+        """Downlink-only medium accounting, published right after the
+        dissemination so a sequential (off-medium) uplink still reports
+        the dissemination airtime; an interleaved uplink overwrites this
+        with the whole-round report on the same medium."""
+        self.last_medium_report = MediumReport(
+            airtime_s=medium.clock, busy_s=medium.busy_s,
+            idle_s=medium.idle_s, stats=medium.stats,
+            downlink_airtime_s=medium.downlink_airtime_s,
+            downlink_busy_s=medium.downlink_busy_s)
+
+    # -- client lifecycle hooks (crash-resume + churn; fl.round drives) -------
+
+    def _client_checkpoint(self, cid: int) -> None:
+        """Persist one client's durable state (no-op for clients without
+        a ``checkpoint_dir``)."""
+        self.clients[cid].save_client_state()
+
+    def _client_crash_cb(self, cid: int) -> None:
+        """A download-phase ``ClientCrash`` fired: wipe the client's
+        volatile state (the medium downlink driver's ``on_crash``)."""
+        self._downlink_crashed.add(cid)
+        self.clients[cid].simulate_crash()
+
+    def restart_client(self, cid: int) -> bool:
+        """Reboot one client: volatile state is lost, then the durable
+        checkpoint — if any — is restored.  Returns True when the client
+        came back with state (the crash is *resumable*); False degrades
+        to the legacy dropout."""
+        client = self.clients[cid]
+        client.simulate_crash()
+        ok = client.try_restore_client()
+        if ok and cid in self._downlink_crashed:
+            self._downlink_resumed.add(cid)
+        return ok
+
+    def _push_stale_upload(self, cid: int) -> None:
+        """A rejoining client replays the upload of the round it left in —
+        every chunk arrives carrying the *previous* generation's
+        (model_id, round) and is rejected idempotently at the
+        ``UplinkEndpoint`` generation gate.  Models an out-of-band
+        arrival (the engine calls this before the round opens): no wire
+        accounting, no reassembly state touched.  Raw f32 chunks on
+        purpose — a lossy replay would mutate the client's error-feedback
+        state, and a rejected upload must leave no trace anywhere."""
+        client = self.clients.get(cid)
+        if client is None or client.params is None:
+            return
+        server = self.server
+        if (client.round >= server.round
+                and client.model_id == server.model_id):
+            return      # not actually stale: nothing to replay
+        if self.chunk_elems is None:
+            return      # monolithic stale uploads are culled in aggregate()
+        ep = server.uplink_endpoint(cid)
+        for msg in client.local_model_chunks(
+                self.chunk_elems, encoding=ParamsEncoding.TA_F32,
+                residual=False):
+            ep.receive_chunk(msg)       # all rejected: stale generation
 
     # -- one FL round (paper Fig. 2; lifecycle in fl.round) -------------------
 

@@ -68,13 +68,21 @@ def _damage_frame(frame: TaggedFrame, kind: str) -> TaggedFrame | None:
 
 @dataclass
 class MediumReport:
-    """Airtime accounting for one multi-client transfer over the medium."""
+    """Airtime accounting for one multi-client transfer over the medium.
+
+    When the whole round runs on one medium (downlink dissemination +
+    feedback + uplink on one clock), ``downlink_airtime_s`` /
+    ``downlink_busy_s`` carve out the dissemination phase's share:
+    ``airtime_s`` is then the whole round's clock and the uplink share is
+    the difference — docs/concurrent_uplink.md."""
 
     airtime_s: float = 0.0            # virtual clock at completion
     busy_s: float = 0.0               # frames on the air
     idle_s: float = 0.0               # gaps no contender could fill
     per_client_done_s: dict[int, float] = field(default_factory=dict)
     stats: TransferStats = field(default_factory=TransferStats)
+    downlink_airtime_s: float = 0.0   # clock when dissemination finished
+    downlink_busy_s: float = 0.0      # downlink frames on the air
 
 
 class SharedMedium:
@@ -121,6 +129,10 @@ class SharedMedium:
         self.clock = 0.0
         self.busy_s = 0.0
         self.idle_s = 0.0
+        # dissemination-phase accounting for whole-round schedules
+        # (run_medium_downlink stamps these; MediumReport reads them back)
+        self.downlink_airtime_s = 0.0
+        self.downlink_busy_s = 0.0
         self.stats = TransferStats()
         self.frames_sent = 0               # data frames put on the air
         self.frames_lost = 0               # ...that did not reach a receiver
@@ -200,6 +212,63 @@ class SharedMedium:
             self.frames_lost += 1
         return self._release()
 
+    def transmit_downlink(self, frame: TaggedFrame, stats: TransferStats,
+                          *, receivers: Sequence[int],
+                          drops: dict[int, bool] | None = None
+                          ) -> dict[int, TaggedFrame | None]:
+        """Put one multicast downlink frame on the air: airtime and byte
+        accounting once (one wire transmission reaches the whole cohort),
+        delivery decided per receiving client.
+
+        ``receivers`` are the listening clients' ids in deterministic
+        order — each gets its own loss draw (independent fading), or a
+        forced verdict from ``drops`` (the chunk_drop schedule, keyed by
+        the *receiving* client).  Blackouts kill the frame for everyone;
+        per-client ``FrameFault`` verdicts damage individual copies.  The
+        fault verdicts come after every RNG draw so a plan never perturbs
+        the fault-free loss streams.  Downlink frames release in order (no
+        holdback): multicast receivers slot blocks from one transmission
+        sequence, so reorder jitter is an uplink-contention artifact.
+        Returns ``{client: delivered frame or None}``.
+        """
+        a = self.frame_airtime(frame.wire_bytes)
+        t0 = self.clock
+        self.clock += a
+        self.busy_s += a
+        for s in (stats, self.stats):
+            s.frames += 1
+            s.blocks += 1
+            s.wire_bytes += frame.wire_bytes
+            s.link_bytes += frame.wire_bytes + LOWPAN_OVERHEAD
+        self._seq += 1
+        self.frames_sent += 1
+        blackout = (self.faults is not None
+                    and self.faults.blackout_at(t0))
+        out: dict[int, TaggedFrame | None] = {}
+        for cid in receivers:
+            drop = drops.get(cid) if drops is not None else None
+            if drop is None:
+                drop = (self.frame_drop_prob > 0.0
+                        and float(self._rng.random()) < self.frame_drop_prob)
+            delivered: TaggedFrame | None = frame
+            if blackout:
+                drop = True
+            elif not drop and self.faults is not None:
+                verdict = self.faults.frame_verdict(
+                    client=cid, window=frame.window,
+                    chunk_index=frame.chunk_index,
+                    block_num=frame.block_num)
+                if verdict == "drop":
+                    drop = True
+                elif verdict is not None:
+                    delivered = _damage_frame(frame, verdict)
+                    if delivered is None:
+                        drop = True
+            out[cid] = None if drop else delivered
+        if receivers and all(v is None for v in out.values()):
+            self.frames_lost += 1    # loss_estimate: nobody heard it
+        return out
+
     def loss_estimate(self) -> float:
         """Observed frame-loss fraction so far — what medium-aware backoff
         scales its delays by (a congested/black channel backs off harder)."""
@@ -233,15 +302,17 @@ class SharedMedium:
 
     def transmit_payload(self, payload, *, uri: str,
                          code: Code = Code.CONTENT,
-                         stats: TransferStats | None = None
-                         ) -> tuple[bool, TransferStats]:
+                         stats: TransferStats | None = None,
+                         ring=None) -> tuple[bool, TransferStats]:
         """One CON control transfer (NACK/ACK feedback) on the medium.
 
         Per-frame ack + retransmission up to MAX_RETRANSMIT, every attempt
         advancing the clock — control traffic competes for the same
-        airtime as data.  Returns ``(delivered, stats)``; an undelivered
-        feedback message costs the sender a window (it polls again), never
-        correctness.
+        airtime as data.  ``ring`` (a ``BlockReceiveRing``) collects the
+        delivered blocks when the caller needs the reassembled payload
+        (monolithic dissemination on the medium).  Returns ``(delivered,
+        stats)``; an undelivered feedback message costs the sender a
+        window (it polls again), never correctness.
         """
         def on_frame(wire: int) -> None:
             a = self.frame_airtime(wire)
@@ -256,7 +327,8 @@ class SharedMedium:
             return lost
 
         out = con_blockwise_transfer(
-            payload, uri=uri, code=code, drop=drop, on_frame=on_frame)
+            payload, uri=uri, code=code, drop=drop, on_frame=on_frame,
+            ring=ring)
         self.stats.add(out)
         if stats is not None:
             stats.add(out)

@@ -127,6 +127,24 @@ class TaggedFrame:
     wire_bytes: int          # encoded CoAP size (MAC/6LoWPAN overhead extra)
 
 
+# The ``client`` tag of a downlink (server -> cohort) frame.  Downlink
+# frames share the uplink's TaggedFrame shape so one SharedMedium carries
+# both directions on one clock; the sentinel keeps them out of any
+# client-keyed uplink routing, and per-receiver delivery verdicts are keyed
+# by the *receiving* client's id instead (SharedMedium.transmit_downlink).
+DOWNLINK_CLIENT = -1
+
+
+def iter_downlink_frames(payloads: Sequence, *, uri: str, window: int,
+                         indices: Sequence[int] | None = None,
+                         code: Code = Code.POST) -> Iterator[TaggedFrame]:
+    """``iter_tagged_frames`` for the server's multicast dissemination:
+    one lazily-framed chunk window tagged ``DOWNLINK_CLIENT``, transmitted
+    once per frame however many receivers listen."""
+    return iter_tagged_frames(payloads, uri=uri, client=DOWNLINK_CLIENT,
+                              window=window, indices=indices, code=code)
+
+
 def iter_tagged_frames(payloads: Sequence, *, uri: str, client: int,
                        window: int, indices: Sequence[int] | None = None,
                        code: Code = Code.POST) -> Iterator[TaggedFrame]:

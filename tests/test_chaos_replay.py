@@ -83,3 +83,72 @@ def test_chaos_seed_survives_and_replays_exactly(tmp_path, seed):
     again = _run_scenario(tmp_path / "b", plan)
     # the failure line CI greps for when a fresh seed finds a bug:
     assert first == again, f"non-reproducible chaos run: {plan.describe()}"
+
+
+# -- churn tier: whole-round fault domain seeds --------------------------------
+#
+# ``FaultPlan.random`` with nonzero ``resume_prob``/``churn_prob`` draws
+# crash-resume coordinates (including download-phase crashes, which only
+# exist on the medium-routed downlink) and membership churn on top of the
+# legacy schedule.  These scenarios run the WHOLE round on one
+# ``SharedMedium`` (downlink dissemination + feedback + interleaved
+# uplink on one clock) with per-client durable checkpoints, so one seed
+# exercises blackouts, frame damage, client crash-resume, and churn
+# against a single fault domain.
+
+CHURN_SEEDS = json.loads(
+    (pathlib.Path(__file__).parent / "chaos_seeds.json").read_text()
+)["churn_seeds"]
+ALL_CHURN_SEEDS = CHURN_SEEDS + ([int(_fresh) % 2**31] if _fresh else [])
+
+
+def _churn_plan_for(seed: int) -> FaultPlan:
+    plan = FaultPlan.random(seed, n_clients=4,
+                            resume_prob=0.9, churn_prob=0.6)
+    return replace(plan, server_crashes=tuple(
+        replace(sc, at_round=1) for sc in plan.server_crashes))
+
+
+def _run_churn_scenario(tmp, plan):
+    """Two whole-round-medium FL rounds under the plan: interleaved
+    uplink sharing the dissemination's medium, clients checkpointing
+    durably (crash-resume), churn applied by the engine."""
+    sim = _sim(tmp / "srv", rounds=2, drop_prob=0.05, faults=plan,
+               policy=POLICY, downlink_mode="medium",
+               uplink_mode="interleaved", client_ckpt=tmp / "cli")
+    results, restarts = [], 0
+    while sim.server.round < 2:
+        try:
+            r = sim.resume_round()
+            if r is None:
+                r = sim.run_round()
+        except ServerCrashed:
+            restarts += 1
+            assert restarts <= 4, f"crash loop: {plan.describe()}"
+            sim = _restart(sim, faults=plan, policy=POLICY)
+            continue
+        results.append(r)
+    assert np.isfinite(sim.server.global_params).all(), plan.describe()
+    assert len(results) == 2, plan.describe()
+    for r in results:
+        assert set(r.reporters).issubset(set(r.participants)), \
+            plan.describe()
+        assert not (set(r.reporters) & set(r.dropped)), plan.describe()
+        assert not (set(r.reporters) & set(r.stragglers)), plan.describe()
+        # attribution covers exactly the clients with a story to tell
+        assert set(r.fault_attribution) <= set(r.participants), \
+            plan.describe()
+    return (sim.server.global_params.tobytes(),
+            [(r.round, tuple(r.reporters), tuple(r.dropped),
+              tuple(r.stragglers), r.quorum_met, r.recovered,
+              tuple(sorted(r.fault_attribution.items())))
+             for r in results])
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", ALL_CHURN_SEEDS)
+def test_churn_chaos_seed_survives_and_replays_exactly(tmp_path, seed):
+    plan = _churn_plan_for(seed)
+    first = _run_churn_scenario(tmp_path / "a", plan)
+    again = _run_churn_scenario(tmp_path / "b", plan)
+    assert first == again, f"non-reproducible chaos run: {plan.describe()}"

@@ -1,0 +1,130 @@
+"""Membership churn: late join, mid-round leave, and rejoin-with-stale-round.
+
+The RoundEngine's churn rules: a client that joins after selection waits
+for the *next* round's dissemination (``late-join``); one that leaves
+mid-round after training is excluded from aggregation (``churn``); one
+that left and rejoins pushes its stale round-t upload at a round-t+1
+server, where the ``UplinkEndpoint`` generation gate rejects every chunk
+idempotently (no accounting, no state) and the next dissemination
+resyncs it.  Stale rejection is enforced at BOTH reassembly layers:
+``UplinkEndpoint`` (server generation) and ``ChunkAssembler``
+(per-generation key + ``_is_stale``).
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core.messages import ParamsEncoding
+from repro.fl import ChunkAssembler, FaultPlan, LateJoin, Leave
+from test_round_recovery import _sim
+
+CHUNK = 8192
+
+
+def test_late_join_deferred_to_next_round():
+    plan = FaultPlan(late_joins=(LateJoin(2, at_round=0),))
+    sim = _sim(rounds=2, faults=plan)
+    r0 = sim.run_round()
+    assert 2 not in r0.reporters and 2 in r0.dropped
+    assert r0.fault_attribution.get(2) == "late-join"
+    assert r0.quorum_met       # the remaining cohort still aggregates
+    r1 = sim.run_round()       # next round: a full member again
+    assert 2 in r1.reporters
+    assert 2 not in r1.fault_attribution
+
+
+def test_mid_round_leave_excluded_from_aggregation():
+    plan = FaultPlan(leaves=(Leave(1, at_round=0),))
+    sim = _sim(rounds=2, faults=plan)
+    ref = _sim(rounds=2)
+    r0 = sim.run_round()
+    ref.run_round()
+    assert 1 in r0.dropped and 1 not in r0.reporters
+    assert r0.fault_attribution.get(1) == "churn"
+    assert sorted(r0.reporters) == [0, 2, 3]
+    # the leaver's update never reached the fold: the aggregate differs
+    # from the full-cohort reference
+    assert sim.server.global_params.tobytes() != \
+        ref.server.global_params.tobytes()
+
+
+def test_rejoin_resynced_by_next_dissemination():
+    plan = FaultPlan(leaves=(Leave(1, at_round=0, rejoin=True),))
+    sim = _sim(rounds=2, faults=plan)
+    r0 = sim.run_round()
+    assert 1 in r0.dropped
+    r1 = sim.run_round()
+    # round 1 re-disseminates the fresh generation: the rejoiner is a
+    # full reporter again, its stale round-0 upload having been refused
+    assert 1 in r1.reporters
+    assert sim.clients[1].round == 1
+    assert sim.clients[1].model_id == sim.server.model_id
+
+
+def test_stale_upload_rejected_idempotently_at_endpoint():
+    """The rejoin replay: a client holding round-0 params pushes its full
+    chunk stream at a round-1 server.  Every chunk is refused at the
+    ``UplinkEndpoint`` generation gate — no partial state, no accounting,
+    and ``retransmitted_payload_bytes`` bookkeeping untouched."""
+    sim = _sim(rounds=2)
+    sim.run_round()                     # server is now at round 1
+    assert sim.clients[1].round == 0    # client 1 still holds round 0
+    acct_before = {k: copy.deepcopy(v)
+                   for k, v in sim.accounting.by_type.items()}
+    up_before = sim.last_uplink_report
+    ep = sim.server.uplink_endpoint(1)
+    sim._push_stale_upload(1)
+    n_chunks = -(-sim.server.global_params.size // CHUNK)
+    assert ep.rejected_stale == n_chunks
+    # idempotent: a second replay is rejected identically
+    sim._push_stale_upload(1)
+    assert ep.rejected_stale == 2 * n_chunks
+    assert sim.server.pop_uplink(1) is None     # nothing assembled
+    # zero accounting impact: the push is server-side refusal, not wire
+    # traffic the simulation's books should price
+    assert {k: vars(v) for k, v in sim.accounting.by_type.items()} == \
+        {k: vars(v) for k, v in acct_before.items()}
+    assert sim.last_uplink_report is up_before
+    assert (up_before is None
+            or up_before.retransmitted_payload_bytes ==
+            up_before.payload_bytes - up_before.initial_payload_bytes)
+
+
+def test_stale_round_rejected_at_chunk_assembler():
+    """The assembler-level gate: once a newer generation is in progress,
+    chunks of an older round are counted in ``stale_rejected`` and do not
+    reset the live generation."""
+    from repro.fl.chunking import chunk_stream
+    import uuid
+    flat_new = np.arange(24, dtype=np.float32)
+    flat_old = -np.arange(24, dtype=np.float32)
+    mid_new, mid_old = uuid.uuid4(), uuid.uuid4()
+    new = list(chunk_stream(mid_new, 1, flat_new, 8))
+    old = list(chunk_stream(mid_old, 0, flat_old, 8))
+    asm = ChunkAssembler(expected_elems=24)
+    assert asm.add(new[0]) is None
+    for msg in old:                     # whole stale stream replayed
+        assert asm.add(msg) is None
+    assert asm.stale_rejected == len(old)
+    # the live generation is intact: finishing it assembles the NEW model
+    out = None
+    for msg in new[1:]:
+        out = asm.add(msg)
+    assert out is not None
+    assert out.tobytes() == flat_new.tobytes()
+
+
+def test_full_churn_round_replays_identically(tmp_path):
+    """Late join + leave-with-rejoin + the stale replay, run twice from
+    scratch: identical membership, attribution, and final bytes."""
+    plan = FaultPlan(late_joins=(LateJoin(3, at_round=0),),
+                     leaves=(Leave(1, at_round=0, rejoin=True),))
+
+    def scenario(tag):
+        sim = _sim(rounds=2, faults=plan, downlink_mode="medium")
+        rs = [sim.run_round(), sim.run_round()]
+        return (sim.server.global_params.tobytes(),
+                [(r.round, tuple(r.reporters), tuple(r.dropped),
+                  tuple(sorted(r.fault_attribution.items()))) for r in rs])
+    assert scenario("a") == scenario("b")

@@ -1,0 +1,207 @@
+"""Client crash-resume: the durable per-round client checkpoint.
+
+``FLClient.save_client_state`` journals everything a rebooted device
+needs (installed params + residual reference, the error-feedback replay
+pair, in-progress downlink reassembly) through the same CBOR checkpoint
+substrate as the server's aggregation snapshot.  The oracle mirrors the
+server-side one: a client that crashes at any round coordinate
+(download / train / upload / repair), reboots, and restores its
+checkpoint MUST leave the round's final global model byte-identical to
+the crash-free run — while retransmitting strictly fewer payload bytes
+than a from-scratch redo (docs/fault_model.md, client-checkpoint
+format).
+"""
+import numpy as np
+import pytest
+
+from repro.fl import (BackoffPolicy, ChunkLoss, ClientCrash, FaultPlan,
+                      RoundPolicy)
+from test_round_recovery import _sim
+
+VICTIM = 2
+_POLICY = RoundPolicy(deadline_s=3000.0, train_time_s=5.0,
+                      backoff=BackoffPolicy(initial_s=0.1))
+
+
+def _loss(rate):
+    # seeded per-(window, chunk, client) verdicts: the crash run and its
+    # crash-free reference lose the SAME chunks (scheduling-independent)
+    return ChunkLoss(rate=rate, seed=17) if rate > 0.0 else None
+
+
+def _crash(phase, rate=0.0, **kw):
+    return FaultPlan(chunk_loss=_loss(rate), client_crashes=(
+        ClientCrash(client=VICTIM, phase=phase, resume=True, **kw),))
+
+
+_REFS: dict = {}
+
+
+def _ref_global(mode, encoding, rate):
+    """Crash-free reference global for one (uplink, encoding, loss)
+    cell, computed once per test session."""
+    key = (mode, encoding, rate)
+    if key not in _REFS:
+        sim = _sim(rounds=1, downlink_mode="medium", uplink_mode=mode,
+                   chunk_encoding=encoding,
+                   faults=FaultPlan(chunk_loss=_loss(rate)),
+                   policy=_POLICY)
+        r = sim.run_round()
+        assert sorted(r.reporters) == [0, 1, 2, 3]
+        _REFS[key] = sim.server.global_params.tobytes()
+    return _REFS[key]
+
+
+# the differential recovery matrix: uplink mode x encoding x loss x
+# crash coordinate.  Every cell must be bit-identical to its crash-free
+# reference with the victim present and attributed "crash-resumed".
+MATRIX = [
+    # (uplink,       encoding,       drop, phase,      crash coordinate)
+    ("sequential",   "ta-float32le", 0.0,  "download",
+     dict(at_window=0, at_chunk=2)),
+    ("sequential",   "ta-float32le", 0.4,  "upload",
+     dict(at_window=0, at_chunk=3)),
+    ("sequential",   "q8-block",      0.2,  "train", {}),
+    ("sequential",   "ta-float32le", 0.2,  "repair",
+     dict(at_window=1, at_frame=5)),
+    ("interleaved",  "ta-float32le", 0.0,  "upload",
+     dict(at_window=0, at_frame=40)),
+    ("interleaved",  "ta-float32le", 0.4,  "repair",
+     dict(at_window=1, at_frame=10)),
+    ("interleaved",  "q8-block",      0.2,  "download",
+     dict(at_window=0, at_chunk=1)),
+    ("interleaved",  "ta-float32le", 0.2,  "train", {}),
+]
+
+
+@pytest.mark.parametrize("mode,encoding,drop,phase,coord", MATRIX)
+def test_client_crash_resume_bit_identical(tmp_path, mode, encoding,
+                                           drop, phase, coord):
+    ref = _ref_global(mode, encoding, drop)
+    sim = _sim(rounds=1, client_ckpt=tmp_path / "cli",
+               downlink_mode="medium", uplink_mode=mode,
+               chunk_encoding=encoding,
+               faults=_crash(phase, rate=drop, **coord), policy=_POLICY)
+    res = sim.run_round()
+    assert VICTIM in res.reporters, res.fault_attribution
+    assert res.fault_attribution.get(VICTIM) == "crash-resumed"
+    assert sim.server.global_params.tobytes() == ref
+
+
+def test_crash_without_checkpoint_is_plain_dropout(tmp_path):
+    """No ``checkpoint_dir``: the same resumable crash degrades to the
+    legacy silent dropout (nothing to restore)."""
+    sim = _sim(rounds=1, downlink_mode="medium",
+               faults=_crash("train"), policy=_POLICY)
+    res = sim.run_round()
+    assert VICTIM in res.dropped and VICTIM not in res.reporters
+    assert res.fault_attribution.get(VICTIM) == "crash"
+
+
+# -- strictly fewer retransmitted bytes ---------------------------------------
+
+def test_upload_resume_retransmits_strictly_fewer_bytes(tmp_path):
+    """The resumed uplink polls first and re-sends only the NACK'd
+    chunks: ``retransmitted_payload_bytes`` of the poll-first transfer is
+    strictly negative (the checkpoint saved real bytes), bounded below by
+    minus the full stream."""
+    sim = _sim(rounds=1, client_ckpt=tmp_path / "cli",
+               downlink_mode="medium",
+               faults=_crash("upload", at_window=0, at_chunk=3),
+               policy=_POLICY)
+    victim_reports = []
+    orig = sim._collect_chunked
+    def spy(cid, **kw):
+        out = orig(cid, **kw)
+        if cid == VICTIM:
+            victim_reports.append((bool(kw.get("poll_first")),
+                                   sim.last_uplink_report))
+        return out
+    sim._collect_chunked = spy
+    res = sim.run_round()
+    assert res.fault_attribution.get(VICTIM) == "crash-resumed"
+    # two transfers: the crashed original, then the poll-first resume
+    assert [p for p, _ in victim_reports] == [False, True]
+    resumed = victim_reports[1][1]
+    assert -resumed.initial_payload_bytes < \
+        resumed.retransmitted_payload_bytes < 0
+
+
+def test_download_resume_retransmits_strictly_fewer_chunks(tmp_path):
+    """A mid-download crash after k verified (journaled) chunks resumes
+    holding them: the repair window re-sends strictly fewer chunks than
+    the full stream."""
+    ref = _sim(rounds=1, downlink_mode="medium", policy=_POLICY)
+    ref.run_round()
+    full = ref.last_downlink_report
+    sim = _sim(rounds=1, client_ckpt=tmp_path / "cli",
+               downlink_mode="medium",
+               faults=_crash("download", at_window=0, at_chunk=3),
+               policy=_POLICY)
+    res = sim.run_round()
+    assert res.fault_attribution.get(VICTIM) == "crash-resumed"
+    dl = sim.last_downlink_report
+    # window 0 sent the full stream; the resume repair window re-sent
+    # only what the restored checkpoint did NOT hold
+    resent = dl.chunk_sends - full.chunk_sends
+    assert 0 < resent < dl.num_chunks
+    assert sim.server.global_params.tobytes() == \
+        ref.server.global_params.tobytes()
+
+
+# -- the checkpoint format round-trips the whole client ------------------------
+
+def test_client_checkpoint_roundtrip_bit_exact(tmp_path):
+    """save -> reboot -> restore reproduces params, generation, residual
+    reference, and error-feedback replay state bit-exactly (q8 uplink so
+    the EF pair is live)."""
+    sim = _sim(rounds=1, client_ckpt=tmp_path / "cli",
+               chunk_encoding="q8-block")
+    sim.run_round()
+    c = sim.clients[0]
+    from repro.core.params_codec import flatten_params
+    flat0, _ = flatten_params(c.params)
+    ef0 = (None if c.error_feedback.residual is None
+           else c.error_feedback.residual.tobytes())
+    efp0 = None if c._ef_prev is None else c._ef_prev.tobytes()
+    state0 = (c.round, c.model_id, c.samples_seen, c._ef_round,
+              c.last_global_flat.tobytes())
+    c.save_client_state()
+    c.simulate_crash()
+    assert c.params is None and c.model_id is None
+    assert c.try_restore_client()
+    flat1, _ = flatten_params(c.params)
+    assert flat0.tobytes() == flat1.tobytes()
+    assert (c.round, c.model_id, c.samples_seen, c._ef_round,
+            c.last_global_flat.tobytes()) == state0
+    ef1 = (None if c.error_feedback.residual is None
+           else c.error_feedback.residual.tobytes())
+    assert ef1 == ef0
+    efp1 = None if c._ef_prev is None else c._ef_prev.tobytes()
+    assert efp1 == efp0
+    assert c.training_enabled
+
+
+def test_restore_rejects_unknown_leaf_layout(tmp_path):
+    """A checkpoint whose header names an unrecognised leaf (a future
+    format) is refused cleanly — the client stays a plain dropout."""
+    sim = _sim(rounds=1, client_ckpt=tmp_path / "cli")
+    sim.run_round()
+    c = sim.clients[0]
+    c.save_client_state()
+    mgr = c._ckpt()
+    hdr = mgr.peek_named("client_state")
+    assert hdr is not None
+    tree = {"mystery_leaf": np.zeros(4, dtype="<f4")}
+    mgr.save_named("client_state", tree, round_=c.round,
+                   meta={"leaves": ["mystery_leaf"]})
+    c.simulate_crash()
+    assert not c.try_restore_client()
+
+
+def test_restore_without_checkpoint_returns_false(tmp_path):
+    sim = _sim(rounds=1, client_ckpt=tmp_path / "cli")
+    c = sim.clients[0]
+    assert not c.try_restore_client()       # nothing saved yet
+    sim2 = _sim(rounds=1)
+    assert not sim2.clients[0].try_restore_client()     # no directory

@@ -1,0 +1,153 @@
+"""Adversarial decoder hardening: corrupted, truncated, and random bytes
+through ``fastpath.decode`` / ``decode_segments`` must ALWAYS either
+decode cleanly or raise ``CBORDecodeError`` / ``ValueError`` — never any
+other exception type (UnicodeDecodeError, IndexError, struct.error,
+MemoryError from attacker-controlled lengths, ...).
+
+Seeded and exhaustive-at-the-edges rather than time-based: every mutation
+is derived from a fixed RNG seed, so a failure reproduces forever.  The
+same adversarial streams also run through the segmented decode path
+(split at every-k-byte boundaries) — the cursor logic has its own
+boundary arithmetic to harden.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cbor, fastpath
+from repro.core.cbor import CBORDecodeError, Tag
+
+# exception types the codec contract allows on malformed input:
+# CBORDecodeError for wire-format violations, ValueError for the
+# untrusted-size guards (CBORDecodeError already IS a ValueError)
+_ALLOWED = (CBORDecodeError, ValueError)
+
+# representative corpus: every major type, nesting, typed arrays, text,
+# indefinite-length strings/containers, bignums, floats
+_CORPUS_OBJECTS = [
+    0, 23, 24, 255, 256, 2**32, 2**63, -1, -25, -2**40,
+    b"", b"x", b"\x00" * 64,
+    "", "a", "text-string", "ü水\U00010151",
+    [], [1, [2, [3, [4]]]], {"k": "v", "n": {"m": [1.5, None, True]}},
+    1.5, float("inf"), float("nan"), -0.0,
+    None, True, False,
+    Tag(0, "2026-08-08T00:00:00Z"), Tag(2, b"\x01\x02"),
+    np.arange(7, dtype="<f4"), np.arange(3, dtype="<f8"),
+    {"params": np.linspace(0, 1, 33, dtype="<f4").tobytes()},
+]
+# typed arrays only exist on the fast path (RFC 8746); everything else
+# encodes identically through either codec
+CORPUS = [fastpath.encode(o) if isinstance(o, np.ndarray)
+          else cbor.encode(o) for o in _CORPUS_OBJECTS]
+# hand-written adversarial prefixes that pure mutation rarely reaches
+CORPUS += [
+    b"\x62\xff\xfe",              # tstr(2) carrying invalid UTF-8
+    b"\x7f\x62\xc3\xff\xff",      # indefinite tstr, torn UTF-8 chunk
+    b"\x9b\xff\xff\xff\xff\xff\xff\xff\xff",   # array claiming 2^64-1 items
+    b"\xbb\xff\xff\xff\xff\xff\xff\xff\xff",   # map claiming 2^64-1 pairs
+    b"\x5b\xff\xff\xff\xff\xff\xff\xff\xff",   # bstr claiming 2^64-1 bytes
+    b"\x7f\x41\x41\xff",          # bstr chunk inside indefinite tstr
+    b"\xd8",                      # tag head, no tag number
+    b"\xf8\x1f",                  # reserved simple value 31
+    b"\xff",                      # lone BREAK
+    b"\x1c", b"\x1d", b"\x1e",    # reserved additional-info values
+]
+
+
+def _attempt(data):
+    """Decode must be total: a value or an allowed error, nothing else."""
+    try:
+        fastpath.decode(data, copy=True)
+    except _ALLOWED:
+        pass
+    return True
+
+
+def _attempt_segmented(data, k):
+    segs = [data[i:i + k] for i in range(0, len(data), k)] or [b""]
+    try:
+        fastpath.decode_segments(segs, copy=True)
+    except _ALLOWED:
+        pass
+    return True
+
+
+@pytest.mark.parametrize("idx", range(len(CORPUS)))
+def test_truncation_at_every_boundary(idx):
+    data = CORPUS[idx]
+    for cut in range(len(data)):
+        assert _attempt(data[:cut])
+        assert _attempt_segmented(data[:cut], 3)
+
+
+@pytest.mark.parametrize("idx", range(len(CORPUS)))
+def test_single_byte_corruption_everywhere(idx):
+    data = bytearray(CORPUS[idx])
+    for pos in range(len(data)):
+        for flip in (0x01, 0x80, 0xFF):
+            mutated = bytes(data[:pos]) + bytes([data[pos] ^ flip]) \
+                + bytes(data[pos + 1:])
+            assert _attempt(mutated)
+            assert _attempt_segmented(mutated, 5)
+
+
+def test_random_byte_streams_never_crash():
+    rng = np.random.default_rng(0xFA57)
+    for _ in range(400):
+        n = int(rng.integers(0, 96))
+        blob = rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+        assert _attempt(blob)
+        assert _attempt_segmented(blob, int(rng.integers(1, 9)))
+
+
+def test_random_splices_of_valid_prefixes():
+    """Frankenstein streams: valid encodings cut and concatenated — the
+    shapes real frame corruption + reassembly bugs produce."""
+    rng = np.random.default_rng(0xC0FFEE)
+    for _ in range(300):
+        a = CORPUS[int(rng.integers(len(CORPUS)))]
+        b = CORPUS[int(rng.integers(len(CORPUS)))]
+        cut_a = int(rng.integers(0, len(a) + 1))
+        cut_b = int(rng.integers(0, len(b) + 1))
+        assert _attempt(a[:cut_a] + b[cut_b:])
+
+
+def test_invalid_utf8_text_string_is_codec_error():
+    """Regression: MT_TSTR payloads that are not valid UTF-8 must raise
+    CBORDecodeError, not leak UnicodeDecodeError."""
+    with pytest.raises(CBORDecodeError):
+        fastpath.decode(b"\x62\xff\xfe")
+    with pytest.raises(CBORDecodeError):
+        fastpath.decode(b"\x78\x04\xed\xa0\x80\x41")    # lone surrogate
+    with pytest.raises(CBORDecodeError):
+        fastpath.decode_segments([b"\x62\xff", b"\xfe"])
+    # the oracle decoder agrees it is an error
+    with pytest.raises(Exception):
+        cbor.decode(b"\x62\xff\xfe")
+
+
+def test_valid_corpus_still_round_trips():
+    """The fuzz harness's own corpus sanity: untouched encodings decode
+    and agree with the oracle."""
+    for obj, data in zip(_CORPUS_OBJECTS, CORPUS):
+        got = fastpath.decode(data, copy=True)
+        if isinstance(obj, np.ndarray):
+            continue        # RFC 8746 arrays: fast-path-only encoding
+        oracle = cbor.decode(data)
+        if isinstance(oracle, float) and oracle != oracle:
+            assert got != got
+        else:
+            assert _canon(got) == _canon(oracle)
+
+
+def _canon(v):
+    if isinstance(v, (bytes, bytearray, memoryview)):
+        return bytes(v)
+    if isinstance(v, np.ndarray):
+        return (str(v.dtype), v.tobytes())
+    if isinstance(v, list):
+        return [_canon(x) for x in v]
+    if isinstance(v, dict):
+        return {k: _canon(x) for k, x in v.items()}
+    if isinstance(v, Tag):
+        return ("tag", v.tag, _canon(v.value))
+    return v

@@ -43,7 +43,9 @@ SEED = 8
 
 def _sim(tmp_path=None, *, rounds=2, drop_prob=0.0, seed=SEED,
          chunk_elems=CHUNK, uplink_mode="sequential", reorder=0.0,
-         faults=None, policy=None, min_fraction=0.5, straggler=None):
+         faults=None, policy=None, min_fraction=0.5, straggler=None,
+         downlink_mode="link", client_ckpt=None, chunk_encoding=None,
+         residual=False):
     params = lenet5.init_params(jax.random.PRNGKey(seed))
     flat, spec = flatten_params(params)
     data = synthetic_mnist(N * 200, seed=seed)
@@ -52,7 +54,8 @@ def _sim(tmp_path=None, *, rounds=2, drop_prob=0.0, seed=SEED,
         FLClient(client_id=i, data=shards[i], loss_fn=lenet5.loss_fn,
                  spec=spec, local_epochs=1, batch_size=32,
                  sgd=SGDConfig(lr=0.05), seed=seed,
-                 straggler_factor=(straggler or {}).get(i, 1.0))
+                 straggler_factor=(straggler or {}).get(i, 1.0),
+                 checkpoint_dir=str(client_ckpt) if client_ckpt else None)
         for i in range(N)
     ]
     cfg = OrchestrationConfig(
@@ -60,10 +63,15 @@ def _sim(tmp_path=None, *, rounds=2, drop_prob=0.0, seed=SEED,
         num_rounds=rounds, min_local_samples=32, seed=seed,
         checkpoint_dir=str(tmp_path) if tmp_path else None)
     server = FLServer(cfg, flat)
+    extra = {}
+    if chunk_encoding is not None:
+        extra["chunk_encoding"] = chunk_encoding
     return FLSimulation(server, clients, drop_prob=drop_prob, seed=seed,
                         chunk_elems=chunk_elems, uplink_mode=uplink_mode,
                         uplink_reorder_prob=reorder,
-                        faults=faults, round_policy=policy)
+                        faults=faults, round_policy=policy,
+                        downlink_mode=downlink_mode,
+                        residual_uplink=residual, **extra)
 
 
 def _restart(sim, *, faults=None, policy=None):
@@ -78,7 +86,10 @@ def _restart(sim, *, faults=None, policy=None):
                         chunk_elems=sim.chunk_elems,
                         uplink_mode=sim.uplink_mode,
                         uplink_reorder_prob=sim.uplink_reorder_prob,
-                        faults=faults, round_policy=policy)
+                        faults=faults, round_policy=policy,
+                        downlink_mode=sim.downlink_mode,
+                        chunk_encoding=sim.chunk_encoding,
+                        residual_uplink=sim.residual_uplink)
 
 
 def _n_chunks(sim):
@@ -383,3 +394,51 @@ def test_backoff_stretches_repairs_under_loss_same_model():
     assert r1.clock_s > r0.clock_s
     assert base.server.global_params.tobytes() == \
         backed.server.global_params.tobytes()
+
+
+# -- the deadline boundary (pinned semantics) ----------------------------------
+#
+# The contract (``RoundEngine._deadline_gate`` docstring): a transfer may
+# not START at or after the deadline — ``start >= deadline_s`` makes the
+# client a straggler before any airtime is spent — while a transfer
+# COMPLETING exactly at the deadline still counts (``_missed_deadline``
+# is strict ``clock > deadline_s``).
+
+def test_deadline_gate_start_exactly_at_deadline_is_straggler():
+    sim = _sim(rounds=1)
+    eng = RoundEngine(sim)
+    eng.policy = RoundPolicy(deadline_s=10.0)
+    # start strictly before the deadline: allowed
+    assert eng._deadline_gate(0, {0: 9.999}) is True
+    assert eng.stragglers == []
+    # start exactly AT the deadline: culled before any airtime
+    assert eng._deadline_gate(1, {1: 10.0}) is False
+    # start after the deadline: culled
+    assert eng._deadline_gate(2, {2: 10.5}) is False
+    assert eng.stragglers == [1, 2]
+
+
+def test_missed_deadline_completion_exactly_at_deadline_counts():
+    sim = _sim(rounds=1)
+    eng = RoundEngine(sim)
+    eng.policy = RoundPolicy(deadline_s=10.0)
+    sim.link.advance_to_round(10.0)
+    # the transfer finished exactly at the deadline: NOT missed
+    assert eng._missed_deadline(0) is False
+    assert eng.stragglers == []
+    sim.link.advance_to_round(10.0 + 1e-9)
+    assert eng._missed_deadline(1) is True
+    assert eng.stragglers == [1]
+
+
+def test_deadline_boundary_culls_exact_start_in_a_real_round():
+    # straggler_factor tuned so client 3's upload would START exactly at
+    # the deadline: the gate must cull it (and only it), deterministically
+    policy = RoundPolicy(deadline_s=40.0, train_time_s=5.0)
+    probe = _sim(rounds=1, policy=RoundPolicy(deadline_s=None,
+                                              train_time_s=5.0))
+    probe.run_round()
+    sim = _sim(rounds=1, policy=policy, straggler={3: 1e6})
+    r = sim.run_round()
+    assert 3 in r.stragglers and 3 not in r.reporters
+    assert r.fault_attribution.get(3) == "deadline"

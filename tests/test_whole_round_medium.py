@@ -1,0 +1,134 @@
+"""Whole-round fault domain: dissemination, feedback, and uplink all on
+ONE ``SharedMedium``.
+
+With ``downlink_mode="medium"`` the RoundEngine opens a per-round
+contention domain; ``run_medium_downlink`` multicasts the chunked global
+model frame-by-frame through ``SharedMedium.transmit_downlink`` and the
+interleaved uplink continues on the *same* virtual clock, RNG stream,
+and ``FaultPlan`` — so one seed governs blackouts, frame damage, and
+feedback loss across the entire round, and ``MediumReport`` accounts
+dissemination airtime alongside uplink airtime (docs/fault_model.md).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.fl import (
+    BackoffPolicy,
+    Blackout,
+    ClientCrash,
+    FaultPlan,
+    FeedbackLoss,
+    FrameFault,
+    RoundPolicy,
+)
+from test_round_recovery import _sim
+
+pytestmark = []
+
+
+def test_medium_downlink_matches_link_bit_identical():
+    """Fault-free: routing dissemination over the medium changes the
+    clock accounting, never the delivered bytes — the installed global
+    after one round is byte-identical to the plain-link downlink."""
+    a = _sim(rounds=1)
+    a.run_round()
+    b = _sim(rounds=1, downlink_mode="medium")
+    rb = b.run_round()
+    assert sorted(rb.reporters) == [0, 1, 2, 3]
+    assert a.server.global_params.tobytes() == \
+        b.server.global_params.tobytes()
+    # dissemination airtime is accounted even with a sequential uplink
+    mr = b.last_medium_report
+    assert mr is not None
+    assert mr.downlink_airtime_s > 0.0
+    assert 0.0 < mr.downlink_busy_s <= mr.downlink_airtime_s
+
+
+def test_monolithic_downlink_on_medium():
+    """``chunk_elems=None``: the monolithic multicast global-model update
+    also rides the medium (one CON transfer on the round clock)."""
+    a = _sim(rounds=1, chunk_elems=None)
+    a.run_round()
+    b = _sim(rounds=1, chunk_elems=None, downlink_mode="medium")
+    b.run_round()
+    assert a.server.global_params.tobytes() == \
+        b.server.global_params.tobytes()
+    mr = b.last_medium_report
+    assert mr is not None and mr.downlink_airtime_s > 0.0
+
+
+def test_interleaved_uplink_continues_downlink_clock():
+    """Whole-round medium: the uplink report's airtime axis contains the
+    dissemination's share — downlink airtime is a strict prefix of the
+    round's total medium airtime."""
+    sim = _sim(rounds=1, downlink_mode="medium", uplink_mode="interleaved")
+    r = sim.run_round()
+    assert sorted(r.reporters) == [0, 1, 2, 3]
+    mr = sim.last_medium_report
+    assert mr is not None
+    assert 0.0 < mr.downlink_airtime_s < mr.airtime_s
+    assert 0.0 < mr.downlink_busy_s < mr.busy_s
+    # every uplink completion happened after dissemination finished
+    assert all(t >= mr.downlink_airtime_s
+               for t in mr.per_client_done_s.values() if t is not None)
+
+
+# -- the acceptance criterion: one seed, two runs, byte-identical --------------
+
+_PLAN = FaultPlan(
+    blackouts=(Blackout(0.4, 0.9),),
+    frame_faults=(FrameFault(kind="corrupt", client=1, window=0,
+                             chunk_index=2),),
+    feedback_losses=(FeedbackLoss(client=3, window=0),),
+    client_crashes=(ClientCrash(client=2, phase="upload", at_window=0,
+                                at_frame=30, at_chunk=1, resume=True),),
+)
+_POLICY = RoundPolicy(deadline_s=600.0, train_time_s=5.0,
+                      backoff=BackoffPolicy(initial_s=0.1))
+
+
+def _medium_round(tmp, drop=0.1):
+    sim = _sim(tmp / "srv", client_ckpt=tmp / "cli", drop_prob=drop,
+               rounds=1, downlink_mode="medium", uplink_mode="interleaved",
+               faults=_PLAN, policy=_POLICY)
+    res = sim.run_round()
+    mr = sim.last_medium_report
+    return (sim.server.global_params.tobytes(),
+            dataclasses.asdict(mr),
+            dataclasses.asdict(res))
+
+
+def test_whole_round_fault_plan_replays_byte_identical(tmp_path):
+    """One FaultPlan over downlink + feedback + uplink on one medium,
+    run twice from scratch: byte-identical final global, MediumReport
+    (airtime, busy split, downlink share, per-client completion, wire
+    stats), and RoundResult including fault attribution."""
+    g1, mr1, res1 = _medium_round(tmp_path / "a")
+    g2, mr2, res2 = _medium_round(tmp_path / "b")
+    assert g1 == g2
+    assert mr1 == mr2
+    assert res1 == res2
+    # the plan's resumable upload crash actually exercised the resume path
+    assert res1["fault_attribution"].get(2) == "crash-resumed"
+    assert 2 in res1["reporters"]
+    assert mr1["downlink_airtime_s"] > 0.0
+
+
+def test_downlink_blackout_covered_by_round_clock(tmp_path):
+    """A blackout scheduled inside the dissemination phase suppresses
+    downlink deliveries (repair windows grow), which is only possible
+    when dissemination runs on the round's virtual clock."""
+    quiet = _sim(rounds=1, downlink_mode="medium")
+    quiet.run_round()
+    plan = FaultPlan(blackouts=(Blackout(0.0, quiet.last_medium_report
+                                         .downlink_airtime_s * 0.8),))
+    noisy = _sim(rounds=1, downlink_mode="medium", faults=plan)
+    r = noisy.run_round()
+    assert noisy.last_downlink_report.windows > \
+        quiet.last_downlink_report.windows
+    # dissemination still converges once the blackout lifts
+    assert sorted(r.reporters) == [0, 1, 2, 3]
+    assert noisy.server.global_params.tobytes() == \
+        quiet.server.global_params.tobytes()
