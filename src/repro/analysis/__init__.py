@@ -1,0 +1,19 @@
+"""Static-analysis subsystem: the CI tier that proves invariants statically.
+
+Three independent gates, each runnable as a module CLI:
+
+* ``repro.analysis.cddl_parser`` — compiles the authoritative CDDL text
+  (``core/schemas.cddl``) into the ``core.cddl`` combinator tree.
+* ``repro.analysis.drift`` — schema-drift gate: text-compiled vs
+  hand-built validators must accept/reject identically over the full
+  message corpus plus generated adversarial near-miss mutants.
+* ``repro.analysis.statemachine`` — round-lifecycle model checker:
+  declared transition tables, exhaustive small-configuration exploration
+  under fault interleavings, conformance shims against the real
+  implementations.
+* ``repro.analysis.lint`` — AST lint passes guarding the zero-copy,
+  bit-determinism and accumulation invariants (pragma escapes:
+  ``# copy-ok:``, ``# accum-ok:``, ``# det-ok:`` — reason required).
+
+See docs/static_analysis.md.
+"""

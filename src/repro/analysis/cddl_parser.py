@@ -1,0 +1,327 @@
+"""RFC 8610-subset CDDL text parser compiling to ``core.cddl`` combinators.
+
+The grammar subset is exactly what ``core/schemas.cddl`` needs — the
+point is not a general CDDL implementation but a second, *independent*
+route from the paper's schema text to executable validators, so the
+schema-drift gate (``repro.analysis.drift``) can prove the hand-built
+``SCHEMAS`` combinators and the committed ``.cddl`` text still agree:
+
+    rule      = ident "=" type
+    type      = type1 *("/" type1)                 ; choice
+    type1     = "#6." uint "(" type ")"            ; tagged
+              | "[" group "]"                      ; array
+              | "(" group ")"                      ; group (spliced)
+              | "uint" | "float" | "bool"
+              | "bstr" [".size" uint]
+              | ident                              ; rule reference
+    group     = grpent *("," grpent) [","]
+    grpent    = ["?" | "+"] [ident ":"] type       ; occurrence + member key
+
+Member keys (``name:``) are documentation labels — dropped at compile
+time, exactly as the hand-built combinators drop them.  Compilation is
+structural: a compiled rule is built from the same ``Node`` dataclasses
+as ``core.cddl``, so two trees that match compare equal (`==`) and
+produce byte-identical error messages.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any
+
+from repro.core.cddl import (
+    ArrayOf,
+    Bool,
+    Bstr,
+    Choice,
+    Float,
+    Group,
+    Node,
+    OneOrMore,
+    Optional_,
+    Tagged,
+    Uint,
+)
+
+SCHEMA_PATH = Path(__file__).resolve().parents[1] / "core" / "schemas.cddl"
+
+# CDDL rule name -> core.cddl.SCHEMAS key (the runtime registry uses the
+# paper's Listing titles; the .cddl text uses CDDL-idiomatic kebab-case).
+MESSAGE_RULES: dict[str, str] = {
+    "fl-global-model-update": "FL_Global_Model_Update",
+    "fl-local-dataset-update": "FL_Local_DataSet_Update",
+    "fl-local-model-update": "FL_Local_Model_Update",
+    "fl-model-chunk": "FL_Model_Chunk",
+    "fl-chunk-nack": "FL_Chunk_Nack",
+    "fl-chunk-ack": "FL_Chunk_Ack",
+}
+
+
+class CDDLParseError(ValueError):
+    """Raised on any lexical, syntactic or semantic error in the text."""
+
+
+# ---------------------------------------------------------------------------
+# Lexer
+
+_TOKEN_RE = re.compile(
+    r"""
+    (?P<ws>      \s+ )
+  | (?P<comment> ;[^\n]* )
+  | (?P<tag>     \#6\.(?:0x[0-9a-fA-F]+|\d+) )
+  | (?P<size>    \.size\b )
+  | (?P<number>  0x[0-9a-fA-F]+|\d+ )
+  | (?P<ident>   [A-Za-z_][A-Za-z0-9_-]* )
+  | (?P<punct>   [=/\[\](),?+:] )
+    """,
+    re.VERBOSE,
+)
+
+
+@dataclass(frozen=True)
+class Token:
+    kind: str        # "tag" | "size" | "number" | "ident" | "punct" | "eof"
+    text: str
+    line: int
+
+
+def tokenize(text: str) -> list[Token]:
+    tokens: list[Token] = []
+    pos, line = 0, 1
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if m is None:
+            raise CDDLParseError(
+                f"line {line}: unexpected character {text[pos]!r}")
+        kind = m.lastgroup or ""
+        chunk = m.group()
+        if kind not in ("ws", "comment"):
+            tokens.append(Token(kind, chunk, line))
+        line += chunk.count("\n")
+        pos = m.end()
+    tokens.append(Token("eof", "", line))
+    return tokens
+
+
+# ---------------------------------------------------------------------------
+# Parser: tokens -> AST (plain tuples, no behavior)
+#
+#   ("choice", [t, ...])         ("tagged", tag:int, t)
+#   ("array", [entry, ...])      ("group", [entry, ...])
+#   ("prim", name, size|None)    ("ref", name)
+#   entry := ("entry", occur in {None, "?", "+"}, t)
+
+_PRIMITIVES = ("uint", "float", "bool", "bstr")
+
+
+class _Parser:
+    def __init__(self, tokens: list[Token]) -> None:
+        self._toks = tokens
+        self._i = 0
+
+    def _peek(self, ahead: int = 0) -> Token:
+        return self._toks[min(self._i + ahead, len(self._toks) - 1)]
+
+    def _next(self) -> Token:
+        tok = self._toks[self._i]
+        if tok.kind != "eof":
+            self._i += 1
+        return tok
+
+    def _expect(self, kind: str, text: str | None = None) -> Token:
+        tok = self._next()
+        if tok.kind != kind or (text is not None and tok.text != text):
+            want = text if text is not None else kind
+            raise CDDLParseError(
+                f"line {tok.line}: expected {want!r}, got {tok.text!r}")
+        return tok
+
+    def parse_rules(self) -> dict[str, Any]:
+        rules: dict[str, Any] = {}
+        while self._peek().kind != "eof":
+            name_tok = self._expect("ident")
+            if name_tok.text in _PRIMITIVES:
+                raise CDDLParseError(
+                    f"line {name_tok.line}: cannot redefine primitive "
+                    f"{name_tok.text!r}")
+            if name_tok.text in rules:
+                raise CDDLParseError(
+                    f"line {name_tok.line}: duplicate rule {name_tok.text!r}")
+            self._expect("punct", "=")
+            rules[name_tok.text] = self._parse_type()
+        return rules
+
+    def _parse_type(self) -> Any:
+        options = [self._parse_type1()]
+        while self._peek().kind == "punct" and self._peek().text == "/":
+            self._next()
+            options.append(self._parse_type1())
+        if len(options) == 1:
+            return options[0]
+        return ("choice", options)
+
+    def _parse_type1(self) -> Any:
+        tok = self._peek()
+        if tok.kind == "tag":
+            self._next()
+            tag = int(tok.text[3:], 0)  # strip "#6."
+            self._expect("punct", "(")
+            inner = self._parse_type()
+            self._expect("punct", ")")
+            return ("tagged", tag, inner)
+        if tok.kind == "punct" and tok.text == "[":
+            self._next()
+            entries = self._parse_group("]")
+            return ("array", entries)
+        if tok.kind == "punct" and tok.text == "(":
+            self._next()
+            entries = self._parse_group(")")
+            return ("group", entries)
+        if tok.kind == "ident":
+            self._next()
+            if tok.text in _PRIMITIVES:
+                size = None
+                if tok.text == "bstr" and self._peek().kind == "size":
+                    self._next()
+                    size = int(self._expect("number").text, 0)
+                return ("prim", tok.text, size)
+            return ("ref", tok.text)
+        raise CDDLParseError(
+            f"line {tok.line}: expected a type, got {tok.text!r}")
+
+    def _parse_group(self, closer: str) -> list[Any]:
+        entries: list[Any] = []
+        while not (self._peek().kind == "punct"
+                   and self._peek().text == closer):
+            entries.append(self._parse_grpent())
+            tok = self._peek()
+            if tok.kind == "punct" and tok.text == ",":
+                self._next()
+            elif not (tok.kind == "punct" and tok.text == closer):
+                raise CDDLParseError(
+                    f"line {tok.line}: expected ',' or {closer!r}, "
+                    f"got {tok.text!r}")
+        self._next()  # the closer
+        if not entries:
+            raise CDDLParseError("empty group/array is not in the subset")
+        return entries
+
+    def _parse_grpent(self) -> Any:
+        occur = None
+        tok = self._peek()
+        if tok.kind == "punct" and tok.text in ("?", "+"):
+            occur = tok.text
+            self._next()
+        # member key: ident ":" (lookahead — bare idents are rule refs)
+        if (self._peek().kind == "ident"
+                and self._peek(1).kind == "punct"
+                and self._peek(1).text == ":"):
+            self._next()
+            self._next()
+        return ("entry", occur, self._parse_type())
+
+
+def parse(text: str) -> dict[str, Any]:
+    """Parse CDDL text into an AST rule map (name -> type AST)."""
+    return _Parser(tokenize(text)).parse_rules()
+
+
+# ---------------------------------------------------------------------------
+# Compiler: AST -> core.cddl Node trees
+
+class _Compiler:
+    def __init__(self, rules: dict[str, Any]) -> None:
+        self._rules = rules
+        self._memo: dict[str, Node] = {}
+        self._in_progress: set[str] = set()
+
+    def rule(self, name: str) -> Node:
+        if name in self._memo:
+            return self._memo[name]
+        if name not in self._rules:
+            raise CDDLParseError(f"reference to undefined rule {name!r}")
+        if name in self._in_progress:
+            raise CDDLParseError(f"recursive rule {name!r} is not supported")
+        self._in_progress.add(name)
+        try:
+            node = self.compile(self._rules[name])
+        finally:
+            self._in_progress.discard(name)
+        self._memo[name] = node
+        return node
+
+    def compile(self, ast: Any) -> Node:
+        kind = ast[0]
+        if kind == "choice":
+            return Choice([self.compile(t) for t in ast[1]])
+        if kind == "tagged":
+            return Tagged(ast[1], self.compile(ast[2]))
+        if kind == "array":
+            return ArrayOf([self._compile_entry(e) for e in ast[1]])
+        if kind == "group":
+            return Group([self._compile_entry(e) for e in ast[1]])
+        if kind == "prim":
+            _, name, size = ast
+            if name == "uint":
+                return Uint()
+            if name == "float":
+                return Float()
+            if name == "bool":
+                return Bool()
+            return Bstr(size)
+        if kind == "ref":
+            return self.rule(ast[1])
+        raise CDDLParseError(f"unknown AST node {kind!r}")
+
+    def _compile_entry(self, entry: Any) -> Node:
+        _, occur, t = entry
+        node = self.compile(t)
+        if occur == "?":
+            return Optional_(node)
+        if occur == "+":
+            return OneOrMore(node)
+        return node
+
+
+def compile_rules(text: str) -> dict[str, Node]:
+    """Compile every rule in ``text`` to a validator Node."""
+    rules = parse(text)
+    compiler = _Compiler(rules)
+    return {name: compiler.rule(name) for name in rules}
+
+
+def compile_schemas(path: Path | str = SCHEMA_PATH) -> dict[str, Node]:
+    """Compile ``schemas.cddl`` to the ``SCHEMAS``-keyed message registry.
+
+    Returns a dict with exactly the keys of ``core.cddl.SCHEMAS`` — the
+    drift gate iterates both side by side.  Raises ``CDDLParseError`` if
+    the text omits a message rule the runtime registry defines.
+    """
+    compiled = compile_rules(Path(path).read_text())
+    out: dict[str, Node] = {}
+    for rule_name, schema_key in MESSAGE_RULES.items():
+        if rule_name not in compiled:
+            raise CDDLParseError(
+                f"schemas.cddl does not define message rule {rule_name!r}")
+        out[schema_key] = compiled[rule_name]
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Compile schemas.cddl and report the rule inventory.")
+    ap.add_argument("path", nargs="?", default=str(SCHEMA_PATH))
+    ns = ap.parse_args(argv)
+    compiled = compile_rules(Path(ns.path).read_text())
+    for name, node in compiled.items():
+        marker = " [message]" if name in MESSAGE_RULES else ""
+        print(f"{name}: {type(node).__name__}{marker}")
+    print(f"{len(compiled)} rules compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,285 @@
+"""Schema-drift gate: hand-built combinators vs text-compiled CDDL.
+
+``core/cddl.py`` hand-builds the validator tree; ``core/schemas.cddl`` is
+the committed schema *text*; ``repro.analysis.cddl_parser`` compiles the
+text into a second tree.  This module proves the two are behaviourally
+identical — accept AND reject, with matching error classes and messages —
+over:
+
+* the **corpus**: every message type × every wire encoding the runtime
+  produces (decoded to the item trees ``validate`` sees), plus
+  hand-written shape variants; every corpus entry must be *accepted* by
+  both sides, and
+* **adversarial near-miss mutants**: seeded single-site perturbations of
+  corpus entries (type swaps, tag shifts, dropped/duplicated/appended
+  elements, truncated UUIDs, negative ints, bool/int confusion, mis-tagged
+  q8 internals).  A mutant may still be valid — the gate requires
+  *agreement*, not rejection — but both sides must land on the same
+  outcome, and any exception that is not ``CDDLValidationError`` fails
+  the gate outright.
+
+Editing either the ``.cddl`` text or the combinators independently makes
+this gate fail in CI:  run ``python -m repro.analysis.drift``.
+"""
+from __future__ import annotations
+
+import random
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import fastpath
+from repro.core.cbor import Tag
+from repro.core.cddl import SCHEMAS, CDDLValidationError, Node
+from repro.core.messages import (
+    FLChunkAck,
+    FLChunkNack,
+    FLGlobalModelUpdate,
+    FLLocalDataSetUpdate,
+    FLLocalModelUpdate,
+    FLModelChunk,
+    ModelMetadata,
+    ParamsEncoding,
+)
+from repro.analysis.cddl_parser import compile_schemas
+
+DEFAULT_MUTANTS = 800
+DEFAULT_SEED = 0x5EED
+
+_KNOWN_TAGS = (37, 72, 84, 85, 86, 0x10001, 0x10002)
+
+
+# ---------------------------------------------------------------------------
+# Corpus: (schema_key, decoded item tree) pairs, all valid by construction.
+
+def _own(item: Any) -> Any:
+    """Deep-copy a decoded item tree into plain owned objects (memoryview
+    payloads become bytes) so mutation sites are hashable/sliceable."""
+    if isinstance(item, Tag):
+        return Tag(item.tag, _own(item.value))
+    if isinstance(item, list):
+        return [_own(v) for v in item]
+    if isinstance(item, (memoryview, bytearray)):
+        return bytes(item)
+    return item
+
+
+def _decode(wire: bytes) -> Any:
+    return _own(fastpath.decode(wire))
+
+
+def build_corpus() -> list[tuple[str, Any]]:
+    mid = uuid.UUID(bytes=bytes(range(16)))
+    small = np.linspace(-1.0, 1.0, 7, dtype=np.float64)
+    wide = np.linspace(-4.0, 4.0, 600, dtype=np.float64)  # >1 q8 block
+    meta = ModelMetadata(train_loss=0.25, val_loss=0.75)
+
+    corpus: list[tuple[str, Any]] = []
+    model_encs = (ParamsEncoding.TA_F16, ParamsEncoding.TA_F32,
+                  ParamsEncoding.TA_F64, ParamsEncoding.TA_BF16,
+                  ParamsEncoding.Q8, ParamsEncoding.DYNAMIC,
+                  ParamsEncoding.ARRAY_F64)
+    for enc in model_encs:
+        for params in (small, wide):
+            corpus.append(("FL_Global_Model_Update", _decode(
+                FLGlobalModelUpdate(mid, 3, params, True).to_cbor(enc))))
+            corpus.append(("FL_Local_Model_Update", _decode(
+                FLLocalModelUpdate(mid, 3, params, meta).to_cbor(enc))))
+
+    corpus.append(("FL_Local_DataSet_Update",
+                   _decode(FLLocalDataSetUpdate(128).to_cbor())))
+    corpus.append(("FL_Local_DataSet_Update",
+                   _decode(FLLocalDataSetUpdate(128, meta).to_cbor())))
+
+    for enc in (ParamsEncoding.TA_F32, ParamsEncoding.TA_F16,
+                ParamsEncoding.Q8):
+        for params in (small, wide):
+            chunk = FLModelChunk(mid, 3, chunk_index=2, num_chunks=5,
+                                 crc32=0xDEADBEEF,
+                                 params=params.astype(np.float32))
+            corpus.append(("FL_Model_Chunk", _decode(chunk.to_cbor(enc))))
+
+    for missing in ((1,), (1, 2, 3), (0, 1, 5, 6, 7, 11)):
+        corpus.append(("FL_Chunk_Nack", _decode(
+            FLChunkNack(mid, 3, num_chunks=12, missing=missing).to_cbor())))
+    corpus.append(("FL_Chunk_Ack",
+                   _decode(FLChunkAck(mid, 3, num_chunks=12).to_cbor())))
+
+    # hand-written shape variants the encoders never emit but the schema
+    # accepts: single-float dynamic params, empty typed-array payload
+    corpus.append(("FL_Global_Model_Update",
+                   [Tag(37, bytes(16)), 0, [1.5], False]))
+    corpus.append(("FL_Local_Model_Update",
+                   [Tag(37, bytes(16)), 0, Tag(85, b""), 0.0, 1.0]))
+    return corpus
+
+
+# ---------------------------------------------------------------------------
+# Mutants: single-site seeded perturbations of corpus entries.
+
+def _sites(item: Any, path: tuple = ()) -> list[tuple]:
+    """Every addressable node in the tree, as access paths.  A path step
+    is an int (list index) or "tag"/"value" (Tag fields)."""
+    out = [path]
+    if isinstance(item, Tag):
+        out += _sites(item.value, path + ("value",))
+    elif isinstance(item, list):
+        for i, v in enumerate(item):
+            out += _sites(v, path + (i,))
+    return out
+
+
+def _get(item: Any, path: tuple) -> Any:
+    for step in path:
+        item = item.value if step == "value" else item[step]
+    return item
+
+
+def _set(item: Any, path: tuple, new: Any) -> Any:
+    """Copy-on-write along ``path``, returning a tree with the node at
+    ``path`` replaced by ``new`` (untouched branches are shared)."""
+    if not path:
+        return new
+    step, rest = path[0], path[1:]
+    if step == "value":
+        return Tag(item.tag, _set(item.value, rest, new))
+    clone = list(item)
+    clone[step] = _set(clone[step], rest, new)
+    return clone
+
+
+def _mutate_value(rng: random.Random, value: Any) -> Any:
+    """One adversarial near-miss of ``value`` (type-directed)."""
+    if isinstance(value, bool):
+        return rng.choice([int(value), 1.0, None, "true"])
+    if isinstance(value, int):
+        return rng.choice([float(value), -1 - value, True, str(value), None])
+    if isinstance(value, float):
+        return rng.choice([int(value), str(value), None, True])
+    if isinstance(value, bytes):
+        return rng.choice([value[:-1] if value else b"\x00",
+                           value + b"\x00", 0, value.decode("latin1")])
+    if isinstance(value, Tag):
+        choice = rng.randrange(4)
+        if choice == 0:
+            return Tag(value.tag + rng.choice([-1, 1]), value.value)
+        if choice == 1:
+            return Tag(rng.choice(_KNOWN_TAGS), value.value)
+        if choice == 2:
+            return Tag(value.tag, 0)
+        return value.value  # unwrap the tag entirely
+    if isinstance(value, list):
+        choice = rng.randrange(4 if value else 2)
+        if not value or choice == 0:
+            return value + [rng.choice([0, None, 1.5, "x"])]
+        if choice == 1:
+            return []
+        i = rng.randrange(len(value))
+        if choice == 2:
+            return value[:i] + value[i + 1:]          # drop element
+        return value[:i] + [value[i]] + value[i:]     # duplicate element
+    return None
+
+
+def generate_mutants(corpus: list[tuple[str, Any]], n: int,
+                     seed: int = DEFAULT_SEED) -> list[tuple[str, Any]]:
+    rng = random.Random(seed)
+    mutants: list[tuple[str, Any]] = []
+    while len(mutants) < n:
+        key, item = corpus[rng.randrange(len(corpus))]
+        path = rng.choice(_sites(item))
+        mutated = _set(item, path, _mutate_value(rng, _get(item, path)))
+        mutants.append((key, mutated))
+    return mutants
+
+
+# ---------------------------------------------------------------------------
+# The differential gate.
+
+def _outcome(schema: Node, item: Any) -> tuple:
+    """("accept",) | ("reject", class name, message) | ("error", ...)."""
+    try:
+        schema.check(item)
+        return ("accept",)
+    except CDDLValidationError as exc:
+        return ("reject", type(exc).__name__, str(exc))
+    except Exception as exc:  # noqa: BLE001 — foreign exception = gate bug
+        return ("error", type(exc).__name__, str(exc))
+
+
+@dataclass
+class DriftReport:
+    corpus_n: int = 0
+    mutants_n: int = 0
+    accepts: int = 0
+    rejects: int = 0
+    mismatches: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.mismatches
+
+    def summary(self) -> str:
+        status = "OK" if self.ok else f"FAIL ({len(self.mismatches)})"
+        return (f"schema-drift: {status} — corpus {self.corpus_n}, "
+                f"mutants {self.mutants_n} "
+                f"({self.accepts} accepted / {self.rejects} rejected "
+                "by both)")
+
+
+def run_drift_check(*, handbuilt: dict[str, Node] | None = None,
+                    compiled: dict[str, Node] | None = None,
+                    mutants: int = DEFAULT_MUTANTS,
+                    seed: int = DEFAULT_SEED) -> DriftReport:
+    handbuilt = SCHEMAS if handbuilt is None else handbuilt
+    compiled = compile_schemas() if compiled is None else compiled
+    report = DriftReport()
+
+    corpus = build_corpus()
+    report.corpus_n = len(corpus)
+    cases = [(key, item, True) for key, item in corpus]
+    cases += [(key, item, False)
+              for key, item in generate_mutants(corpus, mutants, seed)]
+    report.mutants_n = len(cases) - len(corpus)
+
+    for key, item, must_accept in cases:
+        a = _outcome(handbuilt[key], item)
+        b = _outcome(compiled[key], item)
+        if a != b:
+            report.mismatches.append(
+                f"{key}: hand-built {a!r} != compiled {b!r} on {item!r:.200}")
+            continue
+        if a[0] == "error":
+            report.mismatches.append(
+                f"{key}: non-CDDL exception {a!r} on {item!r:.200}")
+        elif must_accept and a[0] != "accept":
+            report.mismatches.append(
+                f"{key}: valid corpus entry rejected: {a!r} on {item!r:.200}")
+        elif a[0] == "accept":
+            report.accepts += 1
+        else:
+            report.rejects += 1
+    return report
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Prove schemas.cddl and core/cddl.py SCHEMAS agree.")
+    ap.add_argument("--mutants", type=int, default=DEFAULT_MUTANTS)
+    ap.add_argument("--seed", type=lambda s: int(s, 0), default=DEFAULT_SEED)
+    ns = ap.parse_args(argv)
+    report = run_drift_check(mutants=ns.mutants, seed=ns.seed)
+    print(report.summary())
+    for line in report.mismatches[:20]:
+        print("  " + line)
+    if len(report.mismatches) > 20:
+        print(f"  ... and {len(report.mismatches) - 20} more")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

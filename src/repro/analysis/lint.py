@@ -1,0 +1,244 @@
+"""Invariant lint passes: AST checks for the repo's load-bearing rules.
+
+Four rules, each scoped to the modules where the invariant is
+load-bearing (listed per rule below); violations are reported as
+``path:line:col: rule: message`` and exit non-zero.
+
+* **copy** — the zero-copy pipeline must not silently materialise
+  buffers: ``.tobytes()`` calls, ``bytes(x)`` on a non-literal argument,
+  and ``b"".join(...)`` are banned in the zero-copy modules.  Escape with
+  ``# copy-ok: <reason>`` on the offending line — the pragma *requires*
+  a reason, so every deliberate copy is documented at the call site.
+* **accum** — floating-point accumulation outside
+  ``fl.aggregation.RunningFedAvg`` breaks the bit-determinism story
+  (ad-hoc ``sum``/``np.sum``/``+=`` reorders reduce differently across
+  restarts).  Banned in the aggregation-adjacent modules; ``RunningFedAvg``
+  itself is exempt (it owns the compensated-summation implementation).
+  Escape with ``# accum-ok: <reason>``.
+* **det** — unseeded randomness and wall-clock reads in ``fl/`` and
+  ``transport/`` make rounds non-replayable: ``random.*`` module calls,
+  legacy ``np.random.*`` globals, zero-argument ``default_rng()``,
+  ``time.time``/``monotonic``/``perf_counter``, ``datetime.now``/
+  ``utcnow``, ``uuid.uuid1``/``uuid4``.  Escape with ``# det-ok: <reason>``.
+* **except** — bare ``except:`` swallows ``KeyboardInterrupt`` and
+  ``SystemExit``; banned everywhere in ``src/repro``, no pragma.
+
+Run as the CI static-analysis tier::
+
+    python -m repro.analysis.lint src/repro
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+# rule -> module scope (paths relative to the ``src/repro`` root)
+COPY_SCOPE = (
+    "core/fastpath.py",
+    "fl/chunking.py",
+    "transport/coap.py",
+    "transport/medium.py",
+    "transport/network.py",
+)
+ACCUM_SCOPE = (
+    "fl/aggregation.py",
+    "fl/server.py",
+    "fl/round.py",
+)
+DET_SCOPE_PREFIXES = ("fl/", "transport/")
+
+_PRAGMAS = {
+    "copy": re.compile(r"#\s*copy-ok:(?P<reason>.*)"),
+    "accum": re.compile(r"#\s*accum-ok:(?P<reason>.*)"),
+    "det": re.compile(r"#\s*det-ok:(?P<reason>.*)"),
+}
+
+_DET_TIME_CALLS = {
+    ("time", "time"), ("time", "monotonic"), ("time", "perf_counter"),
+    ("time", "process_time"), ("datetime", "now"), ("datetime", "utcnow"),
+    ("date", "today"),
+}
+_DET_UUID_CALLS = {("uuid", "uuid1"), ("uuid", "uuid4")}
+_ACCUM_CALLS = {"sum", "fsum"}
+_ACCUM_ATTR_CALLS = {"sum", "mean", "average", "cumsum", "nansum", "dot"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule}: {self.message}")
+
+
+def _dotted(node: ast.AST) -> tuple[str, ...]:
+    """``a.b.c`` -> ("a", "b", "c"); anything non-name-rooted -> ()."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, rel: str, source: str) -> None:
+        self.rel = rel
+        self.lines = source.splitlines()
+        self.findings: list[Finding] = []
+        self.pragma_misuse: list[Finding] = []
+        self.copy_scoped = rel in COPY_SCOPE
+        self.accum_scoped = rel in ACCUM_SCOPE
+        self.det_scoped = rel.startswith(DET_SCOPE_PREFIXES)
+        self._class_stack: list[str] = []
+
+    # -- pragma handling ----------------------------------------------------
+
+    def _pragma(self, rule: str, line: int) -> bool:
+        """True if ``line`` carries the rule's escape pragma (with a
+        non-empty reason — a bare pragma is itself a finding)."""
+        text = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        m = _PRAGMAS[rule].search(text)
+        if m is None:
+            return False
+        if not m.group("reason").strip():
+            self.pragma_misuse.append(Finding(
+                self.rel, line, 0, rule,
+                f"pragma '{rule}-ok:' requires a reason"))
+        return True
+
+    def _report(self, rule: str, node: ast.AST, message: str) -> None:
+        if not self._pragma(rule, node.lineno):
+            self.findings.append(Finding(
+                self.rel, node.lineno, node.col_offset, rule, message))
+
+    # -- visitors -----------------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        if self.copy_scoped:
+            if isinstance(node.func, ast.Attribute):
+                if node.func.attr == "tobytes":
+                    self._report("copy", node,
+                                 ".tobytes() materialises a copy in a "
+                                 "zero-copy module")
+                elif (node.func.attr == "join"
+                      and isinstance(node.func.value, ast.Constant)
+                      and isinstance(node.func.value.value, bytes)):
+                    self._report("copy", node,
+                                 "b''.join(...) concatenates buffers in a "
+                                 "zero-copy module")
+            elif dotted == ("bytes",) and node.args and not isinstance(
+                    node.args[0], ast.Constant):
+                self._report("copy", node,
+                             "bytes(...) on a buffer copies it in a "
+                             "zero-copy module")
+        if self.accum_scoped and "RunningFedAvg" not in self._class_stack:
+            if dotted in {(n,) for n in _ACCUM_CALLS} or (
+                    len(dotted) >= 2 and dotted[0] in ("np", "numpy", "math")
+                    and dotted[-1] in _ACCUM_ATTR_CALLS | _ACCUM_CALLS):
+                self._report("accum", node,
+                             f"float accumulation via "
+                             f"{'.'.join(dotted)}() outside RunningFedAvg")
+        if self.det_scoped and dotted:
+            pair = dotted[-2:] if len(dotted) >= 2 else ()
+            if pair in _DET_TIME_CALLS:
+                self._report("det", node,
+                             f"wall-clock read {'.'.join(dotted)}() breaks "
+                             "replay determinism")
+            elif pair in _DET_UUID_CALLS:
+                self._report("det", node,
+                             f"{'.'.join(dotted)}() draws entropy outside "
+                             "the seeded RNG")
+            elif dotted[0] == "random":
+                self._report("det", node,
+                             f"unseeded stdlib random: "
+                             f"{'.'.join(dotted)}()")
+            elif len(dotted) >= 2 and dotted[0] in ("np", "numpy") \
+                    and dotted[1] == "random" and dotted[-1] != "default_rng":
+                self._report("det", node,
+                             f"legacy numpy global RNG: "
+                             f"{'.'.join(dotted)}()")
+            elif dotted[-1] == "default_rng" and not node.args \
+                    and not node.keywords:
+                self._report("det", node,
+                             "default_rng() without a seed is "
+                             "entropy-seeded")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        if (self.accum_scoped and isinstance(node.op, ast.Add)
+                and "RunningFedAvg" not in self._class_stack
+                and not (isinstance(node.value, ast.Constant)
+                         and isinstance(node.value.value, int))):
+            self._report("accum", node,
+                         "'+=' accumulation outside RunningFedAvg "
+                         "(int-literal counters are exempt)")
+        self.generic_visit(node)
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if node.type is None:
+            self.findings.append(Finding(
+                self.rel, node.lineno, node.col_offset, "except",
+                "bare 'except:' swallows KeyboardInterrupt/SystemExit"))
+        self.generic_visit(node)
+
+
+def lint_file(path: Path, root: Path) -> list[Finding]:
+    rel = path.relative_to(root).as_posix()
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as exc:
+        return [Finding(rel, exc.lineno or 0, exc.offset or 0, "syntax",
+                        str(exc.msg))]
+    linter = _FileLinter(rel, source)
+    linter.visit(tree)
+    return sorted(linter.findings + linter.pragma_misuse,
+                  key=lambda f: (f.line, f.col))
+
+
+def lint_tree(root: Path) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        findings.extend(lint_file(path, root))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Invariant lints: zero-copy, accumulation, determinism.")
+    ap.add_argument("root", nargs="?", default="src/repro",
+                    help="package root to lint (default: src/repro)")
+    ns = ap.parse_args(argv)
+    root = Path(ns.root)
+    if not root.is_dir():
+        print(f"lint: no such directory: {root}")
+        return 2
+    findings = lint_tree(root)
+    for f in findings:
+        print(f)
+    n_files = sum(1 for _ in root.rglob("*.py"))
+    status = "OK" if not findings else f"FAIL ({len(findings)} findings)"
+    print(f"invariant-lint: {status} — {n_files} files checked")
+    return 0 if not findings else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,866 @@
+"""Round-lifecycle model checker: declared transition tables, exhaustive
+small-configuration exploration, and conformance shims.
+
+Four lifecycles that PR 6-8 grew organically are extracted here into
+explicit declared transition tables (the static artifact):
+
+* ``CLIENT`` — one client's view of a round (``fl/round.py`` +
+  ``fl/client.py``): select → download → train → upload → fold → ack,
+  with crash-in-phase/resume, mid-round leave, deadline expiry, and the
+  stale-rejoin push.
+* ``SERVER`` — the aggregation lifecycle (``fl/server.py`` +
+  ``fl/round.py``): begin → fold* → snapshot* → finalize/abort, with
+  crash/restore-from-snapshot and the stale-generation gate.
+* ``UPLINK`` — ``fl.chunking.UplinkSession``'s window/NACK loop:
+  sending → feedback → ack/nack/poll, crash + poll-first resume,
+  deadline expiry, repair-window budget exhaustion.
+* ``ASSEMBLER`` — ``fl.chunking.ChunkAssembler``'s generation
+  lifecycle: empty → assembling → complete, duplicates, stale
+  rejection, generation preemption and checkpoint restore.
+
+Two independent checks keep the tables honest:
+
+1. **Exhaustive exploration** (``explore_round``): a product model of
+   N clients × the server machine is explored breadth-first under every
+   interleaving of the ``FaultPlan`` event vocabulary (client crash per
+   phase + resume, mid-round leave, stale rejoin churn, server
+   crash/restore, round deadline; chunk/frame loss is abstracted *into*
+   the UPLINK machine — at round granularity loss is either a repaired
+   upload or a deadline miss).  Safety invariants asserted on every
+   reachable state/edge:
+
+   * I1 — no finalize before the quorum decision (deadline fired AND
+     quorum met);
+   * I2 — no double-fold: no client's update enters the accumulator
+     twice;
+   * I3 — no stale-generation acceptance (rejoin pushes never fold);
+   * I4 — a resumed client re-transmitting an already-folded update is
+     duplicate-ignored, never re-folded;
+   * I5 — liveness: every reachable state can reach round-end (no
+     deadlock), by backward reachability from the terminal states;
+   * plus: every edge the explorer takes must be *declared* (the model
+     cannot silently grow semantics), and zero declared states may be
+     unreachable.
+
+2. **Conformance shims** (``conformance_*``): scripted scenarios drive
+   the *real* ``ChunkAssembler`` / ``FLServer`` / ``UplinkSession``
+   objects, observe (state, event, state) triples through each object's
+   own observable state, and validate every triple against the declared
+   table — so the tables cannot rot away from the implementations.
+
+CLI (the CI static-analysis tier, bounded well under 60 s)::
+
+    python -m repro.analysis.statemachine --clients 2
+"""
+from __future__ import annotations
+
+import uuid
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Declared transition tables
+
+Triple = tuple[str, str, str]          # (state, event, state)
+
+
+@dataclass(frozen=True)
+class StateMachine:
+    name: str
+    initial: str
+    terminal: frozenset[str]
+    transitions: dict[tuple[str, str], str]
+
+    @property
+    def states(self) -> frozenset[str]:
+        out = {self.initial} | set(self.terminal)
+        for (s, _), s2 in self.transitions.items():
+            out |= {s, s2}
+        return frozenset(out)
+
+    def step(self, state: str, event: str) -> str | None:
+        return self.transitions.get((state, event))
+
+    def validate_trace(self, trace: list[Triple]) -> list[str]:
+        """Every observed (state, event, state) must be declared."""
+        bad = []
+        for s, e, s2 in trace:
+            declared = self.step(s, e)
+            if declared is None:
+                bad.append(f"{self.name}: undeclared transition "
+                           f"({s!r}, {e!r}) observed -> {s2!r}")
+            elif declared != s2:
+                bad.append(f"{self.name}: ({s!r}, {e!r}) declared -> "
+                           f"{declared!r} but observed -> {s2!r}")
+        return bad
+
+
+CLIENT = StateMachine(
+    name="client-round",
+    initial="idle",
+    terminal=frozenset({"done", "missed", "left", "rejoined"}),
+    transitions={
+        ("idle", "select"): "downloading",
+        ("downloading", "install"): "training",
+        ("training", "trained"): "uploading",
+        # upload completion: the server folds it — or, after a resume,
+        # recognizes the duplicate and ignores it (I4)
+        ("uploading", "fold"): "awaiting_ack",
+        ("uploading", "duplicate_ignored"): "awaiting_ack",
+        ("awaiting_ack", "ack"): "done",
+        # a restarted server whose snapshot predates this client's fold
+        # re-collects it (fl/round.py crash-resume re-collection)
+        ("done", "re_collect"): "uploading",
+        # ClientCrash(phase=...) + resume into the same phase
+        ("downloading", "crash"): "crashed_download",
+        ("training", "crash"): "crashed_train",
+        ("uploading", "crash"): "crashed_upload",
+        ("awaiting_ack", "crash"): "crashed_upload",
+        ("crashed_download", "resume"): "downloading",
+        ("crashed_train", "resume"): "training",
+        ("crashed_upload", "resume"): "uploading",
+        # membership churn: mid-round leave, stale-round rejoin push
+        ("downloading", "leave"): "left",
+        ("training", "leave"): "left",
+        ("uploading", "leave"): "left",
+        ("rejoining", "stale_upload"): "rejoined",
+        # the round deadline: unfinished work is a straggler miss; a
+        # folded-but-unacked client's update is already in the aggregate
+        ("idle", "deadline_miss"): "missed",
+        ("downloading", "deadline_miss"): "missed",
+        ("training", "deadline_miss"): "missed",
+        ("uploading", "deadline_miss"): "missed",
+        ("crashed_download", "deadline_miss"): "missed",
+        ("crashed_train", "deadline_miss"): "missed",
+        ("crashed_upload", "deadline_miss"): "missed",
+        ("rejoining", "deadline_miss"): "missed",
+        ("awaiting_ack", "deadline_ack"): "done",
+    },
+)
+
+SERVER = StateMachine(
+    name="server-aggregation",
+    initial="idle",
+    terminal=frozenset({"finalized", "idle"}),
+    transitions={
+        ("idle", "begin"): "aggregating",
+        ("finalized", "begin"): "aggregating",      # next round
+        ("aggregating", "fold"): "aggregating",
+        ("aggregating", "duplicate_ignored"): "aggregating",
+        ("aggregating", "stale_rejected"): "aggregating",
+        ("aggregating", "snapshot"): "aggregating",
+        ("aggregating", "crash"): "crashed",
+        ("crashed", "restore"): "aggregating",
+        ("aggregating", "finalize"): "finalized",
+        ("aggregating", "abort"): "idle",           # quorum miss
+        # finalize tombstones the snapshot (fl/round.py: a finalized
+        # round's snapshot is deleted so a later restart cannot re-fold)
+        ("finalized", "tombstone"): "finalized",
+        ("finalized", "finish_round"): "finalized",
+    },
+)
+
+UPLINK = StateMachine(
+    name="uplink-session",
+    initial="ready",
+    terminal=frozenset({"acked", "crashed", "expired", "exhausted"}),
+    transitions={
+        ("ready", "enqueue"): "sending",
+        ("ready", "enqueue_poll"): "feedback_due",  # poll-first resume
+        ("sending", "frame_sent"): "sending",
+        ("sending", "window_boundary"): "feedback_due",
+        ("feedback_due", "ack"): "acked",
+        ("feedback_due", "nack"): "sending",
+        ("feedback_due", "poll"): "feedback_due",   # feedback lost
+        ("feedback_due", "budget_exhausted"): "exhausted",
+        ("sending", "crash"): "crashed",
+        ("feedback_due", "crash"): "crashed",
+        ("sending", "expire"): "expired",
+        ("feedback_due", "expire"): "expired",
+        ("crashed", "resume"): "feedback_due",      # poll-first session
+    },
+)
+
+ASSEMBLER = StateMachine(
+    name="chunk-assembler",
+    initial="empty",
+    terminal=frozenset({"complete"}),
+    transitions={
+        ("empty", "first_chunk"): "assembling",
+        ("empty", "completed"): "complete",         # single-chunk generation
+        ("empty", "restore"): "assembling",         # checkpoint restore
+        ("assembling", "chunk"): "assembling",
+        ("assembling", "duplicate"): "assembling",
+        ("assembling", "stale_rejected"): "assembling",
+        ("assembling", "restart_generation"): "assembling",  # newer key
+        ("assembling", "completed"): "complete",
+        ("complete", "duplicate"): "complete",      # late retransmit
+        ("complete", "stale_rejected"): "complete",
+        ("complete", "new_generation"): "assembling",
+    },
+)
+
+MACHINES = {m.name: m for m in (CLIENT, SERVER, UPLINK, ASSEMBLER)}
+
+
+# ---------------------------------------------------------------------------
+# Exhaustive exploration of the product model
+#
+# Product state:
+#   (server, deadline, clients, folded, snap, faults_left, counts)
+# where ``clients`` is a tuple of CLIENT states, ``folded`` the frozenset
+# of client ids inside the live accumulator, ``snap`` the folded set the
+# last aggregation snapshot captured (None = no snapshot), ``faults_left``
+# the remaining fault budget, and ``counts`` the ghost per-client fold
+# multiset that invariant I2 checks.
+
+_ACTIVE = ("downloading", "training", "uploading")
+_CRASHED = ("crashed_download", "crashed_train", "crashed_upload")
+
+
+@dataclass
+class ExplorationReport:
+    n_clients: int = 0
+    rejoining: int = 0
+    max_faults: int = 0
+    quorum: int = 0
+    states_explored: int = 0
+    edges_explored: int = 0
+    violations: list[str] = field(default_factory=list)
+    client_edges: set[tuple[str, str]] = field(default_factory=set)
+    server_edges: set[tuple[str, str]] = field(default_factory=set)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def _deadline_successor(clients: tuple) -> tuple[tuple, list[Triple]]:
+    """Deadline semantics (fl/round.py ``_missed_deadline``): unfinished
+    clients become stragglers; a folded-but-unacked client's update is
+    already in the aggregate, so it lands on ``done``."""
+    out, edges = [], []
+    for cs in clients:
+        if cs == "awaiting_ack":
+            out.append("done")
+            edges.append((cs, "deadline_ack", "done"))
+        elif cs in CLIENT.terminal:
+            out.append(cs)
+        else:
+            out.append("missed")
+            edges.append((cs, "deadline_miss", "missed"))
+    return tuple(out), edges
+
+
+def explore_round(n_clients: int = 2, *, rejoining: int = 1,
+                  max_faults: int = 2,
+                  quorum: int | None = None) -> ExplorationReport:
+    """BFS the full product state space, checking invariants I1-I5."""
+    if quorum is None:
+        quorum = max(1, -(-n_clients // 2))       # ceil(n/2), cfg default
+    report = ExplorationReport(n_clients=n_clients, rejoining=rejoining,
+                               max_faults=max_faults, quorum=quorum)
+    total = n_clients + rejoining
+    init = ("idle", False,
+            ("idle",) * n_clients + ("rejoining",) * rejoining,
+            frozenset(), None, max_faults, (0,) * total)
+
+    def record(edges: list[Triple], machine: StateMachine) -> None:
+        """Cross-check each explorer edge against its declared table."""
+        target = (report.client_edges if machine is CLIENT
+                  else report.server_edges)
+        for s, e, s2 in edges:
+            declared = machine.step(s, e)
+            if declared != s2:
+                report.violations.append(
+                    f"explorer took undeclared {machine.name} edge "
+                    f"({s!r}, {e!r}) -> {s2!r} (declared: {declared!r})")
+            target.add((s, e))
+
+    def successors(st):
+        server, deadline, clients, folded, snap, faults, counts = st
+        out = []  # (new_state, client_edges, server_edges)
+
+        def emit(new_state, c_edges=(), s_edges=()):
+            record(list(c_edges), CLIENT)
+            record(list(s_edges), SERVER)
+            out.append(new_state)
+
+        if server == "idle" and not deadline:
+            emit(("aggregating",) + st[1:],
+                 s_edges=[("idle", "begin", "aggregating")])
+            return out
+
+        if not deadline and server != "idle":
+            new_clients, edges = _deadline_successor(clients)
+            emit((server, True, new_clients) + st[3:], c_edges=edges)
+
+        if server == "crashed":
+            # restart is always possible (the driver relaunches the
+            # process); the accumulator reverts to the last snapshot
+            restored = snap if snap is not None else frozenset()
+            emit(("aggregating", deadline, clients, restored, snap, faults,
+                  tuple(1 if i in restored else 0 for i in range(total))),
+                 s_edges=[("crashed", "restore", "aggregating")])
+
+        if deadline and server == "aggregating":
+            if len(folded) >= quorum:
+                # I1: finalize is *only* generated here — deadline fired
+                # and quorum met.  The assert keeps the guard from rotting.
+                assert deadline and len(folded) >= quorum
+                emit(("finalized",) + st[1:],
+                     s_edges=[("aggregating", "finalize", "finalized")])
+            else:
+                emit(("idle",) + st[1:],
+                     s_edges=[("aggregating", "abort", "idle")])
+
+        if deadline or server != "aggregating":
+            return out
+
+        # -- mid-round events (server live, deadline not yet fired) -----
+        if snap != folded:
+            emit((server, deadline, clients, folded, folded, faults, counts),
+                 s_edges=[("aggregating", "snapshot", "aggregating")])
+        if faults > 0:
+            emit(("crashed", deadline, clients, folded, snap, faults - 1,
+                  counts),
+                 s_edges=[("aggregating", "crash", "crashed")])
+
+        for i, cs in enumerate(clients):
+            def with_client(new_cs, event, *, new_folded=folded,
+                            new_counts=counts, s_edges=()):
+                cl = clients[:i] + (new_cs,) + clients[i + 1:]
+                emit((server, deadline, cl, new_folded, snap, faults,
+                      new_counts), c_edges=[(cs, event, new_cs)],
+                     s_edges=s_edges)
+
+            if cs == "idle":
+                with_client("downloading", "select")
+            elif cs == "downloading":
+                with_client("training", "install")
+            elif cs == "training":
+                with_client("uploading", "trained")
+            elif cs == "uploading":
+                if i in folded:
+                    # I4: a resumed client re-transmitting an
+                    # already-folded update is ignored, never re-folded
+                    with_client("awaiting_ack", "duplicate_ignored",
+                                s_edges=[("aggregating", "duplicate_ignored",
+                                          "aggregating")])
+                else:
+                    new_counts = (counts[:i] + (counts[i] + 1,)
+                                  + counts[i + 1:])
+                    with_client("awaiting_ack", "fold",
+                                new_folded=folded | {i},
+                                new_counts=new_counts,
+                                s_edges=[("aggregating", "fold",
+                                          "aggregating")])
+            elif cs == "awaiting_ack":
+                with_client("done", "ack")
+            elif cs in _CRASHED:
+                with_client(cs.replace("crashed_", "")
+                            .replace("download", "downloading")
+                            .replace("train", "training")
+                            .replace("upload", "uploading"), "resume")
+            elif cs == "done" and i not in folded:
+                # the restored server's re-collection of a lost fold
+                with_client("uploading", "re_collect")
+            elif cs == "rejoining":
+                # I3: the stale push is rejected at both layers — the
+                # fold set and ghost counts must not change
+                with_client("rejoined", "stale_upload",
+                            s_edges=[("aggregating", "stale_rejected",
+                                      "aggregating")])
+            if cs in _ACTIVE and faults > 0:
+                with_client("crashed_" + {"downloading": "download",
+                                          "training": "train",
+                                          "uploading": "upload"}[cs],
+                            "crash")
+                with_client("left", "leave")
+            elif cs == "awaiting_ack" and faults > 0:
+                with_client("crashed_upload", "crash")
+        return out
+
+    # -- BFS ------------------------------------------------------------
+    seen = {init}
+    graph: dict[tuple, list[tuple]] = {}
+    queue = deque([init])
+    while queue:
+        st = queue.popleft()
+        succ = successors(st)
+        graph[st] = succ
+        report.edges_explored += len(succ)
+        for st2 in succ:
+            server, deadline, clients, folded, snap, faults, counts = st2
+            if any(c > 1 for c in counts):
+                report.violations.append(
+                    f"I2 double-fold: counts {counts} in {st2!r}")
+            for i, cs in enumerate(clients):
+                if cs in ("rejoining", "rejoined") and counts[i]:
+                    report.violations.append(
+                        f"I3 stale fold accepted for client {i} in {st2!r}")
+            if st2 not in seen:
+                seen.add(st2)
+                queue.append(st2)
+    report.states_explored = len(seen)
+
+    # -- I5 liveness: every reachable state reaches a terminal state ----
+    def is_terminal(st) -> bool:
+        return st[1] and st[0] in ("finalized", "idle")
+
+    reverse: dict[tuple, list[tuple]] = {st: [] for st in seen}
+    for st, succ in graph.items():
+        for st2 in succ:
+            reverse[st2].append(st)
+    can_finish = {st for st in seen if is_terminal(st)}
+    frontier = deque(can_finish)
+    while frontier:
+        st = frontier.popleft()
+        for prev in reverse[st]:
+            if prev not in can_finish:
+                can_finish.add(prev)
+                frontier.append(prev)
+    stuck = [st for st in seen if st not in can_finish]
+    for st in stuck[:5]:
+        report.violations.append(f"I5 deadlock: {st!r} cannot reach "
+                                 "round-end")
+    if len(stuck) > 5:
+        report.violations.append(f"I5: ... and {len(stuck) - 5} more "
+                                 "deadlocked states")
+
+    # -- declared-state reachability ------------------------------------
+    # States gated on a config knob set to zero are *expectedly* absent:
+    # no rejoiners => no churn states, no fault budget => no crash states.
+    expected_absent: set[str] = set()
+    if rejoining == 0:
+        expected_absent |= {"rejoining", "rejoined"}
+    if max_faults == 0:
+        expected_absent |= set(_CRASHED) | {"left"}
+    seen_client = {cs for st in seen for cs in st[2]}
+    seen_server = {st[0] for st in seen}
+    for state in sorted(CLIENT.states - seen_client - expected_absent):
+        report.violations.append(
+            f"unreachable declared client state {state!r}")
+    absent_server = {"crashed"} if max_faults == 0 else set()
+    for state in sorted(SERVER.states - seen_server - absent_server):
+        report.violations.append(
+            f"unreachable declared server state {state!r}")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Conformance shims: the declared tables vs the real implementations.
+
+
+def _mk_chunks(round_: int, *, n_elems: int = 40, chunk_elems: int = 16,
+               model_id: uuid.UUID | None = None):
+    from repro.fl.chunking import chunk_stream
+    mid = model_id or uuid.UUID(int=7)
+    params = (np.arange(n_elems, dtype=np.float32) - n_elems / 2) / 8.0
+    return mid, params, list(chunk_stream(mid, round_, params, chunk_elems))
+
+
+class _Tracer:
+    def __init__(self, machine: StateMachine) -> None:
+        self.machine = machine
+        self.state = machine.initial
+        self.trace: list[Triple] = []
+
+    def emit(self, event: str, new_state: str) -> None:
+        self.trace.append((self.state, event, new_state))
+        self.state = new_state
+
+
+def conformance_assembler() -> list[Triple]:
+    """Drive a real ``ChunkAssembler`` through every declared transition."""
+    from repro.fl.chunking import ChunkAssembler
+
+    def state_of(a: ChunkAssembler) -> str:
+        if a._key is not None:
+            return "assembling"
+        if a._completed_key is not None:
+            return "complete"
+        return "empty"
+
+    mid, params, r0 = _mk_chunks(0)
+    _, _, r1 = _mk_chunks(1)
+    _, _, r2 = _mk_chunks(2)
+    _, _, r3 = _mk_chunks(3)
+    asm = ChunkAssembler(expected_elems=params.size)
+    tr = _Tracer(ASSEMBLER)
+
+    def feed(msg, event: str, *, expect_flat: bool = False) -> None:
+        before = (asm.duplicates, asm.stale_rejected)
+        flat = asm.add(msg)
+        if expect_flat:
+            assert flat is not None and flat.size == params.size, event
+        if event == "duplicate":
+            assert asm.duplicates == before[0] + 1, "duplicate not counted"
+        if event == "stale_rejected":
+            assert asm.stale_rejected == before[1] + 1, "stale not counted"
+        tr.emit(event, state_of(asm))
+
+    feed(r1[0], "first_chunk")          # empty -> assembling (round 1)
+    feed(r1[0], "duplicate")            # same chunk again
+    feed(r1[1], "chunk")
+    feed(r0[0], "stale_rejected")       # round 0 < in-progress round 1
+    feed(r1[2], "completed", expect_flat=True)
+    feed(r1[1], "duplicate")            # late retransmit of finished round
+    feed(r0[1], "stale_rejected")       # round 0 < completed round 1
+    feed(r2[0], "new_generation")       # next round starts assembling
+    feed(r3[0], "restart_generation")   # newer round preempts round 2
+    feed(r3[1], "chunk")
+    feed(r3[2], "completed", expect_flat=True)
+
+    # single-chunk generation: empty -> complete in one step
+    mid2, params2, single = _mk_chunks(0, n_elems=8, chunk_elems=8)
+    asm2 = ChunkAssembler(expected_elems=params2.size)
+    tr2 = _Tracer(ASSEMBLER)
+    flat = asm2.add(single[0])
+    assert flat is not None and flat.size == params2.size
+    tr2.emit("completed", state_of(asm2))
+
+    # crash-resume: export mid-generation, restore into a fresh assembler
+    asm3 = ChunkAssembler(expected_elems=params.size)
+    asm3.add(r1[0])
+    snap = asm3.export_state()
+    assert snap is not None
+    asm4 = ChunkAssembler(expected_elems=params.size)
+    tr3 = _Tracer(ASSEMBLER)
+    asm4.restore_state(snap)
+    tr3.emit("restore", state_of(asm4))
+    assert asm4.missing(mid, 1, len(r1)) == [1, 2], "restored missing set"
+    asm4.add(r1[1])
+    tr3.emit("chunk", state_of(asm4))
+    flat = asm4.add(r1[2])
+    assert flat is not None
+    tr3.emit("completed", state_of(asm4))
+    return tr.trace + tr2.trace + tr3.trace
+
+
+def conformance_server() -> list[Triple]:
+    """Drive a real ``FLServer`` aggregation through the declared table."""
+    from repro.fl.aggregation import RunningFedAvg
+    from repro.fl.server import FLServer, OrchestrationConfig, RoundResult
+
+    def state_of(srv: FLServer) -> str:
+        if srv._agg is not None:
+            return "aggregating"
+        if srv._agg_finalized:
+            return "finalized"
+        return "idle"
+
+    cfg = OrchestrationConfig(num_clients=4, clients_per_round=2, seed=3)
+    params = np.linspace(-1, 1, 40, dtype=np.float32)
+    srv = FLServer(cfg, params)
+    tr = _Tracer(SERVER)
+    assert state_of(srv) == "idle"
+
+    # quorum-miss round: begin -> abort -> idle
+    srv.begin_aggregation()
+    tr.emit("begin", state_of(srv))
+    srv.abort_aggregation()
+    tr.emit("abort", state_of(srv))
+
+    # full round with crash/restore
+    srv.begin_aggregation()
+    tr.emit("begin", state_of(srv))
+    srv.accumulate_update(0, params + 1.0, 64)
+    tr.emit("fold", state_of(srv))
+    # the duplicate guard: the engine asks first, and the raw call raises
+    assert srv.already_folded(0)
+    try:
+        srv.accumulate_update(0, params + 1.0, 64)
+        raise AssertionError("duplicate accumulate_update did not raise")
+    except ValueError:
+        pass
+    tr.emit("duplicate_ignored", state_of(srv))
+
+    # the stale-generation gate (UplinkEndpoint): wrong round, rejected
+    _, _, stale = _mk_chunks(srv.round + 1, model_id=srv.model_id)
+    ep = srv.uplink_endpoint(9)
+    assert ep.receive_chunk(stale[0]) is False and ep.rejected_stale == 1
+    assert not ep.assembler.in_progress, "stale chunk touched assembly state"
+    tr.emit("stale_rejected", state_of(srv))
+
+    agg_state, agg_clients = dict(srv._agg.state()), srv.agg_clients
+    tr.emit("snapshot", state_of(srv))
+    tr.emit("crash", "crashed")
+    srv2 = FLServer(cfg, params)
+    srv2.restore_aggregation(
+        RunningFedAvg.from_state(
+            hi=np.array(agg_state["hi"], np.float64),
+            lo=np.array(agg_state["lo"], np.float64),
+            weight=float(agg_state["weight"]),
+            n_updates=int(agg_state["n_updates"])),
+        list(agg_clients))
+    tr.emit("restore", state_of(srv2))
+    assert srv2.already_folded(0), "restore lost the folded set"
+
+    srv2.accumulate_update(1, params - 1.0, 64)
+    tr.emit("fold", state_of(srv2))
+    installed = srv2.finalize_aggregation()
+    assert installed is not None
+    tr.emit("finalize", state_of(srv2))
+    try:
+        srv2.finalize_aggregation()
+        raise AssertionError("double finalize did not raise")
+    except RuntimeError:
+        pass
+    tr.emit("tombstone", state_of(srv2))   # snapshot deleted, re-fold dead
+    srv2.finish_round(RoundResult(round=0, participants=[0, 1],
+                                  reporters=[0, 1], dropped=[], stopped=[],
+                                  mean_train_loss=0.0, mean_val_loss=0.0))
+    tr.emit("finish_round", state_of(srv2))
+    srv2.begin_aggregation()
+    tr.emit("begin", state_of(srv2))
+    srv2.abort_aggregation()
+    return tr.trace
+
+
+class _FeedbackLoss:
+    """Minimal FaultPlan-shaped fault source for the uplink shim."""
+
+    def __init__(self, lost: set[tuple[int, int]]) -> None:
+        self._lost = lost
+
+    def feedback_lost(self, client_id: int, window: int) -> bool:
+        return (client_id, window) in self._lost
+
+
+def _drive_session(s, medium, tr: _Tracer, *, faults=None) -> None:
+    """Step one real ``UplinkSession`` exactly as the interleaved
+    scheduler does (``run_interleaved_uplinks``), emitting trace events
+    at every observable state change."""
+    from repro.fl.chunking import _deliver, _enqueue_window, _window_feedback
+
+    by_client = {s.client_id: s}
+    s.ready_at = max(medium.clock, s.start_at)
+    _enqueue_window(medium, s)
+    tr.emit("enqueue" if s.has_frame else "enqueue_poll",
+            "sending" if s.has_frame else "feedback_due")
+    while not s.finished:
+        if s.crash_due():
+            s.halt()
+            tr.emit("crash", "crashed")
+            return
+        if s.ready_at > medium.clock:
+            medium.advance_to(s.ready_at)
+        if s.has_frame:
+            frame = s._lookahead
+            s._advance()
+            s._frames_in_window += 1
+            for fr in medium.transmit(frame, s._window_stats,
+                                      drop=s._forced.get(frame.chunk_index)):
+                _deliver(by_client, fr, None)
+            if s.has_frame:
+                tr.emit("frame_sent", "sending")
+            else:
+                for fr in medium.flush(s.client_id):
+                    _deliver(by_client, fr, None)
+                s.ready_at = medium.clock + medium.turnaround_s
+                tr.emit("window_boundary", "feedback_due")
+        else:
+            _window_feedback(medium, s, None, faults=faults)
+            if s.acked:
+                tr.emit("ack", "acked")
+            elif s.window >= s.max_windows:
+                tr.emit("budget_exhausted", "exhausted")
+            elif s.has_frame:
+                tr.emit("nack", "sending")
+            else:
+                tr.emit("poll", "feedback_due")
+
+
+def conformance_uplink() -> list[Triple]:
+    """Drive real ``UplinkSession``s through every declared transition."""
+    from repro.fl.chunking import AssemblerReceiver, UplinkSession
+    from repro.transport.medium import SharedMedium
+
+    mid, params, chunks = _mk_chunks(0)
+    traces: list[Triple] = []
+
+    # 1. clean transfer: enqueue -> frames -> boundary -> ack
+    recv = AssemblerReceiver(expected_elems=params.size)
+    s = UplinkSession(0, chunks, recv)
+    tr = _Tracer(UPLINK)
+    _drive_session(s, SharedMedium(seed=1), tr)
+    assert s.acked and recv.assembled is not None
+    # window 0's frame count: chunks span multiple CoAP block frames, and
+    # the last frame emits window_boundary rather than frame_sent
+    frames0 = sum(1 for t in tr.trace if t[1] == "frame_sent") + 1
+    traces += tr.trace
+
+    # 2. chunk loss -> NACK -> repair window -> ack
+    recv = AssemblerReceiver(expected_elems=params.size)
+    s = UplinkSession(0, chunks, recv)
+    tr = _Tracer(UPLINK)
+    medium = SharedMedium(seed=2, chunk_drop=lambda uri, w, i, c:
+                          w == 0 and i == 1)
+    _drive_session(s, medium, tr)
+    assert s.acked and ("feedback_due", "nack", "sending") in tr.trace
+    traces += tr.trace
+
+    # 3. lost feedback -> empty poll window -> re-ask -> ack
+    recv = AssemblerReceiver(expected_elems=params.size)
+    s = UplinkSession(0, chunks, recv)
+    tr = _Tracer(UPLINK)
+    _drive_session(s, SharedMedium(seed=3), tr,
+                   faults=_FeedbackLoss({(0, 0)}))
+    assert s.acked and ("feedback_due", "poll", "feedback_due") in tr.trace
+    traces += tr.trace
+
+    # 4. crash mid-window, then poll-first resume against the same
+    #    receiver state (the journaled-checkpoint resume shape)
+    recv = AssemblerReceiver(expected_elems=params.size)
+    s = UplinkSession(0, chunks, recv, crash_at=(0, 1))
+    tr = _Tracer(UPLINK)
+    medium = SharedMedium(seed=4)
+    _drive_session(s, medium, tr)
+    assert s.crashed
+    s2 = UplinkSession(0, chunks, recv, poll_first=True)
+    _drive_session(s2, medium, tr)          # continues the same tracer
+    assert s2.acked
+    # the fresh poll-first session *is* the logical session resuming: map
+    # its observed (crashed, enqueue_poll) head onto the declared resume edge
+    traces += [("crashed", "resume", "feedback_due")
+               if t == ("crashed", "enqueue_poll", "feedback_due") else t
+               for t in tr.trace]
+
+    # 5. deadline expiry, in both transmitting and feedback states
+    for scripted_state in ("sending", "feedback_due"):
+        recv = AssemblerReceiver(expected_elems=params.size)
+        s = UplinkSession(0, chunks, recv)
+        tr = _Tracer(UPLINK)
+        medium = SharedMedium(seed=5)
+        from repro.fl.chunking import _enqueue_window
+        _enqueue_window(medium, s)
+        tr.emit("enqueue", "sending")
+        if scripted_state == "feedback_due":
+            while s.has_frame:
+                frame = s._lookahead
+                s._advance()
+                for fr in medium.transmit(frame, s._window_stats):
+                    from repro.fl.chunking import _deliver
+                    _deliver({0: s}, fr, None)
+            tr.emit("window_boundary", "feedback_due")
+        s.halt(expired=True)               # what the scheduler's deadline does
+        tr.emit("expire", "expired")
+        assert s.expired and s.finished
+        traces += tr.trace
+
+    # 6. repair-budget exhaustion: one window, chunk 1 always dropped
+    recv = AssemblerReceiver(expected_elems=params.size)
+    s = UplinkSession(0, chunks, recv, max_windows=1)
+    tr = _Tracer(UPLINK)
+    medium = SharedMedium(seed=6, chunk_drop=lambda uri, w, i, c: i == 1)
+    _drive_session(s, medium, tr)
+    assert not s.acked and s.window >= s.max_windows
+    assert ("feedback_due", "budget_exhausted", "exhausted") in tr.trace
+    traces += tr.trace
+
+    # 7. crash exactly at the window boundary: the crash point lands after
+    #    the last frame of window 0, so the session dies awaiting feedback
+    recv = AssemblerReceiver(expected_elems=params.size)
+    s = UplinkSession(0, chunks, recv, crash_at=(0, frames0))
+    tr = _Tracer(UPLINK)
+    _drive_session(s, SharedMedium(seed=7), tr)
+    assert s.crashed and tr.trace[-1] == ("feedback_due", "crash", "crashed")
+    traces += tr.trace
+
+    # 8. a session *constructed* poll-first (cold resume from a journal):
+    #    first window is an empty poll, the NACK rebuilds the send queue
+    recv = AssemblerReceiver(expected_elems=params.size)
+    s = UplinkSession(0, chunks, recv, poll_first=True)
+    tr = _Tracer(UPLINK)
+    _drive_session(s, SharedMedium(seed=8), tr)
+    assert s.acked and tr.trace[0] == ("ready", "enqueue_poll", "feedback_due")
+    traces += tr.trace
+    return traces
+
+
+# ---------------------------------------------------------------------------
+# The combined gate.
+
+
+@dataclass
+class ModelCheckReport:
+    exploration: ExplorationReport
+    conformance_violations: list[str] = field(default_factory=list)
+    uncovered: list[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return (self.exploration.ok and not self.conformance_violations
+                and not self.uncovered)
+
+
+def run_model_check(n_clients: int = 2, *, rejoining: int = 1,
+                    max_faults: int = 2) -> ModelCheckReport:
+    exploration = explore_round(n_clients, rejoining=rejoining,
+                                max_faults=max_faults)
+    report = ModelCheckReport(exploration=exploration)
+
+    shim_traces = {
+        ASSEMBLER.name: conformance_assembler(),
+        SERVER.name: conformance_server(),
+        UPLINK.name: conformance_uplink(),
+    }
+    for name, trace in shim_traces.items():
+        report.conformance_violations += MACHINES[name].validate_trace(trace)
+
+    # transition coverage: every declared transition must be exercised by
+    # the explorer (CLIENT/SERVER) or a conformance shim (all machines)
+    covered: dict[str, set] = {name: {(s, e) for s, e, _ in trace}
+                               for name, trace in shim_traces.items()}
+    covered.setdefault(CLIENT.name, set())
+    covered[CLIENT.name] |= exploration.client_edges
+    covered[SERVER.name] |= exploration.server_edges
+    for name, machine in MACHINES.items():
+        for key in sorted(set(machine.transitions) - covered.get(name, set())):
+            report.uncovered.append(
+                f"{name}: declared transition {key!r} never exercised")
+        # shim-observed states double as the reachability witness for the
+        # machines outside the product model
+        seen_states = ({s for s, _, _ in shim_traces.get(name, ())}
+                       | {s2 for _, _, s2 in shim_traces.get(name, ())})
+        if name in (UPLINK.name, ASSEMBLER.name):
+            for state in sorted(machine.states - seen_states):
+                report.uncovered.append(
+                    f"{name}: declared state {state!r} never reached")
+    return report
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+    import time
+
+    ap = argparse.ArgumentParser(
+        description="Exhaustively model-check the round lifecycle.")
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--rejoining", type=int, default=1)
+    ap.add_argument("--faults", type=int, default=2)
+    ns = ap.parse_args(argv)
+    t0 = time.perf_counter()
+    report = run_model_check(ns.clients, rejoining=ns.rejoining,
+                             max_faults=ns.faults)
+    dt = time.perf_counter() - t0
+    ex = report.exploration
+    status = "OK" if report.ok else "FAIL"
+    print(f"model-check: {status} — {ex.states_explored} states / "
+          f"{ex.edges_explored} edges ({ns.clients} clients + "
+          f"{ns.rejoining} rejoining, fault budget {ns.faults}, "
+          f"quorum {ex.quorum}) in {dt:.2f}s")
+    problems = (ex.violations + report.conformance_violations
+                + report.uncovered)
+    for line in problems[:30]:
+        print("  " + line)
+    if len(problems) > 30:
+        print(f"  ... and {len(problems) - 30} more")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

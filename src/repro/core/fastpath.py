@@ -338,7 +338,7 @@ def encode(obj: Any, *, worst: bool = False) -> bytes:
     end = encode_into(obj, buf, 0, worst=worst)
     if end != len(buf):
         raise RuntimeError(f"size pre-pass mismatch: {end} != {len(buf)}")
-    return bytes(buf)
+    return bytes(buf)  # copy-ok: encode finalize — the single owned-bytes freeze
 
 
 def encode_view(obj: Any, *, worst: bool = False) -> memoryview:
@@ -370,13 +370,13 @@ BORROW_MIN = 512
 def _append_head(out: bytearray, major: int, arg: int) -> None:
     """Grow ``out`` and delegate to ``_write_head`` — one head encoder."""
     pos = len(out)
-    out += bytes(head_size(arg))
+    out += bytes(head_size(arg))  # copy-ok: zero-filled scratch growth, not a buffer copy
     _write_head(out, pos, major, arg)
 
 
 def _append_float(out: bytearray, value: float, worst: bool) -> None:
     pos = len(out)
-    out += bytes(_float_item_size(value, worst))
+    out += bytes(_float_item_size(value, worst))  # copy-ok: zero-filled scratch growth, not a buffer copy
     _write_float(out, pos, value, worst)
 
 
@@ -487,7 +487,7 @@ def vectored_nbytes(segments: Sequence) -> int:
 def vectored_bytes(segments: Sequence) -> bytes:
     """Join a segment list into owned contiguous bytes (the *one* copy a
     receiver pays; everything upstream of this call is copy-free)."""
-    return b"".join(segments)
+    return b"".join(segments)  # copy-ok: the one documented receiver-side gather copy
 
 
 class ScatterPayload:
@@ -546,10 +546,10 @@ class ScatterPayload:
             parts.append(seg[lo : lo + take])
             pos += take
             i += 1
-        return parts[0].tobytes() if len(parts) == 1 else b"".join(parts)
+        return parts[0].tobytes() if len(parts) == 1 else b"".join(parts)  # copy-ok: slice-window materialisation for the CRC fallback
 
     def tobytes(self) -> bytes:
-        return b"".join(self._segments)
+        return b"".join(self._segments)  # copy-ok: diagnostics-only contiguous dump
 
 
 # ---------------------------------------------------------------------------
@@ -693,7 +693,7 @@ class _SegmentSource:
         self.consumed += n
         # b"".join copies each gathered slice exactly once into the owned
         # (hashable) result — no bytearray-then-freeze double copy.
-        return b"".join(parts)
+        return b"".join(parts)  # copy-ok: the one documented gather copy (see comment above)
 
     def remaining(self) -> int:
         return self.total - self.consumed
@@ -732,7 +732,7 @@ class _FileSource:
                 raise CBORDecodeError("truncated CBOR input")
             chunks.append(chunk)
             remaining -= len(chunk)
-        return chunks[0] if len(chunks) == 1 else b"".join(chunks)
+        return chunks[0] if len(chunks) == 1 else b"".join(chunks)  # copy-ok: multi-chunk bstr must own its joined payload
 
     def byte(self) -> int:
         return self._read_exact(1)[0]
@@ -803,8 +803,8 @@ def _decode_item(src, *, copy: bool = False, _first: int | None = None) -> Any:
                     raise CBORDecodeError(
                         f"invalid UTF-8 in text string: {exc}") from None
             else:
-                value = bytes(raw) if copy and isinstance(raw, memoryview) \
-                    else raw
+                value = (bytes(raw)  # copy-ok: explicit copy=True opt-out of zero-copy views
+                         if copy and isinstance(raw, memoryview) else raw)
         elif major == MT_ARRAY:
             arg = _read_arg(src, ai)
             if arg == 0:
@@ -869,7 +869,7 @@ def _decode_item(src, *, copy: bool = False, _first: int | None = None) -> Any:
                 if value is BREAK:
                     chunks = frame[2]
                     value = ("".join(chunks) if frame[3] == MT_TSTR
-                             else b"".join(chunks))
+                             else b"".join(chunks))  # copy-ok: indefinite-length chunk reassembly owns its result
                     stack.pop()
                     continue
                 expect = str if frame[3] == MT_TSTR else (

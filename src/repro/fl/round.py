@@ -330,10 +330,10 @@ class RoundEngine:
         self.ctx = {
             "selected": selected, "reporters": reporters,
             "dropped": dropped, "stopped": stopped,
-            "mean_train_loss": float(np.mean(
+            "mean_train_loss": float(np.mean(  # accum-ok: reporting-only mean, not model state
                 [p.metadata.train_loss for p in progress.values()]
             )) if progress else float("nan"),
-            "mean_val_loss": float(np.mean(
+            "mean_val_loss": float(np.mean(  # accum-ok: reporting-only mean, not model state
                 [p.metadata.val_loss for p in progress.values()]
             )) if progress else float("nan"),
             # recorded into every aggregation snapshot: a restarted
@@ -547,7 +547,7 @@ class RoundEngine:
             # a tombstone write guarding the finalize->checkpoint window
             server.ckpt.delete_named(_snapshot_name(server.round))
             return
-        self.snapshot_bytes += save_agg_snapshot(server, self.ctx)
+        self.snapshot_bytes += save_agg_snapshot(server, self.ctx)  # accum-ok: int byte counter, not float accumulation
 
     # -- per-mode collection -------------------------------------------------
 

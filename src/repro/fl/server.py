@@ -68,7 +68,13 @@ class FLServer:
     def __init__(self, cfg: OrchestrationConfig, global_params: np.ndarray):
         self.cfg = cfg
         self.global_params = global_params.astype(np.float32)
-        self.model_id = uuid.uuid4()
+        # Deterministic model identity: derived from the orchestration seed
+        # via a dedicated stream (NOT self._rng — drawing from the shared
+        # stream would shift client selection and chaos schedules).  A
+        # restarted server with the same config re-derives the same id,
+        # which is what lets resumed uplinks match their generation key.
+        id_rng = np.random.default_rng([cfg.seed, 0x4D4944])  # "MID" salt
+        self.model_id = uuid.UUID(bytes=id_rng.bytes(16), version=4)
         self.round = 0
         self.stopped_clients: set[int] = set()
         self._uplink: dict[int, "UplinkEndpoint"] = {}

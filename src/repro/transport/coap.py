@@ -76,14 +76,14 @@ class CoapMessage:
         if self.payload:
             out.append(0xFF)
             out += self.payload
-        return bytes(out)
+        return bytes(out)  # copy-ok: header finalize — freeze the built frame
 
     @staticmethod
     def _nibble(v: int) -> tuple[int, bytes]:
         if v < 13:
             return v, b""
         if v < 269:
-            return 13, bytes([v - 13])
+            return 13, bytes([v - 13])  # copy-ok: 1-byte option-extension constant, not a buffer copy
         return 14, (v - 269).to_bytes(2, "big")
 
     @classmethod
@@ -146,7 +146,7 @@ def iter_blockwise_messages(payload, *, uri: str, code: Code = Code.POST,
     szx = szx_for(block_size)
     path_opts = [(Option.URI_PATH, seg.encode())
                  for seg in uri.strip("/").split("/")]
-    fmt_opt = (Option.CONTENT_FORMAT, bytes([CONTENT_CBOR]))
+    fmt_opt = (Option.CONTENT_FORMAT, bytes([CONTENT_CBOR]))  # copy-ok: 1-byte content-format constant, not a buffer copy
     n_blocks = max(1, math.ceil(len(payload) / block_size))
     for i in range(n_blocks):
         chunk = payload[i * block_size:(i + 1) * block_size]
@@ -301,7 +301,7 @@ class BlockReceiveRing:
                     "parked; dropping the transfer")
             # park one owned copy: the frame buffer may be reused by the
             # link once this call returns
-            self._pending[num] = bytes(payload)
+            self._pending[num] = bytes(payload)  # copy-ok: parked block must outlive the reusable link buffer
 
     def feed(self, msg: "CoapMessage") -> None:
         """Deliver one received blockwise CoAP message, slotting its
@@ -358,7 +358,9 @@ class BlockReceiveRing:
     def tobytes(self) -> bytes:
         """Explicit contiguous join — for tests/diagnostics, not the hot
         path (decode consumes the ring segment-wise)."""
-        return b"".join(bytes(b) for b in self._segments)
+        # join() accepts the memoryview segments directly — materialising
+        # each one first paid a second, redundant copy per segment
+        return b"".join(self._segments)  # copy-ok: diagnostics-only contiguous dump
 
     def clear(self) -> None:
         self._segments.clear()

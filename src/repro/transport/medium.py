@@ -50,13 +50,14 @@ def _damage_frame(frame: TaggedFrame, kind: str) -> TaggedFrame | None:
     The receive path must detect it (CBOR decode / per-chunk CRC) and
     recover via NACK — never crash, never install garbage.  Returns None
     when there is no payload left to damage (degrades to a drop)."""
-    payload = bytes(frame.msg.payload or b"")
+    payload = bytes(frame.msg.payload or b"")  # copy-ok: fault injection mutates an owned copy by design
     if not payload:
         return None
     if kind == "corrupt":
         mid = len(payload) // 2
-        payload = payload[:mid] + bytes([payload[mid] ^ 0xFF]) \
-            + payload[mid + 1:]
+        payload = (payload[:mid]
+                   + bytes([payload[mid] ^ 0xFF])  # copy-ok: single damaged byte, not a buffer copy
+                   + payload[mid + 1:])
     elif kind == "truncate":
         payload = payload[:-1]
         if not payload:

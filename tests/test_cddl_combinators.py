@@ -1,0 +1,169 @@
+"""Failure-path coverage for the ``core.cddl`` validator combinators:
+backtracking, tag-mismatch diagnostics, and the mis-tagged q8 rejection
+paths the happy-path schema tests never reach."""
+import pytest
+
+from repro.core.cbor import Tag
+from repro.core.cddl import (
+    ArrayOf,
+    Bool,
+    Bstr,
+    CDDLValidationError,
+    Choice,
+    Float,
+    Group,
+    OneOrMore,
+    Optional_,
+    SCHEMAS,
+    Tagged,
+    Uint,
+    validate,
+)
+
+
+# ---------------------------------------------------------------------------
+# Primitive diagnostics
+
+@pytest.mark.parametrize("node,bad,match", [
+    (Uint(), -1, "expected uint"),
+    (Uint(), True, "expected uint"),        # bool is not a uint
+    (Uint(), 1.0, "expected uint"),
+    (Float(), 1, "expected float"),
+    (Bool(), 1, "expected bool"),
+    (Bstr(), "text", "expected bstr"),
+    (Bstr(16), b"short", "expected 16-byte bstr, got 5"),
+])
+def test_primitive_rejections(node, bad, match):
+    with pytest.raises(CDDLValidationError, match=match):
+        node.check(bad)
+
+
+def test_bstr_accepts_all_buffer_types():
+    for value in (b"\x00" * 4, bytearray(4), memoryview(bytes(4))):
+        Bstr(4).check(value)
+
+
+# ---------------------------------------------------------------------------
+# Tag mismatches carry the expected tag in the message
+
+def test_tag_mismatch_reports_expected_tag():
+    node = Tagged(85, Bstr())
+    with pytest.raises(CDDLValidationError, match="expected tag 85"):
+        node.check(Tag(84, b""))
+    with pytest.raises(CDDLValidationError, match="expected tag 85"):
+        node.check(b"untagged")
+
+
+def test_tagged_checks_inner_value():
+    node = Tagged(85, Bstr(8))
+    with pytest.raises(CDDLValidationError, match="expected 8-byte bstr"):
+        node.check(Tag(85, b"xy"))
+
+
+def test_choice_error_aggregates_all_branches():
+    node = Choice([Uint(), Tagged(85, Bstr())])
+    with pytest.raises(CDDLValidationError) as exc:
+        node.check(1.5)
+    msg = str(exc.value)
+    assert msg.startswith("no choice matched")
+    assert "expected uint" in msg and "expected tag 85" in msg
+
+
+# ---------------------------------------------------------------------------
+# Group / array backtracking
+
+def test_one_or_more_stops_at_first_nonmatch_then_rest_consumes():
+    # [+ float, bool]: the repetition must hand the bool to the next member
+    node = ArrayOf([OneOrMore(Float()), Bool()])
+    node.check([1.0, 2.0, True])
+    node.check([1.0, False])
+
+
+def test_one_or_more_requires_at_least_one():
+    node = ArrayOf([OneOrMore(Float()), Bool()])
+    with pytest.raises(CDDLValidationError, match="at least one"):
+        node.check([True])
+    with pytest.raises(CDDLValidationError, match="at least one"):
+        node.check([])
+
+
+def test_optional_backtracks_without_consuming():
+    # [uint, ? (float, float), bool] — metadata-shaped splice
+    node = ArrayOf([Uint(), Optional_(Group([Float(), Float()])), Bool()])
+    node.check([1, 0.5, 0.25, True])
+    node.check([1, True])                   # optional group absent
+    # a *partial* group match must backtrack cleanly, not half-consume
+    with pytest.raises(CDDLValidationError, match="unmatched|expected"):
+        node.check([1, 0.5, True])
+
+
+def test_group_cannot_match_a_single_value():
+    with pytest.raises(CDDLValidationError, match="group cannot match"):
+        Group([Float()]).check(0.5)
+
+
+def test_array_exhaustion_and_trailing_elements():
+    node = ArrayOf([Uint(), Bool()])
+    with pytest.raises(CDDLValidationError, match="array exhausted"):
+        node.check([1])
+    with pytest.raises(CDDLValidationError, match="1 unmatched"):
+        node.check([1, True, 99])
+    with pytest.raises(CDDLValidationError, match="expected array"):
+        node.check("nope")
+
+
+def test_nack_range_pairs_must_be_complete():
+    schema = SCHEMAS["FL_Chunk_Nack"]
+    mid = Tag(37, bytes(16))
+    schema.check([mid, 0, 8, [1, 2]])           # one (start, count) pair
+    schema.check([mid, 0, 8, [1, 2, 5, 1]])     # two flat (start, count) pairs
+    with pytest.raises(CDDLValidationError):
+        schema.check([mid, 0, 8, [1, 2, 5]])    # dangling start
+    with pytest.raises(CDDLValidationError):
+        schema.check([mid, 0, 8, []])           # NACK may never be empty
+
+
+# ---------------------------------------------------------------------------
+# Mis-tagged q8 internals
+
+def _q8(inner):
+    return Tag(0x10002, inner)
+
+
+def test_q8_happy_shape():
+    item = _q8([64, 2, Tag(72, bytes(128)), Tag(85, bytes(8))])
+    SCHEMAS["FL_Global_Model_Update"].check(
+        [Tag(37, bytes(16)), 0, item, True])
+
+
+@pytest.mark.parametrize("bad", [
+    _q8([64, 2, Tag(85, bytes(128)), Tag(85, bytes(8))]),   # values not sint8
+    _q8([64, 2, Tag(72, bytes(128)), Tag(72, bytes(8))]),   # scales not f32
+    _q8([64, 2, Tag(72, bytes(128)), Tag(86, bytes(16))]),  # f64 scales
+    _q8([64, 2, bytes(128), Tag(85, bytes(8))]),            # untagged values
+    _q8([64, Tag(72, bytes(128)), Tag(85, bytes(8))]),      # missing count
+    _q8([64, 2, Tag(72, bytes(128))]),                      # missing scales
+    Tag(0x10003, [64, 2, Tag(72, bytes(128)), Tag(85, bytes(8))]),
+])
+def test_mis_tagged_q8_is_rejected(bad):
+    update = [Tag(37, bytes(16)), 0, bad, True]
+    with pytest.raises(CDDLValidationError):
+        SCHEMAS["FL_Global_Model_Update"].check(update)
+
+
+def test_chunk_params_narrower_than_model_params():
+    """f64 / bf16 / dynamic arrays are model-update payloads but NOT valid
+    chunk payloads — the chunk choice is deliberately narrower."""
+    mid = Tag(37, bytes(16))
+    head = [mid, 0, 1, 4, 0xDEAD]
+    SCHEMAS["FL_Model_Chunk"].check(head + [Tag(85, bytes(8))])
+    SCHEMAS["FL_Model_Chunk"].check(head + [Tag(84, bytes(8))])
+    for payload in (Tag(86, bytes(8)), Tag(0x10001, bytes(8)), [1.0, 2.0]):
+        with pytest.raises(CDDLValidationError):
+            SCHEMAS["FL_Model_Chunk"].check(head + [payload])
+
+
+def test_validate_helper_passes_and_raises():
+    validate([1, True], ArrayOf([Uint(), Bool()]))
+    with pytest.raises(CDDLValidationError):
+        validate([True, 1], ArrayOf([Uint(), Bool()]))

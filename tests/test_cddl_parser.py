@@ -1,0 +1,130 @@
+"""The CDDL text compiler: grammar subset, compile targets, error cases."""
+import pytest
+
+from repro.core.cddl import (
+    ArrayOf,
+    Bool,
+    Bstr,
+    Choice,
+    Float,
+    Group,
+    OneOrMore,
+    Optional_,
+    SCHEMAS,
+    Tagged,
+    Uint,
+)
+from repro.analysis.cddl_parser import (
+    CDDLParseError,
+    MESSAGE_RULES,
+    SCHEMA_PATH,
+    compile_rules,
+    compile_schemas,
+    parse,
+    tokenize,
+)
+
+
+# ---------------------------------------------------------------------------
+# Lexer
+
+def test_tokenize_kinds():
+    toks = tokenize("a = #6.85(bstr .size 16) ; comment\n b = uint")
+    kinds = [t.kind for t in toks]
+    assert kinds == ["ident", "punct", "tag", "punct", "ident", "size",
+                     "number", "punct", "ident", "punct", "ident", "eof"]
+
+
+def test_tokenize_hex_tag_and_line_numbers():
+    toks = tokenize("x =\n  #6.0x10002(uint)")
+    tag = next(t for t in toks if t.kind == "tag")
+    assert tag.text == "#6.0x10002"
+    assert tag.line == 2
+
+
+def test_tokenize_rejects_unknown_character():
+    with pytest.raises(CDDLParseError, match="unexpected character"):
+        tokenize("a = {uint}")   # maps are outside the subset
+
+
+# ---------------------------------------------------------------------------
+# Parser / compiler structure
+
+def test_compile_primitives_and_size():
+    rules = compile_rules("a = uint\nb = float\nc = bool\n"
+                          "d = bstr\ne = bstr .size 16")
+    assert rules["a"] == Uint()
+    assert rules["b"] == Float()
+    assert rules["c"] == Bool()
+    assert rules["d"] == Bstr(None)
+    assert rules["e"] == Bstr(16)
+
+
+def test_compile_tagged_choice_array_group():
+    rules = compile_rules(
+        "ta = #6.85(bstr)\n"
+        "params = [+ float] / ta\n"
+        "meta = (a: float, b: float)\n"
+        "msg = [#6.37(bstr .size 16), ? meta, params]\n")
+    assert rules["ta"] == Tagged(85, Bstr(None))
+    assert rules["params"] == Choice([ArrayOf([OneOrMore(Float())]),
+                                      Tagged(85, Bstr(None))])
+    assert rules["meta"] == Group([Float(), Float()])
+    assert rules["msg"] == ArrayOf([Tagged(37, Bstr(16)),
+                                    Optional_(Group([Float(), Float()])),
+                                    rules["params"]])
+
+
+def test_member_keys_are_dropped():
+    rules = compile_rules("a = [count: uint, flag: bool]")
+    assert rules["a"] == ArrayOf([Uint(), Bool()])
+
+
+def test_single_option_choice_is_unwrapped():
+    assert compile_rules("a = uint / uint")["a"] == Choice([Uint(), Uint()])
+    assert compile_rules("a = uint")["a"] == Uint()
+
+
+def test_rule_reference_resolution_is_order_independent():
+    rules = compile_rules("msg = [mid]\nmid = #6.37(bstr .size 16)")
+    assert rules["msg"] == ArrayOf([Tagged(37, Bstr(16))])
+
+
+# ---------------------------------------------------------------------------
+# Error cases
+
+@pytest.mark.parametrize("text,match", [
+    ("a = uint\na = bool", "duplicate rule"),
+    ("uint = bool", "cannot redefine primitive"),
+    ("a = [b]", "undefined rule"),
+    ("a = [a]", "recursive rule"),
+    ("a = []", "empty group"),
+    ("a = [uint", "expected"),
+    ("a = ", "expected a type"),
+    ("= uint", "expected"),
+])
+def test_parse_errors(text, match):
+    with pytest.raises(CDDLParseError, match=match):
+        compile_rules(text)
+
+
+# ---------------------------------------------------------------------------
+# The committed schema text
+
+def test_schemas_cddl_compiles_to_the_handbuilt_registry():
+    compiled = compile_schemas()
+    assert set(compiled) == set(SCHEMAS)
+    for key in SCHEMAS:
+        assert compiled[key] == SCHEMAS[key], f"structural drift in {key}"
+
+
+def test_schemas_cddl_defines_every_message_rule():
+    rules = parse(SCHEMA_PATH.read_text())
+    assert set(MESSAGE_RULES) <= set(rules)
+
+
+def test_missing_message_rule_is_an_error(tmp_path):
+    p = tmp_path / "partial.cddl"
+    p.write_text("fl-chunk-ack = [uint]\n")
+    with pytest.raises(CDDLParseError, match="does not define message rule"):
+        compile_schemas(p)

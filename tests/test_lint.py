@@ -1,0 +1,179 @@
+"""The invariant lint passes: rule triggers, pragma escapes, scoping."""
+import textwrap
+from pathlib import Path
+
+from repro.analysis.lint import lint_file, lint_tree
+
+
+def _lint(tmp_path: Path, rel: str, source: str):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return lint_file(path, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# copy rule
+
+def test_copy_rule_flags_tobytes_bytes_and_join(tmp_path):
+    findings = _lint(tmp_path, "core/fastpath.py", """\
+        def f(view, parts):
+            a = view.tobytes()
+            b = bytes(view)
+            c = b"".join(parts)
+            return a, b, c
+        """)
+    assert [f.rule for f in findings] == ["copy", "copy", "copy"]
+
+
+def test_copy_rule_ignores_literals_and_out_of_scope_files(tmp_path):
+    clean = _lint(tmp_path, "core/fastpath.py", """\
+        def f():
+            return bytes(16), b"x"
+        """)
+    assert clean == []
+    elsewhere = _lint(tmp_path, "fl/client.py", """\
+        def f(view):
+            return view.tobytes()
+        """)
+    assert elsewhere == []
+
+
+def test_copy_pragma_requires_reason(tmp_path):
+    ok = _lint(tmp_path, "core/fastpath.py", """\
+        def f(view):
+            return view.tobytes()  # copy-ok: freeze for the journal record
+        """)
+    assert ok == []
+    bare = _lint(tmp_path, "core/fastpath.py", """\
+        def f(view):
+            return view.tobytes()  # copy-ok:
+        """)
+    assert len(bare) == 1 and "requires a reason" in bare[0].message
+
+
+def test_copy_rule_flags_subscripted_receiver(tmp_path):
+    findings = _lint(tmp_path, "core/fastpath.py", """\
+        def f(parts):
+            return parts[0].tobytes()
+        """)
+    assert [f.rule for f in findings] == ["copy"]
+
+
+# ---------------------------------------------------------------------------
+# accum rule
+
+def test_accum_rule_flags_sum_mean_and_augadd(tmp_path):
+    findings = _lint(tmp_path, "fl/aggregation.py", """\
+        import numpy as np
+
+        def f(xs, acc):
+            a = sum(xs)
+            b = np.mean(xs)
+            acc += xs[0]
+            return a, b
+        """)
+    assert [f.rule for f in findings] == ["accum", "accum", "accum"]
+
+
+def test_accum_rule_exempts_runningfedavg_and_int_counters(tmp_path):
+    findings = _lint(tmp_path, "fl/aggregation.py", """\
+        import numpy as np
+
+        class RunningFedAvg:
+            def add(self, xs):
+                self._hi += xs          # the owner of the invariant
+                return np.sum(xs)
+
+        def g(n):
+            n += 1                      # int-literal counter
+            return n
+        """)
+    assert findings == []
+
+
+def test_accum_pragma_escape(tmp_path):
+    findings = _lint(tmp_path, "fl/round.py", """\
+        import numpy as np
+
+        def f(losses):
+            return np.mean(losses)  # accum-ok: reporting-only mean
+        """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# det rule
+
+def test_det_rule_flags_entropy_and_clocks(tmp_path):
+    findings = _lint(tmp_path, "fl/server.py", """\
+        import random
+        import time
+        import uuid
+        import numpy as np
+
+        def f():
+            a = uuid.uuid4()
+            b = time.time()
+            c = random.random()
+            d = np.random.rand(3)
+            e = np.random.default_rng()
+            return a, b, c, d, e
+        """)
+    assert [f.rule for f in findings] == ["det"] * 5
+
+
+def test_det_rule_allows_seeded_rng_and_out_of_scope(tmp_path):
+    clean = _lint(tmp_path, "fl/server.py", """\
+        import numpy as np
+
+        def f(seed):
+            return np.random.default_rng(seed)
+        """)
+    assert clean == []
+    bench = _lint(tmp_path, "bench/timing.py", """\
+        import time
+
+        def f():
+            return time.perf_counter()
+        """)
+    assert bench == []
+
+
+# ---------------------------------------------------------------------------
+# except rule (everywhere, no pragma)
+
+def test_bare_except_is_always_flagged(tmp_path):
+    findings = _lint(tmp_path, "core/anything.py", """\
+        def f():
+            try:
+                return 1
+            except:  # noqa
+                return 2
+        """)
+    assert [f.rule for f in findings] == ["except"]
+
+
+def test_typed_except_is_fine(tmp_path):
+    findings = _lint(tmp_path, "core/anything.py", """\
+        def f():
+            try:
+                return 1
+            except ValueError:
+                return 2
+        """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+
+def test_repo_tree_is_lint_clean():
+    root = Path(__file__).resolve().parents[1] / "src" / "repro"
+    findings = lint_tree(root)
+    assert findings == [], [str(f) for f in findings[:10]]
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    findings = _lint(tmp_path, "core/broken.py", "def f(:\n")
+    assert len(findings) == 1 and findings[0].rule == "syntax"

@@ -1,0 +1,109 @@
+"""The schema-drift gate: corpus validity, mutant agreement, gate teeth."""
+import numpy as np
+import pytest
+
+from repro.core.cbor import Tag
+from repro.core.cddl import (
+    ArrayOf,
+    Bstr,
+    CDDLValidationError,
+    SCHEMAS,
+    Tagged,
+    Uint,
+    validate,
+)
+from repro.analysis.cddl_parser import compile_schemas
+from repro.analysis.drift import (
+    _outcome,
+    _set,
+    _sites,
+    build_corpus,
+    generate_mutants,
+    run_drift_check,
+)
+
+
+def test_corpus_covers_every_schema_key():
+    keys = {key for key, _ in build_corpus()}
+    assert keys == set(SCHEMAS)
+
+
+def test_corpus_entries_are_valid_for_both_trees():
+    compiled = compile_schemas()
+    for key, item in build_corpus():
+        assert _outcome(SCHEMAS[key], item) == ("accept",)
+        assert _outcome(compiled[key], item) == ("accept",)
+
+
+def test_mutants_are_deterministic_per_seed():
+    corpus = build_corpus()
+    a = generate_mutants(corpus, 50, seed=7)
+    b = generate_mutants(corpus, 50, seed=7)
+    assert [(k, repr(m)) for k, m in a] == [(k, repr(m)) for k, m in b]
+    c = generate_mutants(corpus, 50, seed=8)
+    assert [(k, repr(m)) for k, m in a] != [(k, repr(m)) for k, m in c]
+
+
+def test_mutation_sites_address_the_whole_tree():
+    item = [Tag(37, bytes(16)), 0, [1.5], False]
+    paths = _sites(item)
+    assert () in paths                       # the root itself
+    assert (0, "value") in paths             # inside the tag
+    assert (2, 0) in paths                   # nested list element
+    mutated = _set(item, (2, 0), "oops")
+    assert mutated[2] == ["oops"]
+    assert item[2] == [1.5], "copy-on-write must not touch the original"
+
+
+def test_drift_gate_passes_on_the_committed_pair():
+    report = run_drift_check(mutants=200, seed=1)
+    assert report.ok, report.mismatches[:5]
+    assert report.corpus_n >= 40
+    assert report.rejects > 0, "mutant pool never exercised rejection"
+
+
+def test_drift_gate_catches_a_perturbed_compiled_tree():
+    """The gate's teeth: perturb one node of the compiled tree and the
+    differential check must fail."""
+    compiled = compile_schemas()
+    broken = dict(compiled)
+    # FL_Chunk_Ack = [mid, round, num-chunks]; widen num-chunks to Bstr
+    broken["FL_Chunk_Ack"] = ArrayOf([Tagged(37, Bstr(16)), Uint(),
+                                      Bstr(None)])
+    report = run_drift_check(compiled=broken, mutants=300, seed=2)
+    assert not report.ok
+    assert any("FL_Chunk_Ack" in m for m in report.mismatches)
+
+
+def test_drift_gate_catches_a_perturbed_handbuilt_tree():
+    handbuilt = dict(SCHEMAS)
+    handbuilt["FL_Chunk_Nack"] = SCHEMAS["FL_Chunk_Ack"]  # wrong shape
+    report = run_drift_check(handbuilt=handbuilt, mutants=100, seed=3)
+    assert not report.ok
+
+
+def test_outcome_classifies_foreign_exceptions():
+    class Boom:
+        def check(self, item):
+            raise RuntimeError("not a validation error")
+
+    out = _outcome(Boom(), [1])
+    assert out[0] == "error" and out[1] == "RuntimeError"
+
+
+def test_outcome_matches_validate_for_rejects():
+    bad = [Tag(36, bytes(16)), 0, [1.0], True]   # wrong UUID tag
+    out = _outcome(SCHEMAS["FL_Global_Model_Update"], bad)
+    assert out[0] == "reject"
+    with pytest.raises(CDDLValidationError):
+        validate(bad, SCHEMAS["FL_Global_Model_Update"])
+
+
+def test_wide_corpus_exercises_multiblock_q8():
+    from repro.core.messages import FLGlobalModelUpdate, ParamsEncoding
+    from repro.analysis.drift import _decode
+    mid = __import__("uuid").UUID(int=5)
+    wide = np.linspace(-4, 4, 600, dtype=np.float64)
+    item = _decode(FLGlobalModelUpdate(mid, 1, wide, True)
+                   .to_cbor(ParamsEncoding.Q8))
+    assert _outcome(SCHEMAS["FL_Global_Model_Update"], item) == ("accept",)

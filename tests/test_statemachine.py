@@ -1,0 +1,114 @@
+"""The round-lifecycle model checker: tables, exploration, conformance."""
+import pytest
+
+from repro.analysis.statemachine import (
+    ASSEMBLER,
+    CLIENT,
+    SERVER,
+    UPLINK,
+    conformance_assembler,
+    conformance_server,
+    conformance_uplink,
+    explore_round,
+    run_model_check,
+)
+
+
+# ---------------------------------------------------------------------------
+# Table sanity
+
+def test_tables_are_internally_consistent():
+    for machine in (CLIENT, SERVER, UPLINK, ASSEMBLER):
+        assert machine.initial in machine.states
+        assert machine.terminal <= machine.states
+        for (s, _), s2 in machine.transitions.items():
+            assert s in machine.states and s2 in machine.states
+
+
+def test_validate_trace_flags_undeclared_transitions():
+    bad = [("idle", "teleport", "done")]
+    errors = CLIENT.validate_trace(bad)
+    assert len(errors) == 1 and "undeclared" in errors[0]
+    ok = [("idle", "select", "downloading")]
+    assert CLIENT.validate_trace(ok) == []
+
+
+def test_validate_trace_flags_wrong_target():
+    errors = CLIENT.validate_trace([("idle", "select", "training")])
+    assert len(errors) == 1 and "declared ->" in errors[0]
+
+
+# ---------------------------------------------------------------------------
+# Exploration
+
+def test_exploration_two_clients_is_clean():
+    report = explore_round(2, rejoining=1, max_faults=2)
+    assert report.ok, report.violations[:5]
+    assert report.states_explored > 1000
+    assert report.quorum == 1
+
+
+def test_exploration_covers_all_declared_client_states():
+    report = explore_round(2, rejoining=1, max_faults=2)
+    covered = {s for s, _ in report.client_edges} \
+        | {CLIENT.step(s, e) for s, e in report.client_edges}
+    assert covered == CLIENT.states
+
+
+def test_exploration_without_faults_still_terminates():
+    report = explore_round(1, rejoining=0, max_faults=0)
+    assert report.ok, report.violations[:5]
+    # no fault budget: crash/leave edges are never taken
+    events = {e for _, e in report.client_edges}
+    assert "crash" not in events and "leave" not in events
+
+
+def test_exploration_quorum_respects_config():
+    report = explore_round(2, rejoining=0, max_faults=1, quorum=2)
+    assert report.ok, report.violations[:5]
+    # with quorum 2, finalize is only reachable after both clients fold
+    assert ("aggregating", "finalize") in report.server_edges
+    assert ("aggregating", "abort") in report.server_edges
+
+
+# ---------------------------------------------------------------------------
+# Conformance shims against the real implementations
+
+def test_assembler_conformance_trace_is_declared():
+    trace = conformance_assembler()
+    assert ASSEMBLER.validate_trace(trace) == []
+    events = {e for _, e, _ in trace}
+    assert {"first_chunk", "duplicate", "stale_rejected", "completed",
+            "new_generation", "restart_generation", "restore"} <= events
+
+
+def test_server_conformance_trace_is_declared():
+    trace = conformance_server()
+    assert SERVER.validate_trace(trace) == []
+    events = {e for _, e, _ in trace}
+    assert {"begin", "fold", "duplicate_ignored", "stale_rejected",
+            "snapshot", "crash", "restore", "finalize", "abort"} <= events
+
+
+def test_uplink_conformance_trace_is_declared():
+    trace = conformance_uplink()
+    assert UPLINK.validate_trace(trace) == []
+    events = {e for _, e, _ in trace}
+    assert {"enqueue", "enqueue_poll", "frame_sent", "window_boundary",
+            "ack", "nack", "poll", "crash", "resume", "expire",
+            "budget_exhausted"} <= events
+
+
+# ---------------------------------------------------------------------------
+# The combined gate (the CI entry point)
+
+def test_full_model_check_is_clean():
+    report = run_model_check(2, rejoining=1, max_faults=2)
+    assert report.ok, (report.exploration.violations[:3]
+                       + report.conformance_violations[:3]
+                       + report.uncovered[:3])
+
+
+def test_full_model_check_covers_every_declared_transition():
+    report = run_model_check(2, rejoining=1, max_faults=2)
+    assert report.uncovered == []
