@@ -1,0 +1,164 @@
+# Scale tier: 1k-10k-client interleaved rounds on the event-heap
+# scheduler (fl.chunking._run_event_heap).  The legacy per-frame scan
+# rebuilt the contender list for every frame -- O(N) per frame, so a
+# 1,000-client round was a timeout; the event heap makes it a bench row.
+#
+# `--check` is the CI scale gate: every row must complete (all sessions
+# ACKed) and the 1k / 10k rows must land under their wall-clock budgets.
+# `--out` writes the fresh rows before the budget assertions, so a
+# failing gate still produces the artifact.
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+import uuid
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+if str(_REPO) not in sys.path:
+    sys.path.insert(0, str(_REPO))
+
+# Wall-clock budgets (seconds) for the gated rows.  Local runs land ~20x
+# under these; the headroom absorbs slow shared CI runners, not real
+# scheduler regressions (an O(N)-per-frame scheduler blows through them
+# by orders of magnitude at these cohort sizes).
+BUDGET_1K_S = 90.0
+BUDGET_10K_S = 300.0
+
+# Row shapes: cohort size, model params, chunk elems.  The 1k row keeps
+# enough frames per client (~34) that scheduling dominates; the 10k
+# smoke shrinks the model so the row stays a smoke test, not a soak.
+ROWS = [
+    ("64c", 64, 512, 256),
+    ("256c", 256, 512, 256),
+    ("1k", 1000, 512, 256),
+    ("10k_smoke", 10_000, 64, 64),
+]
+POLICY_ROW_CLIENTS = 256
+POLICIES = ("seeded-random", "shortest-remaining-first", "deadline-aware")
+
+
+def _run_round(n_clients: int, n_elems: int, chunk_elems: int,
+               *, arbitration: str = "seeded-random",
+               hetero: bool = False) -> dict:
+    from repro.fl.chunking import (
+        AssemblerReceiver,
+        UplinkSession,
+        chunk_stream,
+        run_interleaved_uplinks,
+    )
+    from repro.transport.medium import SharedMedium
+
+    mid = uuid.UUID(int=9)
+    import numpy as np
+
+    def mk_session(c: int):
+        # hetero: every 8th client carries a 4x model — the straggler
+        # minority that state-aware arbitration policies reorder around
+        n = n_elems * 4 if hetero and c % 8 == 0 else n_elems
+        params = (np.arange(n, dtype=np.float32) - n / 2) / 8.0
+        return UplinkSession(
+            c, list(chunk_stream(mid, 1, params, chunk_elems)),
+            AssemblerReceiver(expected_elems=n))
+
+    sessions = [mk_session(c) for c in range(n_clients)]
+    medium = SharedMedium(seed=1, turnaround_s=0.05,
+                          arbitration=arbitration)
+    t0 = time.perf_counter()
+    report = run_interleaved_uplinks(medium, sessions)
+    wall_s = time.perf_counter() - t0
+    energies = sorted(report.per_client_energy_j.values())
+    duties = sorted(report.duty_cycle.values())
+    done = [t for t in report.per_client_done_s.values() if t is not None]
+    return {
+        "clients": n_clients,
+        "params": n_elems,
+        "chunk_elems": chunk_elems,
+        "policy": arbitration,
+        "acked": sum(1 for s in sessions if s.acked),
+        "frames": medium.frames_sent,
+        "airtime_s": round(report.airtime_s, 6),
+        "busy_s": round(report.busy_s, 6),
+        "mean_done_s": round(sum(done) / len(done), 6) if done else None,
+        "wall_s": round(wall_s, 3),
+        "mean_energy_j": round(sum(energies) / len(energies), 6),
+        "max_duty_cycle": round(duties[-1], 6),
+    }
+
+
+def run_json() -> tuple[list[str], dict]:
+    """All scale rows + the per-policy comparison; returns (csv rows,
+    the ``scale_rounds`` record for BENCH_codec.json)."""
+    rows = ["label,clients,policy,frames,airtime_s,mean_done_s,wall_s,"
+            "mean_energy_j,max_duty_cycle"]
+    record: dict = {"rows": {}, "policies": {}}
+
+    def fmt(label: str, r: dict) -> str:
+        return (f"{label},{r['clients']},{r['policy']},{r['frames']},"
+                f"{r['airtime_s']:.3f},{r['mean_done_s']:.3f},"
+                f"{r['wall_s']:.3f},{r['mean_energy_j']:.6f},"
+                f"{r['max_duty_cycle']:.4f}")
+
+    for label, n_clients, n_elems, chunk_elems in ROWS:
+        r = _run_round(n_clients, n_elems, chunk_elems)
+        record["rows"][label] = r
+        rows.append(fmt(label, r))
+    # policy comparison on a heterogeneous cohort (straggler minority):
+    # shortest-remaining-first minimizes mean completion, deadline-aware
+    # minimizes the straggler's finish — the mean_done_s column shows it
+    for policy in POLICIES:
+        r = _run_round(POLICY_ROW_CLIENTS, 512, 256, arbitration=policy,
+                       hetero=True)
+        record["policies"][policy] = r
+        rows.append(fmt(f"policy_{policy}", r))
+    return rows, record
+
+
+def check(out: str | None = None) -> int:
+    rows, record = run_json()
+    print("\n".join(rows))
+    if out:
+        Path(out).write_text(json.dumps({"scale_rounds": record}, indent=2)
+                             + "\n")
+        print(f"check: wrote fresh scale rows to {out}")
+    failed = False
+    for label, r in {**record["rows"], **record["policies"]}.items():
+        if r["acked"] != r["clients"]:
+            failed = True
+            print(f"check: {label}: only {r['acked']}/{r['clients']} "
+                  "sessions completed")
+    for label, budget in (("1k", BUDGET_1K_S), ("10k_smoke", BUDGET_10K_S)):
+        wall = record["rows"][label]["wall_s"]
+        if wall > budget:
+            failed = True
+            print(f"check: {label} round took {wall:.1f}s "
+                  f"(budget {budget:.0f}s)")
+        else:
+            print(f"check: {label} round {wall:.1f}s "
+                  f"<= budget {budget:.0f}s")
+    if failed:
+        return 1
+    print("check: OK (all scale rows completed within budget)")
+    return 0
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--check", action="store_true",
+                        help="gate: every row completes, 1k/10k rows under "
+                             "their wall-clock budgets")
+    parser.add_argument("--out", default=None,
+                        help="write the fresh scale rows to this path "
+                             "(before the budget assertions)")
+    args = parser.parse_args()
+    if args.check:
+        return check(args.out)
+    rows, _ = run_json()
+    print("\n".join(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

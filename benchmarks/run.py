@@ -112,6 +112,7 @@ def main() -> int:
         bench_fl_round,
         bench_lenet,
         bench_message_sizes,
+        bench_scale,
         bench_wire_bytes,
     )
 
@@ -142,6 +143,12 @@ def main() -> int:
         rows.append(f"# merged wire_bytes_per_round into {BENCH_JSON}")
         return rows
 
+    def scale_run():
+        rows, record = bench_scale.run_json()
+        _merge_into_bench_json({"scale_rounds": record})
+        rows.append(f"# merged scale_rounds into {BENCH_JSON}")
+        return rows
+
     sections = [
         ("table1_message_sizes", bench_message_sizes.run),
         ("table2_lenet5", bench_lenet.run),
@@ -150,6 +157,7 @@ def main() -> int:
         ("fl_round_accounting", bench_fl_round.run),
         ("uplink_airtime_shared_medium", bench_fl_round.run_uplink_airtime),
         ("fault_sweep", fault_sweep_run),
+        ("scale_rounds", scale_run),
     ]
     for name, fn in sections:
         t0 = time.time()

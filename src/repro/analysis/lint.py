@@ -20,6 +20,13 @@ load-bearing (listed per rule below); violations are reported as
   legacy ``np.random.*`` globals, zero-argument ``default_rng()``,
   ``time.time``/``monotonic``/``perf_counter``, ``datetime.now``/
   ``utcnow``, ``uuid.uuid1``/``uuid4``.  Escape with ``# det-ok: <reason>``.
+* **sched** — the event-heap scheduler's hot path must stay
+  O(log N) per event: ``sorted(...)`` and ``.sort()`` over holdback /
+  contender structures in the scheduler modules re-introduce the
+  sort-the-world-per-frame cost the heap rewrite removed.  Banned in
+  ``fl/chunking.py`` and ``transport/medium.py``; escape with
+  ``# sched-ok: <reason>`` for the off-hot-path sites (window feedback,
+  state export, error messages).
 * **except** — bare ``except:`` swallows ``KeyboardInterrupt`` and
   ``SystemExit``; banned everywhere in ``src/repro``, no pragma.
 
@@ -48,11 +55,16 @@ ACCUM_SCOPE = (
     "fl/round.py",
 )
 DET_SCOPE_PREFIXES = ("fl/", "transport/")
+SCHED_SCOPE = (
+    "fl/chunking.py",
+    "transport/medium.py",
+)
 
 _PRAGMAS = {
     "copy": re.compile(r"#\s*copy-ok:(?P<reason>.*)"),
     "accum": re.compile(r"#\s*accum-ok:(?P<reason>.*)"),
     "det": re.compile(r"#\s*det-ok:(?P<reason>.*)"),
+    "sched": re.compile(r"#\s*sched-ok:(?P<reason>.*)"),
 }
 
 _DET_TIME_CALLS = {
@@ -99,6 +111,7 @@ class _FileLinter(ast.NodeVisitor):
         self.copy_scoped = rel in COPY_SCOPE
         self.accum_scoped = rel in ACCUM_SCOPE
         self.det_scoped = rel.startswith(DET_SCOPE_PREFIXES)
+        self.sched_scoped = rel in SCHED_SCOPE
         self._class_stack: list[str] = []
 
     # -- pragma handling ----------------------------------------------------
@@ -178,6 +191,18 @@ class _FileLinter(ast.NodeVisitor):
                 self._report("det", node,
                              "default_rng() without a seed is "
                              "entropy-seeded")
+        if self.sched_scoped:
+            if dotted == ("sorted",):
+                self._report("sched", node,
+                             "sorted(...) in a scheduler module — the "
+                             "event-heap hot path must stay O(log N) per "
+                             "event")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "sort"):
+                self._report("sched", node,
+                             ".sort() in a scheduler module — the "
+                             "event-heap hot path must stay O(log N) per "
+                             "event")
         self.generic_visit(node)
 
     def visit_AugAssign(self, node: ast.AugAssign) -> None:

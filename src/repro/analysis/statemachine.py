@@ -17,6 +17,13 @@ explicit declared transition tables (the static artifact):
 * ``ASSEMBLER`` — ``fl.chunking.ChunkAssembler``'s generation
   lifecycle: empty → assembling → complete, duplicates, stale
   rejection, generation preemption and checkpoint restore.
+* ``SCHEDULER`` — the event-heap medium scheduler's per-session
+  lifecycle (``fl.chunking._run_event_heap``): waiting → ready →
+  transmitting and back through turnaround gaps / feedback waits, with
+  crash and deadline-expiry exits.  Its own small product model
+  (``explore_scheduler``) checks medium exclusivity (at most one
+  session transmitting) and liveness; the conformance shim drives the
+  *real* scheduler via its ``sched_trace`` hook.
 
 Two independent checks keep the tables honest:
 
@@ -202,7 +209,37 @@ ASSEMBLER = StateMachine(
     },
 )
 
-MACHINES = {m.name: m for m in (CLIENT, SERVER, UPLINK, ASSEMBLER)}
+SCHEDULER = StateMachine(
+    name="medium-scheduler",
+    initial="waiting",
+    terminal=frozenset({"finished"}),
+    transitions={
+        # a session's turnaround/backoff/training gate passed: it joins
+        # the ready contenders
+        ("waiting", "wake"): "ready",
+        # arbitration granted this session the slot
+        ("ready", "grant"): "transmitting",
+        # mid-window frame: more frames staged, stays a contender
+        ("transmitting", "frame_sent"): "ready",
+        # last frame of a window: gated behind the feedback turnaround
+        ("transmitting", "window_gap"): "waiting",
+        ("transmitting", "window_open"): "ready",     # zero turnaround
+        # feedback round-trip ran; the next window is gated (backoff /
+        # poll interval) or may transmit immediately (repair window)
+        ("transmitting", "feedback_wait"): "waiting",
+        ("transmitting", "feedback_ready"): "ready",
+        # feedback concluded the session (ACK / budget exhausted)
+        ("transmitting", "finish"): "finished",
+        # injected client crash at the granted slot
+        ("transmitting", "crash"): "finished",
+        # round deadline: unfinished sessions halt wherever they sit
+        ("waiting", "expire"): "finished",
+        ("ready", "expire"): "finished",
+    },
+)
+
+MACHINES = {m.name: m for m in (CLIENT, SERVER, UPLINK, ASSEMBLER,
+                                SCHEDULER)}
 
 
 # ---------------------------------------------------------------------------
@@ -448,6 +485,83 @@ def explore_round(n_clients: int = 2, *, rejoining: int = 1,
         report.violations.append(
             f"unreachable declared server state {state!r}")
     return report
+
+
+# ---------------------------------------------------------------------------
+# Scheduler product model: K sessions × the SCHEDULER machine.
+
+
+def explore_scheduler(n_clients: int = 3
+                      ) -> tuple[set[tuple[str, str]], list[str]]:
+    """BFS the abstract event-heap scheduler: every session in one of
+    {waiting, ready, transmitting, finished}, a grant only possible while
+    nobody holds the medium.  Checks, on every reachable state:
+
+    * medium exclusivity — at most one session transmitting;
+    * every edge taken is declared in SCHEDULER;
+    * liveness — every reachable state can reach all-finished (a crash
+      or deadline expiry is always available, so no schedule deadlocks).
+
+    Returns the covered ``(state, event)`` set and any violations.
+    """
+    edges: set[tuple[str, str]] = set()
+    violations: list[str] = []
+    init = ("waiting",) * n_clients
+    graph: dict[tuple, list[tuple]] = {}
+    seen = {init}
+    queue = deque([init])
+    while queue:
+        st = queue.popleft()
+        if sum(1 for cs in st if cs == "transmitting") > 1:
+            violations.append(f"medium exclusivity violated: {st!r}")
+        out: list[tuple] = []
+        busy = "transmitting" in st
+        for i, cs in enumerate(st):
+            moves: list[tuple[str, str]] = []
+            if cs == "waiting":
+                moves = [("wake", "ready"), ("expire", "finished")]
+            elif cs == "ready":
+                moves = [("expire", "finished")]
+                if not busy:
+                    moves.append(("grant", "transmitting"))
+            elif cs == "transmitting":
+                moves = [("frame_sent", "ready"), ("window_gap", "waiting"),
+                         ("window_open", "ready"),
+                         ("feedback_wait", "waiting"),
+                         ("feedback_ready", "ready"),
+                         ("finish", "finished"), ("crash", "finished")]
+            for event, new_cs in moves:
+                declared = SCHEDULER.step(cs, event)
+                if declared != new_cs:
+                    violations.append(
+                        f"scheduler explorer took undeclared edge "
+                        f"({cs!r}, {event!r}) -> {new_cs!r}")
+                edges.add((cs, event))
+                out.append(st[:i] + (new_cs,) + st[i + 1:])
+        graph[st] = out
+        for st2 in out:
+            if st2 not in seen:
+                seen.add(st2)
+                queue.append(st2)
+
+    # liveness: backward reachability from the all-finished state
+    reverse: dict[tuple, list[tuple]] = {st: [] for st in seen}
+    for st, succ in graph.items():
+        for st2 in succ:
+            reverse[st2].append(st)
+    done = ("finished",) * n_clients
+    can_finish = {done} if done in seen else set()
+    frontier = deque(can_finish)
+    while frontier:
+        st = frontier.popleft()
+        for prev in reverse[st]:
+            if prev not in can_finish:
+                can_finish.add(prev)
+                frontier.append(prev)
+    for st in sorted(seen - can_finish)[:5]:
+        violations.append(f"scheduler deadlock: {st!r} cannot reach "
+                          "all-finished")
+    return edges, violations
 
 
 # ---------------------------------------------------------------------------
@@ -781,6 +895,103 @@ def conformance_uplink() -> list[Triple]:
     return traces
 
 
+def _sched_triples(events: dict[int, list[str]]) -> list[Triple]:
+    """Fold per-client ``sched_trace`` event streams into (state, event,
+    state) triples by stepping the declared machine: an event the machine
+    does not declare from the tracked state keeps the old state, which
+    ``validate_trace`` then flags."""
+    triples: list[Triple] = []
+    for cid in sorted(events):
+        state = SCHEDULER.initial
+        for e in events[cid]:
+            nxt = SCHEDULER.step(state, e)
+            triples.append((state, e, nxt if nxt is not None else state))
+            if nxt is None:
+                break
+            state = nxt
+    return triples
+
+
+def conformance_scheduler() -> list[Triple]:
+    """Drive the *real* event-heap scheduler (``run_interleaved_uplinks``)
+    through every declared SCHEDULER transition via its ``sched_trace``
+    hook: clean multi-client rounds, repair windows, lost feedback,
+    zero-turnaround boundaries, injected crashes, and deadline expiry
+    from both the ready and waiting states."""
+    from repro.fl.chunking import (
+        AssemblerReceiver,
+        UplinkSession,
+        run_interleaved_uplinks,
+    )
+    from repro.transport.medium import SharedMedium
+
+    mid, params, chunks = _mk_chunks(0)
+    traces: list[Triple] = []
+
+    def run(n_clients: int, *, seed: int, turnaround_s: float = 0.05,
+            chunk_drop=None, deadline_s=None, crash_at=None, faults=None):
+        events: dict[int, list[str]] = {}
+        sessions = []
+        for c in range(n_clients):
+            kw = {}
+            if crash_at is not None and c in crash_at:
+                kw["crash_at"] = crash_at[c]
+            sessions.append(UplinkSession(
+                c, chunks, AssemblerReceiver(expected_elems=params.size),
+                **kw))
+        medium = SharedMedium(seed=seed, turnaround_s=turnaround_s,
+                              chunk_drop=chunk_drop)
+        run_interleaved_uplinks(
+            medium, sessions, deadline_s=deadline_s, faults=faults,
+            sched_trace=lambda e, c: events.setdefault(c, []).append(e))
+        return sessions, events
+
+    # 1. clean 2-client round: wake/grant/frame_sent/window_gap/finish
+    sessions, events = run(2, seed=1)
+    assert all(s.acked for s in sessions)
+    assert all(ev[-1] == "finish" for ev in events.values())
+    assert any("window_gap" in ev for ev in events.values())
+    traces += _sched_triples(events)
+
+    # 2. dropped chunk -> NACK -> repair window ready immediately
+    sessions, events = run(2, seed=2,
+                           chunk_drop=lambda uri, w, i, c:
+                           w == 0 and i == 1 and c == 0)
+    assert all(s.acked for s in sessions)
+    assert "feedback_ready" in events[0]
+    traces += _sched_triples(events)
+
+    # 3. lost feedback -> empty poll window gated a turnaround out
+    sessions, events = run(1, seed=3, faults=_FeedbackLoss({(0, 0)}))
+    assert sessions[0].acked and "feedback_wait" in events[0]
+    traces += _sched_triples(events)
+
+    # 4. zero turnaround: the window boundary leaves the session ready
+    sessions, events = run(2, seed=4, turnaround_s=0.0)
+    assert all(s.acked for s in sessions)
+    assert any("window_open" in ev for ev in events.values())
+    traces += _sched_triples(events)
+
+    # 5. injected crash at a granted slot
+    sessions, events = run(2, seed=5, crash_at={0: (0, 1)})
+    assert sessions[0].crashed and sessions[1].acked
+    assert events[0][-1] == "crash"
+    traces += _sched_triples(events)
+
+    # 6. deadline mid-window: contenders expire from ready
+    sessions, events = run(2, seed=6, deadline_s=0.01)
+    assert all(s.expired for s in sessions)
+    assert all(ev[-1] == "expire" for ev in events.values())
+    traces += _sched_triples(events)
+
+    # 7. deadline inside a long turnaround gap: expire from waiting
+    sessions, events = run(1, seed=7, turnaround_s=10.0, deadline_s=1.0)
+    assert sessions[0].expired
+    assert "window_gap" in events[0] and events[0][-1] == "expire"
+    traces += _sched_triples(events)
+    return traces
+
+
 # ---------------------------------------------------------------------------
 # The combined gate.
 
@@ -807,26 +1018,32 @@ def run_model_check(n_clients: int = 2, *, rejoining: int = 1,
         ASSEMBLER.name: conformance_assembler(),
         SERVER.name: conformance_server(),
         UPLINK.name: conformance_uplink(),
+        SCHEDULER.name: conformance_scheduler(),
     }
     for name, trace in shim_traces.items():
         report.conformance_violations += MACHINES[name].validate_trace(trace)
 
+    # the scheduler's own product model: medium exclusivity + liveness
+    sched_edges, sched_violations = explore_scheduler()
+    report.conformance_violations += sched_violations
+
     # transition coverage: every declared transition must be exercised by
-    # the explorer (CLIENT/SERVER) or a conformance shim (all machines)
+    # the explorer (CLIENT/SERVER/SCHEDULER) or a conformance shim
     covered: dict[str, set] = {name: {(s, e) for s, e, _ in trace}
                                for name, trace in shim_traces.items()}
     covered.setdefault(CLIENT.name, set())
     covered[CLIENT.name] |= exploration.client_edges
     covered[SERVER.name] |= exploration.server_edges
+    covered[SCHEDULER.name] |= sched_edges
     for name, machine in MACHINES.items():
         for key in sorted(set(machine.transitions) - covered.get(name, set())):
             report.uncovered.append(
                 f"{name}: declared transition {key!r} never exercised")
         # shim-observed states double as the reachability witness for the
-        # machines outside the product model
+        # machines outside the round product model
         seen_states = ({s for s, _, _ in shim_traces.get(name, ())}
                        | {s2 for _, _, s2 in shim_traces.get(name, ())})
-        if name in (UPLINK.name, ASSEMBLER.name):
+        if name in (UPLINK.name, ASSEMBLER.name, SCHEDULER.name):
             for state in sorted(machine.states - seen_states):
                 report.uncovered.append(
                     f"{name}: declared state {state!r} never reached")

@@ -30,8 +30,10 @@ correctness.
 """
 from __future__ import annotations
 
+import heapq
 import uuid
 import zlib
+from bisect import insort
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, Sequence
 
@@ -550,7 +552,7 @@ class ChunkAssembler:
             "encoding": ("" if self._encoding is None
                          else self._encoding.value),
             "q8_block": int(self._q8_block or 0),
-            "received": np.fromiter(sorted(self._received), dtype="<i4",
+            "received": np.fromiter(sorted(self._received), dtype="<i4",  # sched-ok: checkpoint export, not the frame loop
                                     count=len(self._received)),
             "buf": self._buf,
         }
@@ -734,7 +736,7 @@ def run_selective_repeat(
             report.stats.add(delivery.stats)
             report.chunk_sends += len(send_list)
             report.payload_bytes += delivery.stats.payload_bytes
-            for i in sorted(set().union(*delivery.delivered)):
+            for i in sorted(set().union(*delivery.delivered)):  # sched-ok: per-window delivery fan-out, not per-frame
                 # fan out the sender-side message object: the wire bytes
                 # were already validated against it, and the assembler
                 # CRC-checks every chunk, so no per-delivery decode copy.
@@ -774,10 +776,10 @@ def run_selective_repeat(
             else:
                 back = FLChunkNack.from_cbor(payload, expect_num_chunks=n)
                 missing_union |= set(back.missing)
-        to_send = sorted(missing_union)
+        to_send = sorted(missing_union)  # sched-ok: once per repair window, not per frame
         window += 1
         report.windows = window
-    report.completed = sorted(complete)
+    report.completed = sorted(complete)  # sched-ok: end-of-transfer report
     return report
 
 
@@ -974,7 +976,8 @@ def run_medium_downlink(
             if validate:
                 _validate(payload, mtype)
             ok, fstats = medium.transmit_payload(
-                payload, uri=feedback_uri, code=Code.CONTENT)
+                payload, uri=feedback_uri, code=Code.CONTENT,
+                tx_client=client_ids[r])   # the client sends its NACK
             if record is not None:
                 record(mtype, fstats)
             report.stats.add(fstats)
@@ -991,13 +994,13 @@ def run_medium_downlink(
                 # a resumed client's held set is whatever it did NOT nack
                 delivered[r] = set(range(n)) - set(back.missing)
                 missing_union |= set(back.missing)
-        to_send = sorted(missing_union)
+        to_send = sorted(missing_union)  # sched-ok: once per repair window, not per frame
         window += 1
         report.windows = window
     # dissemination's share of the round clock, read back by MediumReport
     medium.downlink_airtime_s = medium.clock
     medium.downlink_busy_s = medium.busy_s - busy0
-    report.completed = sorted(complete)
+    report.completed = sorted(complete)  # sched-ok: end-of-transfer report
     return report
 
 
@@ -1076,6 +1079,9 @@ class UplinkSession:
         self._frames_in_window = 0
         self._window_stats = TransferStats()
         self._forced: dict[int, bool] = {}   # chunk_drop verdicts, 1 window
+        # staged payload bytes this window — what state-aware arbitration
+        # policies (shortest-remaining-first, deadline-aware) rank by
+        self.remaining_hint = 0
 
     @property
     def finished(self) -> bool:
@@ -1121,6 +1127,7 @@ def _enqueue_window(medium: SharedMedium, s: UplinkSession) -> None:
                      for i in s.to_send}
     s.report.chunk_sends += len(s.to_send)
     s.report.payload_bytes += s._window_stats.payload_bytes
+    s.remaining_hint = s._window_stats.payload_bytes
     s._frames_in_window = 0
     s._frames = iter_tagged_frames(
         [s.wires[i] for i in s.to_send], uri=s.uri, client=s.client_id,
@@ -1192,7 +1199,8 @@ def _window_feedback(medium: SharedMedium, s: UplinkSession,
     if s.validate:
         _validate(payload, mtype)
     delivered, fstats = medium.transmit_payload(
-        payload, uri=s.feedback_uri, code=Code.CONTENT)
+        payload, uri=s.feedback_uri, code=Code.CONTENT,
+        rx_client=s.client_id)   # the client's radio listens for feedback
     if delivered and faults is not None and faults.feedback_lost(
             s.client_id, s.window):
         delivered = False        # injected: the client never heard it
@@ -1210,7 +1218,7 @@ def _window_feedback(medium: SharedMedium, s: UplinkSession,
         s.acked = True
     else:
         back = FLChunkNack.from_cbor(payload, expect_num_chunks=s.num_chunks)
-        s.to_send = sorted(back.missing)
+        s.to_send = sorted(back.missing)  # sched-ok: once per window feedback, not per frame
     if s.finished:
         s.done_at = medium.clock
         s._frames = iter(())
@@ -1234,49 +1242,34 @@ def _window_feedback(medium: SharedMedium, s: UplinkSession,
                           else medium.clock + medium.turnaround_s)
 
 
-def run_interleaved_uplinks(
-    medium: SharedMedium,
-    sessions: Sequence[UplinkSession],
-    *,
-    sequential: bool = False,
-    record: Callable[[str, TransferStats], None] | None = None,
-    on_complete: Callable[[UplinkSession], None] | None = None,
-    deadline_s: float | None = None,
-    backoff=None,
-    faults=None,
-) -> MediumReport:
-    """Drive many clients' selective-repeat uplinks over one shared medium.
+def _medium_report(medium: SharedMedium,
+                   sessions: Sequence[UplinkSession]) -> MediumReport:
+    """Fold the medium's accounting into a ``MediumReport`` — shared by
+    the legacy frame-scan and the event-heap scheduler so their reports
+    are field-for-field comparable in the differential suite."""
+    windows = {s.client_id: (s.start_at,
+                             s.done_at if s.done_at is not None
+                             else medium.clock)
+               for s in sessions}
+    energy, duty = medium.energy_report(windows)
+    return MediumReport(
+        airtime_s=medium.clock, busy_s=medium.busy_s, idle_s=medium.idle_s,
+        per_client_done_s={s.client_id: s.done_at for s in sessions},
+        stats=medium.stats,
+        downlink_airtime_s=medium.downlink_airtime_s,
+        downlink_busy_s=medium.downlink_busy_s,
+        per_client_energy_j=energy,
+        duty_cycle=duty)
 
-    ``sequential=False`` (the point of this scheduler): every session
-    whose turnaround gate has passed contends for each frame slot, so one
-    client's feedback gap is filled with another client's frames — round
-    airtime approaches the busy floor (total frames on air) instead of
-    busy + every gap serialized.  ``sequential=True`` runs the *same*
-    code path restricted to one session at a time (strict back-to-back),
-    which is the baseline the airtime win is measured against.
 
-    ``on_complete(session)`` fires the moment a session's receiver
-    finishes reassembly — mid-schedule — which is what lets the server
-    fold each model into the running aggregate and recycle the gather
-    buffer while other clients are still transmitting.
-
-    Round-lifecycle hooks (fl.round): ``deadline_s`` is the round deadline
-    on the medium clock — sessions unfinished at that instant are marked
-    ``expired`` (stragglers) and stop transmitting; ``backoff`` delays
-    repair windows (see ``_window_feedback``); ``faults`` injects feedback
-    loss, and sessions carry their own ``crash_at`` points.  Session
-    ``start_at`` gates when a client becomes ready at all (its training
-    finish time), so uploads begin staggered, not all at clock zero.
-    """
-    sessions = list(sessions)
-    by_client: dict[int, UplinkSession] = {}
-    for s in sessions:
-        if s.client_id in by_client:
-            raise ValueError(f"duplicate session client id {s.client_id}")
-        by_client[s.client_id] = s
-    for s in sessions:
-        s.ready_at = max(medium.clock, s.start_at)
-        _enqueue_window(medium, s)
+def _run_frame_scan(medium, sessions, by_client, *, sequential, record,
+                    on_complete, deadline_s, backoff, faults) -> None:
+    """The original per-frame scheduler: every slot rebuilds the active
+    and contender lists by scanning all sessions — O(N) per frame.  Kept
+    verbatim as the differential oracle for the event-heap scheduler
+    (byte-identical schedules under the default policy), and as the
+    ``sequential=True`` baseline (one session at a time, strict
+    back-to-back — there is no contention to schedule)."""
     while True:
         if deadline_s is not None and medium.clock >= deadline_s:
             for s in sessions:
@@ -1298,7 +1291,8 @@ def run_interleaved_uplinks(
                     t = min(t, deadline_s)
                 medium.advance_to(t)
                 continue
-        s = by_client[medium.arbitrate([c.client_id for c in cands])]
+        s = by_client[medium.arbitrate([c.client_id for c in cands],
+                                       sessions=cands)]
         if s.crash_due():
             s.halt()                 # injected client crash, mid-upload
             continue
@@ -1323,14 +1317,185 @@ def run_interleaved_uplinks(
         else:
             _window_feedback(medium, s, record,   # turnaround passed
                              backoff=backoff, faults=faults)
+
+
+def _run_event_heap(medium, sessions, by_client, *, record, on_complete,
+                    deadline_s, backoff, faults, sched_trace) -> None:
+    """Event-heap virtual clock: the scheduler that makes 1k–10k-client
+    rounds a bench row instead of a timeout.
+
+    Every unfinished session lives in exactly one of two structures:
+
+      * ``ready``   — session indices whose turnaround gate has passed
+        (``ready_at <= clock``), kept sorted so positions map onto session
+        insertion order — the same contender order the frame scan built;
+      * ``waiting`` — a heap of ``(ready_at, index)``: sessions gated on
+        turnaround expiry, backoff delay, or training finish.
+
+    Each slot pops work in O(log N): drain newly-due sessions from the
+    heap, grant one ready session a frame (the arbitration policy picks by
+    *position*, so the default seeded draw never materializes a contender
+    list), and when nobody is ready jump the clock straight to the next
+    event — idle gaps cost one ``advance_to``, not a scan per frame.
+    Schedules are byte-identical to ``_run_frame_scan`` under the default
+    policy: same contender order, same RNG draw per contended slot, same
+    deadline/crash/feedback sequencing (pinned by the differential suite).
+
+    ``sched_trace(event, client)`` observes every scheduler transition
+    (wake/grant/frame_sent/window_gap/.../expire) for the SCHEDULER state
+    machine's conformance check; ``None`` costs nothing.
+    """
+    ready: list[int] = []            # session indices, sorted
+    waiting: list[tuple[float, int]] = []
+    for i, s in enumerate(sessions):
+        if not s.finished:
+            heapq.heappush(waiting, (s.ready_at, i))
+
+    def _slot(i: int, s: UplinkSession) -> None:
+        """Re-file an unfinished session after its ready_at moved."""
+        if s.ready_at <= medium.clock:
+            insort(ready, i)
+        else:
+            heapq.heappush(waiting, (s.ready_at, i))
+
+    while True:
+        while waiting and waiting[0][0] <= medium.clock:
+            _, i = heapq.heappop(waiting)
+            insort(ready, i)
+            if sched_trace is not None:
+                sched_trace("wake", sessions[i].client_id)
+        if deadline_s is not None and medium.clock >= deadline_s:
+            for s in sessions:
+                if not s.finished:
+                    s.halt(expired=True)   # straggler: the round moved on
+                    if sched_trace is not None:
+                        sched_trace("expire", s.client_id)
+            break
+        if not ready:
+            if not waiting:
+                break                # every session finished
+            t = waiting[0][0]
+            if deadline_s is not None:
+                t = min(t, deadline_s)
+            medium.advance_to(t)     # idle gap: one jump, no scanning
+            continue
+        if len(ready) == 1:
+            k = 0                    # lone contender: no policy, no draw
+        else:
+            k = medium.arbitration.pick(
+                medium, len(ready), lambda i: sessions[ready[i]])
+        idx = ready[k]
+        s = sessions[idx]
+        if sched_trace is not None:
+            sched_trace("grant", s.client_id)
+        if s.crash_due():
+            s.halt()                 # injected client crash, mid-upload
+            del ready[k]
+            if sched_trace is not None:
+                sched_trace("crash", s.client_id)
+            continue
+        if s.has_frame:
+            frame = s._lookahead
+            s._advance()
+            s._frames_in_window += 1
+            for fr in medium.transmit(frame, s._window_stats,
+                                      drop=s._forced.get(frame.chunk_index)):
+                _deliver(by_client, fr, on_complete)
+            if not s.has_frame:
+                # window boundary (see _run_frame_scan): flush this
+                # client's jittered stragglers, then gate its feedback
+                # behind the turnaround — the gap other clients fill
+                for fr in medium.flush(s.client_id):
+                    _deliver(by_client, fr, on_complete)
+                s.ready_at = medium.clock + medium.turnaround_s
+                del ready[k]
+                _slot(idx, s)
+                if sched_trace is not None:
+                    sched_trace("window_gap" if s.ready_at > medium.clock
+                                else "window_open", s.client_id)
+            elif sched_trace is not None:
+                sched_trace("frame_sent", s.client_id)
+        else:
+            _window_feedback(medium, s, record,   # turnaround passed
+                             backoff=backoff, faults=faults)
+            del ready[k]
+            if s.finished:
+                if sched_trace is not None:
+                    sched_trace("finish", s.client_id)
+            else:
+                _slot(idx, s)
+                if sched_trace is not None:
+                    sched_trace("feedback_wait" if s.ready_at > medium.clock
+                                else "feedback_ready", s.client_id)
+
+
+def run_interleaved_uplinks(
+    medium: SharedMedium,
+    sessions: Sequence[UplinkSession],
+    *,
+    sequential: bool = False,
+    record: Callable[[str, TransferStats], None] | None = None,
+    on_complete: Callable[[UplinkSession], None] | None = None,
+    deadline_s: float | None = None,
+    backoff=None,
+    faults=None,
+    legacy: bool = False,
+    sched_trace: Callable[[str, int], None] | None = None,
+) -> MediumReport:
+    """Drive many clients' selective-repeat uplinks over one shared medium.
+
+    ``sequential=False`` (the point of this scheduler): every session
+    whose turnaround gate has passed contends for each frame slot, so one
+    client's feedback gap is filled with another client's frames — round
+    airtime approaches the busy floor (total frames on air) instead of
+    busy + every gap serialized.  Scheduling runs on an event-heap virtual
+    clock (``_run_event_heap``): O(log N) per slot, so 1,000–10,000
+    concurrent clients per round is a bench row (``benchmarks/
+    bench_scale.py``), not a timeout.  ``legacy=True`` keeps the original
+    per-frame scan (``_run_frame_scan``) as the differential oracle — the
+    two produce byte-identical schedules under the default arbitration
+    policy.  ``sequential=True`` runs one session at a time (strict
+    back-to-back), the baseline the airtime win is measured against;
+    there is no contention to schedule, so it uses the scan loop.
+
+    ``on_complete(session)`` fires the moment a session's receiver
+    finishes reassembly — mid-schedule — which is what lets the server
+    fold each model into the running aggregate and recycle the gather
+    buffer while other clients are still transmitting.
+
+    Round-lifecycle hooks (fl.round): ``deadline_s`` is the round deadline
+    on the medium clock — sessions unfinished at that instant are marked
+    ``expired`` (stragglers) and stop transmitting; ``backoff`` delays
+    repair windows (see ``_window_feedback``); ``faults`` injects feedback
+    loss, and sessions carry their own ``crash_at`` points.  Session
+    ``start_at`` gates when a client becomes ready at all (its training
+    finish time), so uploads begin staggered, not all at clock zero.
+
+    ``sched_trace(event, client)`` (event-heap path only) observes every
+    scheduler transition for ``analysis.statemachine``'s SCHEDULER
+    conformance check.
+    """
+    sessions = list(sessions)
+    by_client: dict[int, UplinkSession] = {}
+    for s in sessions:
+        if s.client_id in by_client:
+            raise ValueError(f"duplicate session client id {s.client_id}")
+        by_client[s.client_id] = s
+    for s in sessions:
+        s.ready_at = max(medium.clock, s.start_at)
+        _enqueue_window(medium, s)
+    if legacy or sequential:
+        _run_frame_scan(medium, sessions, by_client, sequential=sequential,
+                        record=record, on_complete=on_complete,
+                        deadline_s=deadline_s, backoff=backoff, faults=faults)
+    else:
+        _run_event_heap(medium, sessions, by_client, record=record,
+                        on_complete=on_complete, deadline_s=deadline_s,
+                        backoff=backoff, faults=faults,
+                        sched_trace=sched_trace)
     for fr in medium.flush():      # post-ACK jitter releases: late dups
         _deliver(by_client, fr, on_complete)
-    return MediumReport(
-        airtime_s=medium.clock, busy_s=medium.busy_s, idle_s=medium.idle_s,
-        per_client_done_s={s.client_id: s.done_at for s in sessions},
-        stats=medium.stats,
-        downlink_airtime_s=medium.downlink_airtime_s,
-        downlink_busy_s=medium.downlink_busy_s)
+    return _medium_report(medium, sessions)
 
 
 class AssemblerReceiver:

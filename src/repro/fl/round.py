@@ -388,7 +388,8 @@ class RoundEngine:
             reorder_prob=sim.uplink_reorder_prob,
             turnaround_s=sim.uplink_turnaround_s,
             chunk_drop=self.faults.as_chunk_drop() or sim.link.chunk_drop,
-            faults=self.faults)
+            faults=self.faults,
+            arbitration=sim.arbitration, radio=sim.radio)
 
     def _attribute_dissemination(self, cohort, receivers) -> None:
         """Name why each cohort member did (not) come out of dissemination
@@ -694,7 +695,8 @@ class RoundEngine:
                 frame_drop_prob=sim.link.drop_prob,
                 reorder_prob=sim.uplink_reorder_prob,
                 turnaround_s=sim.uplink_turnaround_s,
-                chunk_drop=chunk_drop, faults=self.faults)
+                chunk_drop=chunk_drop, faults=self.faults,
+                arbitration=sim.arbitration, radio=sim.radio)
             # the uplink medium's clock continues the round clock:
             # sessions become ready when their owners finish training,
             # and the round deadline is absolute on the same axis
@@ -712,7 +714,8 @@ class RoundEngine:
         from repro.fl.chunking import run_interleaved_uplinks
         report = run_interleaved_uplinks(
             medium, sessions, record=sim._record_uplink, on_complete=fold,
-            deadline_s=deadline, backoff=backoff, faults=self.faults)
+            deadline_s=deadline, backoff=backoff, faults=self.faults,
+            legacy=sim.legacy_scheduler)
         resume_cids = []
         for s in sessions:
             cid = s.client_id
@@ -750,9 +753,15 @@ class RoundEngine:
             report2 = run_interleaved_uplinks(
                 medium, resume_sessions, record=sim._record_uplink,
                 on_complete=fold, deadline_s=deadline, backoff=backoff,
-                faults=self.faults)
+                faults=self.faults, legacy=sim.legacy_scheduler)
             report2.per_client_done_s = {**report.per_client_done_s,
                                          **report2.per_client_done_s}
+            # the resumed run re-derives energy over the whole medium
+            # lifetime per client; earlier-only clients keep their rows
+            report2.per_client_energy_j = {**report.per_client_energy_j,
+                                           **report2.per_client_energy_j}
+            report2.duty_cycle = {**report.duty_cycle,
+                                  **report2.duty_cycle}
             report = report2
             for s in resume_sessions:
                 cid = s.client_id

@@ -68,9 +68,21 @@ class FLSimulation:
                  chunk_encoding: ParamsEncoding | str =
                  ParamsEncoding.TA_F32,
                  residual_uplink: bool = False,
-                 downlink_mode: str = "link") -> None:
+                 downlink_mode: str = "link",
+                 arbitration="seeded-random",
+                 radio=None,
+                 legacy_scheduler: bool = False) -> None:
         self.server = server
         self.clients = {c.client_id: c for c in clients}
+        # arbitration: SharedMedium contention policy (name or
+        # ArbitrationPolicy) — seeded-random (default), shortest-
+        # remaining-first, deadline-aware; radio: RadioProfile for
+        # per-client energy accounting; legacy_scheduler: run uplinks on
+        # the original per-frame scan instead of the event heap (the
+        # differential oracle — byte-identical under the default policy)
+        self.arbitration = arbitration
+        self.radio = radio
+        self.legacy_scheduler = legacy_scheduler
         # faults: one seeded, replayable schedule of client/server crashes,
         # blackouts, frame damage, feedback loss, and chunk loss
         # (fl.faults.FaultPlan) threaded through every transport layer;

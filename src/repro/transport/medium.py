@@ -84,6 +84,115 @@ class MediumReport:
     stats: TransferStats = field(default_factory=TransferStats)
     downlink_airtime_s: float = 0.0   # clock when dissemination finished
     downlink_busy_s: float = 0.0      # downlink frames on the air
+    # constrained-device energy accounting (RadioProfile × the medium's
+    # per-client tx/rx/idle-listen seconds) — docs/concurrent_uplink.md
+    per_client_energy_j: dict[int, float] = field(default_factory=dict)
+    duty_cycle: dict[int, float] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class RadioProfile:
+    """Radio power draw (watts) for per-client energy accounting.
+
+    Defaults approximate a CC2420-class 802.15.4 transceiver at 3 V:
+    ~17.4 mA transmitting at 0 dBm, ~18.8 mA receiving, and an aggressive
+    low-power-listening idle mode.  Energy for a round is
+
+        tx_s * tx_w + rx_s * rx_w + idle_listen_s * idle_w
+
+    where ``idle_listen`` is the client's radio-on window minus its
+    tx/rx airtime — the seconds it spends listening to other clients'
+    frames and gaps, which on a shared medium is where most of a
+    constrained device's budget actually goes.
+    """
+
+    tx_w: float = 0.0522
+    rx_w: float = 0.0564
+    idle_w: float = 0.00128
+
+
+class ArbitrationPolicy:
+    """Pluggable contention arbitration: pick who transmits next.
+
+    ``pick(medium, n, session_at)`` returns the winner's position in
+    ``[0, n)`` among the ready contenders **in session insertion order**;
+    ``session_at(i)`` lazily resolves the i-th contender's session (may
+    return None on legacy call sites that only know client ids).  It is
+    only consulted for ``n > 1`` — a lone contender short-circuits in
+    ``SharedMedium.arbitrate`` without any RNG draw, so a lone client's
+    schedule is identical at any concurrency and under every policy.
+    """
+
+    name = "base"
+
+    def pick(self, medium: "SharedMedium", n: int, session_at) -> int:
+        raise NotImplementedError
+
+
+class SeededRandomArbitration(ArbitrationPolicy):
+    """The default: a seeded uniform draw over the ready contenders —
+    deterministic interleaving, exact replay per seed.  Exactly one RNG
+    draw per contended slot, which is what pins the event-heap scheduler
+    byte-identical to the legacy per-frame scan."""
+
+    name = "seeded-random"
+
+    def pick(self, medium: "SharedMedium", n: int, session_at) -> int:
+        return int(medium._rng.integers(n))
+
+
+class ShortestRemainingArbitration(ArbitrationPolicy):
+    """Shortest-remaining-first: grant the contender with the fewest
+    staged payload bytes left this window (``remaining_hint``), ties to
+    the earliest session.  Drains nearly-done uploads first, so the
+    server folds models (and frees gather buffers) as early as possible.
+    No RNG draw — fully deterministic given the session set."""
+
+    name = "shortest-remaining-first"
+
+    def pick(self, medium: "SharedMedium", n: int, session_at) -> int:
+        best, best_key = 0, None
+        for i in range(n):
+            key = getattr(session_at(i), "remaining_hint", 0)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+
+class DeadlineAwareArbitration(ArbitrationPolicy):
+    """Deadline-aware (least-slack-first): grant the contender with the
+    MOST staged bytes left — the straggler closest to missing the round
+    deadline.  Minimizes the worst-case completion time at the cost of
+    later first-folds; ties to the earliest session.  No RNG draw."""
+
+    name = "deadline-aware"
+
+    def pick(self, medium: "SharedMedium", n: int, session_at) -> int:
+        best, best_key = 0, None
+        for i in range(n):
+            key = getattr(session_at(i), "remaining_hint", 0)
+            if best_key is None or key > best_key:
+                best, best_key = i, key
+        return best
+
+
+ARBITRATION_POLICIES = {
+    p.name: p for p in (SeededRandomArbitration, ShortestRemainingArbitration,
+                        DeadlineAwareArbitration)
+}
+
+
+def resolve_arbitration(spec) -> ArbitrationPolicy:
+    """An ``ArbitrationPolicy`` instance passes through; a name resolves
+    against ``ARBITRATION_POLICIES``."""
+    if isinstance(spec, ArbitrationPolicy):
+        return spec
+    try:
+        return ARBITRATION_POLICIES[spec]()
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown arbitration policy {spec!r} (choose from "
+            f"{sorted(ARBITRATION_POLICIES)})") from None  # sched-ok: error-message formatting, not the frame loop
 
 
 class SharedMedium:
@@ -103,7 +212,9 @@ class SharedMedium:
                  reorder_prob: float = 0.0, max_reorder_lag: int = 8,
                  turnaround_s: float = 0.05,
                  chunk_drop: ChunkDropFn | None = None,
-                 faults: object | None = None) -> None:
+                 faults: object | None = None,
+                 arbitration: ArbitrationPolicy | str = "seeded-random",
+                 radio: RadioProfile | None = None) -> None:
         if not 0.0 <= frame_drop_prob < 1.0:
             raise ValueError("frame_drop_prob must be in [0, 1)")
         if not 0.0 <= reorder_prob <= 1.0:
@@ -135,10 +246,24 @@ class SharedMedium:
         self.downlink_airtime_s = 0.0
         self.downlink_busy_s = 0.0
         self.stats = TransferStats()
+        self.arbitration = resolve_arbitration(arbitration)
+        self.radio = radio if radio is not None else RadioProfile()
         self.frames_sent = 0               # data frames put on the air
         self.frames_lost = 0               # ...that did not reach a receiver
         self._seq = 0                      # frames transmitted (global order)
-        self._holdback: list = []          # heap of (release_seq, seq, frame)
+        # Holdback entries are shared mutable cells [release_seq, seq,
+        # frame, alive]: pushed onto BOTH the global release heap and the
+        # transmitting client's per-client heap.  Whichever side consumes
+        # an entry first (timed release vs window-boundary flush)
+        # tombstones it (alive=False); the other side lazily skips the
+        # corpse.  This is what makes ``flush(client)`` O(held_by_client
+        # × log) instead of sort-the-world per window boundary.
+        self._holdback: list = []
+        self._holdback_by_client: dict[int, list] = {}
+        # per-client radio-airtime accounting (seconds transmitting /
+        # receiving), folded with RadioProfile into MediumReport energy
+        self._tx_s: dict[int, float] = {}
+        self._rx_s: dict[int, float] = {}
 
     # -- time ---------------------------------------------------------------
 
@@ -153,13 +278,22 @@ class SharedMedium:
 
     # -- arbitration --------------------------------------------------------
 
-    def arbitrate(self, contenders: Sequence[int]) -> int:
-        """Pick the next transmitter among contending client ids (seeded,
-        deterministic).  One contender short-circuits without an RNG draw
-        so a lone client's schedule is identical at any concurrency."""
+    def arbitrate(self, contenders: Sequence[int],
+                  sessions: Sequence | None = None) -> int:
+        """Pick the next transmitter among contending client ids via the
+        configured ``ArbitrationPolicy`` (deterministic).  One contender
+        short-circuits without consulting the policy — no RNG draw — so a
+        lone client's schedule is identical at any concurrency.
+        ``sessions`` (same order as ``contenders``) gives state-aware
+        policies their inputs; id-only call sites may omit it."""
         if len(contenders) == 1:
             return contenders[0]
-        return contenders[int(self._rng.integers(len(contenders)))]
+        if sessions is None:
+            session_at = lambda i: None          # noqa: E731
+        else:
+            session_at = lambda i: sessions[i]   # noqa: E731
+        return contenders[self.arbitration.pick(self, len(contenders),
+                                                session_at)]
 
     # -- data frames --------------------------------------------------------
 
@@ -177,6 +311,7 @@ class SharedMedium:
         a = self.frame_airtime(frame.wire_bytes)
         self.clock += a
         self.busy_s += a
+        self._tx_s[frame.client] = self._tx_s.get(frame.client, 0.0) + a
         for s in (stats, self.stats):
             s.frames += 1
             s.blocks += 1
@@ -208,7 +343,12 @@ class SharedMedium:
             lag = 0
             if self.reorder_prob and float(self._rng.random()) < self.reorder_prob:
                 lag = 1 + int(self._rng.integers(self.max_reorder_lag))
-            heapq.heappush(self._holdback, (self._seq + lag, self._seq, frame))
+            # (release_seq, seq) is unique per entry, so heap comparisons
+            # never reach the frame/alive cells
+            entry = [self._seq + lag, self._seq, frame, True]
+            heapq.heappush(self._holdback, entry)
+            heapq.heappush(
+                self._holdback_by_client.setdefault(frame.client, []), entry)
         else:
             self.frames_lost += 1
         return self._release()
@@ -236,6 +376,10 @@ class SharedMedium:
         t0 = self.clock
         self.clock += a
         self.busy_s += a
+        for cid in receivers:
+            # every listener's radio is in rx for the whole frame — paying
+            # for airtime it may not even decode is the multicast deal
+            self._rx_s[cid] = self._rx_s.get(cid, 0.0) + a
         for s in (stats, self.stats):
             s.frames += 1
             s.blocks += 1
@@ -280,45 +424,72 @@ class SharedMedium:
     def _release(self) -> list[TaggedFrame]:
         out = []
         while self._holdback and self._holdback[0][0] <= self._seq:
-            out.append(heapq.heappop(self._holdback)[2])
+            entry = heapq.heappop(self._holdback)
+            if entry[3]:
+                entry[3] = False     # tombstone for the per-client heap
+                out.append(entry[2])
         return out
 
     def flush(self, client: int | None = None) -> list[TaggedFrame]:
         """Release held-back frames immediately — all of them, or one
         client's (a window boundary: its feedback logically follows every
         frame of the window, so any of its frames still 'in flight' have
-        arrived by then)."""
+        arrived by then).
+
+        Heap pops yield ascending (release_seq, seq) — the same order the
+        timed ``_release`` would have used — without ever sorting the
+        whole holdback list: one client's flush costs O(held_by_client ×
+        log), not O(total_held × log) per window boundary.
+        """
         if client is None:
-            out = [f for _, _, f in sorted(self._holdback)]
-            self._holdback.clear()
+            out = []
+            while self._holdback:
+                entry = heapq.heappop(self._holdback)
+                if entry[3]:
+                    entry[3] = False
+                    out.append(entry[2])
+            self._holdback_by_client.clear()
             return out
-        keep, out = [], []
-        for entry in sorted(self._holdback):
-            (out if entry[2].client == client else keep).append(entry)
-        self._holdback = keep
-        heapq.heapify(self._holdback)
-        return [e[2] for e in out]
+        heap = self._holdback_by_client.get(client)
+        if not heap:
+            return []
+        out = []
+        while heap:
+            entry = heapq.heappop(heap)
+            if entry[3]:
+                entry[3] = False     # tombstone for the global heap
+                out.append(entry[2])
+        return out
 
     # -- control payloads ---------------------------------------------------
 
     def transmit_payload(self, payload, *, uri: str,
                          code: Code = Code.CONTENT,
                          stats: TransferStats | None = None,
-                         ring=None) -> tuple[bool, TransferStats]:
+                         ring=None, tx_client: int | None = None,
+                         rx_client: int | None = None
+                         ) -> tuple[bool, TransferStats]:
         """One CON control transfer (NACK/ACK feedback) on the medium.
 
         Per-frame ack + retransmission up to MAX_RETRANSMIT, every attempt
         advancing the clock — control traffic competes for the same
         airtime as data.  ``ring`` (a ``BlockReceiveRing``) collects the
         delivered blocks when the caller needs the reassembled payload
-        (monolithic dissemination on the medium).  Returns ``(delivered,
-        stats)``; an undelivered feedback message costs the sender a
-        window (it polls again), never correctness.
+        (monolithic dissemination on the medium).  ``tx_client`` /
+        ``rx_client`` attribute the airtime to a client's radio (energy
+        accounting) when the client is the sender (uplink NACK) or the
+        listener (server feedback).  Returns ``(delivered, stats)``; an
+        undelivered feedback message costs the sender a window (it polls
+        again), never correctness.
         """
         def on_frame(wire: int) -> None:
             a = self.frame_airtime(wire)
             self.clock += a
             self.busy_s += a
+            if tx_client is not None:
+                self._tx_s[tx_client] = self._tx_s.get(tx_client, 0.0) + a
+            if rx_client is not None:
+                self._rx_s[rx_client] = self._rx_s.get(rx_client, 0.0) + a
 
         def drop() -> bool:
             lost = (self.frame_drop_prob > 0.0
@@ -334,3 +505,27 @@ class SharedMedium:
         if stats is not None:
             stats.add(out)
         return not out.failed_messages, out
+
+    # -- energy -------------------------------------------------------------
+
+    def energy_report(self, windows: dict[int, tuple[float, float]]
+                      ) -> tuple[dict[int, float], dict[int, float]]:
+        """Fold per-client tx/rx airtime with ``RadioProfile`` into energy
+        (joules) and duty cycle per client.
+
+        ``windows`` maps client -> (radio_on_start, radio_on_end) on the
+        medium clock; idle-listen is the window minus the client's own
+        tx/rx seconds (listening to other clients' frames and gaps).
+        Duty cycle is the active (tx+rx) fraction of the window.
+        """
+        energy: dict[int, float] = {}
+        duty: dict[int, float] = {}
+        for cid, (t0, t1) in windows.items():
+            tx = self._tx_s.get(cid, 0.0)
+            rx = self._rx_s.get(cid, 0.0)
+            span = max(0.0, t1 - t0)
+            idle = max(0.0, span - tx - rx)
+            energy[cid] = (tx * self.radio.tx_w + rx * self.radio.rx_w
+                           + idle * self.radio.idle_w)
+            duty[cid] = min(1.0, (tx + rx) / span) if span > 0.0 else 0.0
+        return energy, duty

@@ -10,9 +10,13 @@ requires byte-identical results, which is what makes any chaos failure
 reproducible from its seed alone.
 
 ``tests/chaos_seeds.json`` holds the committed regression seeds.  CI adds
-one fresh seed per run via ``CHAOS_FRESH_SEED`` (the workflow passes its
-run id); a failure log always contains ``plan.describe()``, so the seed
-that found a bug gets committed and replays forever.
+fresh seeds on top via ``CHAOS_FRESH_SEED``: push/PR runs pass the run id
+(one seed), the nightly schedule passes the UTC date with
+``CHAOS_FRESH_COUNT=25`` — the base seed is strided by a fixed odd
+constant so the nightly sweep decorrelates across the seed space instead
+of walking neighbours.  A failure log always contains
+``plan.describe()`` (seed included), so the seed that found a bug gets
+committed and replays forever.
 """
 import json
 import os
@@ -28,8 +32,24 @@ from test_round_recovery import _restart, _sim
 SEEDS = json.loads(
     (pathlib.Path(__file__).parent / "chaos_seeds.json").read_text()
 )["seeds"]
-_fresh = os.environ.get("CHAOS_FRESH_SEED")
-ALL_SEEDS = SEEDS + ([int(_fresh) % 2**31] if _fresh else [])
+
+
+def _fresh_seeds() -> list[int]:
+    """Fresh chaos seeds from the environment: CHAOS_FRESH_SEED is the
+    base, CHAOS_FRESH_COUNT (default 1) expands it into a stride-
+    decorrelated batch.  k=0 reproduces the single-seed behaviour, so a
+    count-1 run and the historical one-seed CI are identical."""
+    base = os.environ.get("CHAOS_FRESH_SEED")
+    if not base:
+        return []
+    count = max(1, int(os.environ.get("CHAOS_FRESH_COUNT", "1")))
+    # Knuth's multiplicative-hash constant: consecutive dates/run ids map
+    # to well-separated points of the 31-bit seed space
+    return [(int(base) + k * 2_654_435_761) % 2**31 for k in range(count)]
+
+
+FRESH_SEEDS = _fresh_seeds()
+ALL_SEEDS = SEEDS + FRESH_SEEDS
 
 POLICY = RoundPolicy(deadline_s=120.0, train_time_s=5.0,
                      backoff=BackoffPolicy(initial_s=0.1))
@@ -99,7 +119,7 @@ def test_chaos_seed_survives_and_replays_exactly(tmp_path, seed):
 CHURN_SEEDS = json.loads(
     (pathlib.Path(__file__).parent / "chaos_seeds.json").read_text()
 )["churn_seeds"]
-ALL_CHURN_SEEDS = CHURN_SEEDS + ([int(_fresh) % 2**31] if _fresh else [])
+ALL_CHURN_SEEDS = CHURN_SEEDS + FRESH_SEEDS
 
 
 def _churn_plan_for(seed: int) -> FaultPlan:

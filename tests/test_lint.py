@@ -141,6 +141,41 @@ def test_det_rule_allows_seeded_rng_and_out_of_scope(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# sched rule
+
+def test_sched_rule_flags_sorted_and_sort_in_scheduler_modules(tmp_path):
+    findings = _lint(tmp_path, "fl/chunking.py", """\
+        def f(cands, holdback):
+            winners = sorted(cands)
+            holdback.sort()
+            return winners
+        """)
+    assert [f.rule for f in findings] == ["sched", "sched"]
+
+
+def test_sched_rule_ignores_out_of_scope_files(tmp_path):
+    findings = _lint(tmp_path, "fl/client.py", """\
+        def f(xs):
+            xs.sort()
+            return sorted(xs)
+        """)
+    assert findings == []
+
+
+def test_sched_pragma_requires_reason(tmp_path):
+    ok = _lint(tmp_path, "transport/medium.py", """\
+        def f(xs):
+            return sorted(xs)  # sched-ok: end-of-transfer report
+        """)
+    assert ok == []
+    bare = _lint(tmp_path, "transport/medium.py", """\
+        def f(xs):
+            return sorted(xs)  # sched-ok:
+        """)
+    assert len(bare) == 1 and "requires a reason" in bare[0].message
+
+
+# ---------------------------------------------------------------------------
 # except rule (everywhere, no pragma)
 
 def test_bare_except_is_always_flagged(tmp_path):

@@ -1,0 +1,265 @@
+"""Differential suite: event-heap scheduler vs the legacy frame scan.
+
+The event-heap rewrite (`fl.chunking._run_event_heap`) must be
+*byte-identical* to the per-frame scan it replaced under the default
+seeded-random policy — same contender order, same RNG draw per contended
+slot, same deadline/crash/feedback sequencing.  The legacy loop is kept
+verbatim as the oracle (``run_interleaved_uplinks(..., legacy=True)``);
+this suite pins the equivalence across loss × reorder × deadline × crash
+at 1/2/4/8 clients, then covers what the rewrite added on top: pluggable
+arbitration policies (determinism + completion under every policy) and
+per-client energy/duty-cycle accounting (conservation bounds), plus the
+holdback flush rewrite (per-client heap + tombstones, not
+sort-the-world).
+"""
+import uuid
+
+import numpy as np
+import pytest
+
+from repro.fl.chunking import (
+    AssemblerReceiver,
+    UplinkSession,
+    chunk_stream,
+    run_interleaved_uplinks,
+)
+from repro.transport.coap import TransferStats
+from repro.transport.medium import ARBITRATION_POLICIES, SharedMedium
+from repro.transport.network import TaggedFrame
+
+N_PARAMS = 900
+CHUNK_ELEMS = 128
+MID = uuid.UUID(int=0xD1FF)
+
+
+def _params(c, n=N_PARAMS):
+    return np.random.default_rng((13, c)).standard_normal(n) \
+        .astype(np.float32)
+
+
+def _sessions(n_clients, *, crash=None):
+    out = []
+    for c in range(n_clients):
+        p = _params(c)
+        kw = {"crash_at": crash[c]} if crash and c in crash else {}
+        out.append(UplinkSession(
+            c, list(chunk_stream(MID, 0, p, CHUNK_ELEMS)),
+            AssemblerReceiver(expected_elems=p.size), **kw))
+    return out
+
+
+def _seeded_chunk_drop(rate, seed=7):
+    def drop(uri, window, index, client):
+        return bool(np.random.default_rng(
+            (seed, window, index, client)).random() < rate)
+    return drop
+
+
+def _run(n_clients, *, legacy, sequential=False, drop_rate=0.0,
+         reorder=0.0, deadline_s=None, crash=None, seed=0,
+         arbitration="seeded-random", turnaround=0.1):
+    sessions = _sessions(n_clients, crash=crash)
+    medium = SharedMedium(
+        seed=seed, turnaround_s=turnaround, reorder_prob=reorder,
+        chunk_drop=_seeded_chunk_drop(drop_rate) if drop_rate else None,
+        arbitration=arbitration)
+    report = run_interleaved_uplinks(medium, sessions, legacy=legacy,
+                                     sequential=sequential,
+                                     deadline_s=deadline_s)
+    return sessions, report
+
+
+def _key(sessions, report):
+    """Everything the two schedulers must agree on, byte for byte."""
+    return (
+        report.airtime_s, report.busy_s, report.idle_s,
+        tuple(sorted(report.per_client_done_s.items())),
+        report.stats.frames, report.stats.wire_bytes,
+        report.stats.messages,
+        tuple(sorted(report.per_client_energy_j.items())),
+        tuple(sorted(report.duty_cycle.items())),
+        tuple((s.client_id, s.acked, s.crashed, s.expired, s.window,
+               tuple(s.report.completed),
+               s.receiver.assembled.tobytes()
+               if s.receiver.assembled is not None else None)
+              for s in sessions),
+    )
+
+
+# -- byte-identity matrix: heap == frame scan ---------------------------------
+
+
+@pytest.mark.parametrize("n_clients", [1, 2, 4, 8])
+@pytest.mark.parametrize("drop_rate", [0.0, 0.15])
+@pytest.mark.parametrize("reorder", [0.0, 0.3])
+def test_event_heap_matches_legacy_bit_exact(n_clients, drop_rate, reorder):
+    a = _key(*_run(n_clients, legacy=True,
+                   drop_rate=drop_rate, reorder=reorder))
+    b = _key(*_run(n_clients, legacy=False,
+                   drop_rate=drop_rate, reorder=reorder))
+    assert a == b
+
+
+@pytest.mark.parametrize("n_clients", [2, 4])
+def test_event_heap_matches_legacy_under_deadline(n_clients):
+    """A deadline cutting the round mid-window must halt the same
+    stragglers at the same clock in both schedulers."""
+    a = _key(*_run(n_clients, legacy=True, deadline_s=0.5, drop_rate=0.15))
+    b = _key(*_run(n_clients, legacy=False, deadline_s=0.5, drop_rate=0.15))
+    assert a == b
+    sessions, _ = _run(n_clients, legacy=False, deadline_s=0.5,
+                       drop_rate=0.15)
+    assert any(s.expired for s in sessions)   # the deadline actually bit
+
+
+@pytest.mark.parametrize("reorder", [0.0, 0.3])
+def test_event_heap_matches_legacy_through_crash(reorder):
+    crash = {0: (0, 2)}
+    a = _key(*_run(4, legacy=True, crash=crash, reorder=reorder))
+    b = _key(*_run(4, legacy=False, crash=crash, reorder=reorder))
+    assert a == b
+    sessions, _ = _run(4, legacy=False, crash=crash, reorder=reorder)
+    assert sessions[0].crashed and all(s.acked for s in sessions[1:])
+
+
+def test_sequential_mode_is_scheduler_independent():
+    """sequential=True routes through the frame scan regardless of the
+    legacy flag — one client at a time leaves nothing to schedule."""
+    a = _key(*_run(3, legacy=True, sequential=True))
+    b = _key(*_run(3, legacy=False, sequential=True))
+    assert a == b
+
+
+def test_zero_turnaround_boundary_matches():
+    """turnaround 0: a window boundary leaves the session ready at the
+    same clock — the heap's re-slot must land in the same contender
+    position the scan's rebuilt list would give it."""
+    a = _key(*_run(4, legacy=True, drop_rate=0.2, turnaround=0.0))
+    b = _key(*_run(4, legacy=False, drop_rate=0.2, turnaround=0.0))
+    assert a == b
+
+
+def test_simulation_level_schedulers_agree():
+    """Whole-round check through FLSimulation: the legacy_scheduler flag
+    threads down to run_interleaved_uplinks and the aggregated global
+    model is byte-identical either way."""
+    from test_round_recovery import _sim
+
+    results = {}
+    for legacy in (False, True):
+        sim = _sim(rounds=1, uplink_mode="interleaved", reorder=0.2)
+        sim.legacy_scheduler = legacy
+        r = sim.run_round()
+        results[legacy] = (sim.server.global_params.tobytes(),
+                           tuple(r.reporters), tuple(r.dropped))
+    assert results[False] == results[True]
+
+
+# -- arbitration policies -----------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", sorted(ARBITRATION_POLICIES))
+def test_every_policy_completes_and_is_deterministic(policy):
+    first = _key(*_run(4, legacy=False, drop_rate=0.1, arbitration=policy))
+    again = _key(*_run(4, legacy=False, drop_rate=0.1, arbitration=policy))
+    assert first == again            # same seed -> same schedule, bytewise
+    sessions, _ = _run(4, legacy=False, drop_rate=0.1, arbitration=policy)
+    assert all(s.acked for s in sessions)
+    for s in sessions:
+        assert s.receiver.assembled is not None
+        assert s.receiver.assembled.tobytes() == \
+            _params(s.client_id).tobytes()
+
+
+def test_policies_actually_differ_on_heterogeneous_cohorts():
+    """With one oversized client, shortest-remaining-first must order the
+    grants differently from the seeded draw — the policies are plugged
+    in, not cosmetics."""
+    def run(policy):
+        sessions = [UplinkSession(
+            c, list(chunk_stream(MID, 0, _params(c, 400 * (4 if c == 0
+                                                           else 1)),
+                                 CHUNK_ELEMS)),
+            AssemblerReceiver(expected_elems=400 * (4 if c == 0 else 1)))
+            for c in range(4)]
+        medium = SharedMedium(seed=0, turnaround_s=0.1, arbitration=policy)
+        report = run_interleaved_uplinks(medium, sessions)
+        assert all(s.acked for s in sessions)
+        return tuple(sorted(report.per_client_done_s.items()))
+    assert run("shortest-remaining-first") != run("seeded-random")
+
+
+def test_unknown_policy_is_rejected():
+    with pytest.raises(ValueError, match="unknown arbitration"):
+        SharedMedium(arbitration="round-robin-ish")
+
+
+# -- energy accounting --------------------------------------------------------
+
+
+def test_energy_accounting_conserves_airtime():
+    _, report = _run(4, legacy=False, drop_rate=0.1)
+    assert len(report.per_client_energy_j) == 4
+    for c in range(4):
+        assert report.per_client_energy_j[c] > 0.0
+        assert 0.0 <= report.duty_cycle[c] <= 1.0
+
+
+def test_tx_seconds_sum_to_medium_busy():
+    sessions = _sessions(3)
+    medium = SharedMedium(seed=0, turnaround_s=0.1)
+    report = run_interleaved_uplinks(medium, sessions)
+    # one transmitter at a time: data frames are client tx, the server's
+    # feedback frames are the addressed client's rx — together they
+    # account for every busy second of an uplink-only round exactly once
+    assert sum(medium._tx_s.values()) + sum(medium._rx_s.values()) \
+        == pytest.approx(report.busy_s)
+    assert sum(medium._tx_s.values()) <= report.busy_s
+    assert all(0.0 < d <= 1.0 for d in report.duty_cycle.values())
+
+
+def test_energy_scales_with_radio_profile():
+    from repro.transport.medium import RadioProfile
+
+    def run(radio):
+        sessions = _sessions(2)
+        medium = SharedMedium(seed=0, turnaround_s=0.1, radio=radio)
+        return run_interleaved_uplinks(medium, sessions)
+
+    base = run(RadioProfile())
+    hot = run(RadioProfile(tx_w=0.5, rx_w=0.5, idle_w=0.01))
+    for c in range(2):
+        assert hot.per_client_energy_j[c] > base.per_client_energy_j[c]
+        # duty cycle is airtime geometry, not wattage
+        assert hot.duty_cycle[c] == pytest.approx(base.duty_cycle[c])
+
+
+# -- holdback flush: per-client heaps + tombstones ----------------------------
+
+
+def _frame(client, num):
+    return TaggedFrame(client=client, window=0, chunk_index=0,
+                       block_num=num, msg=None, wire_bytes=50)
+
+
+def test_per_client_flush_is_ordered_and_tombstones_globally():
+    medium = SharedMedium(seed=0, reorder_prob=1.0, max_reorder_lag=8)
+    stats = TransferStats()
+    released = []
+    for i in range(12):
+        released += medium.transmit(_frame(i % 2, i), stats)
+    mine = medium.flush(0)
+    assert all(f.client == 0 for f in mine)
+    # heap pops reproduce the timed release order: ascending transmission
+    assert [f.block_num for f in mine] == sorted(f.block_num for f in mine)
+    rest = medium.flush()
+    # tombstoned entries never release twice, nothing is lost
+    assert all(f.client == 1 for f in rest)
+    seen = sorted(f.block_num for f in released + mine + rest)
+    assert seen == list(range(12))
+    assert medium.flush() == [] and medium.flush(0) == []
+
+
+def test_flush_of_unknown_client_is_empty():
+    medium = SharedMedium(seed=0)
+    assert medium.flush(99) == []

@@ -4,12 +4,15 @@ import pytest
 from repro.analysis.statemachine import (
     ASSEMBLER,
     CLIENT,
+    SCHEDULER,
     SERVER,
     UPLINK,
     conformance_assembler,
+    conformance_scheduler,
     conformance_server,
     conformance_uplink,
     explore_round,
+    explore_scheduler,
     run_model_check,
 )
 
@@ -18,7 +21,7 @@ from repro.analysis.statemachine import (
 # Table sanity
 
 def test_tables_are_internally_consistent():
-    for machine in (CLIENT, SERVER, UPLINK, ASSEMBLER):
+    for machine in (CLIENT, SERVER, UPLINK, ASSEMBLER, SCHEDULER):
         assert machine.initial in machine.states
         assert machine.terminal <= machine.states
         for (s, _), s2 in machine.transitions.items():
@@ -97,6 +100,33 @@ def test_uplink_conformance_trace_is_declared():
     assert {"enqueue", "enqueue_poll", "frame_sent", "window_boundary",
             "ack", "nack", "poll", "crash", "resume", "expire",
             "budget_exhausted"} <= events
+
+
+# ---------------------------------------------------------------------------
+# The event-heap scheduler machine
+
+def test_scheduler_exploration_is_clean_and_covers_every_edge():
+    edges, violations = explore_scheduler(3)
+    assert violations == []
+    assert edges == set(SCHEDULER.transitions)
+
+
+def test_scheduler_exploration_respects_medium_exclusivity():
+    # the explorer only grants while nobody transmits, so no reachable
+    # state may hold two transmitters — a second grant edge from a busy
+    # state would surface as an exclusivity violation
+    edges, violations = explore_scheduler(2)
+    assert not any("exclusivity" in v for v in violations)
+    assert ("ready", "grant") in edges
+
+
+def test_scheduler_conformance_trace_is_declared():
+    trace = conformance_scheduler()
+    assert SCHEDULER.validate_trace(trace) == []
+    events = {e for _, e, _ in trace}
+    assert {"wake", "grant", "frame_sent", "window_gap", "window_open",
+            "feedback_wait", "feedback_ready", "finish", "crash",
+            "expire"} <= events
 
 
 # ---------------------------------------------------------------------------
